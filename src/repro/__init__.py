@@ -1,0 +1,2 @@
+"""repro: Multi-Processor AMP with lossy compression, at TPU-pod scale."""
+__version__ = "1.0.0"

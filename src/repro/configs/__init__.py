@@ -1,0 +1,21 @@
+"""Architecture registry: one module per assigned arch (+ the paper's CS setup)."""
+from .base import (ModelConfig, ShapeSpec, SHAPES, get_config, list_archs,
+                   register, shape_for)
+
+_LOADED = False
+
+_ARCH_MODULES = [
+    "rwkv6_3b", "gemma3_1b", "glm4_9b", "granite_3_8b", "yi_34b",
+    "whisper_small", "qwen3_moe_30b_a3b", "mixtral_8x7b",
+    "recurrentgemma_2b", "qwen2_vl_7b",
+]
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+    _LOADED = True

@@ -1,0 +1,171 @@
+"""Multi-processor AMP with lossy fusion compression (paper Sec. 3).
+
+Row-partitioned model: processor p holds A^p (M/P rows) and y^p. Per iteration
+
+    LC:  z_t^p = y^p - A^p x_t + (1/kappa) * mean(eta'_{t-1}) * z_{t-1}^p
+         f_t^p = x_t / P + (A^p)^T z_t^p
+    GC:  f_t = sum_p Q_t(f_t^p)        <- lossy fusion (midtread quantizer)
+         x_{t+1} = eta_t^Q(f_t),  denoiser variance sigma_hat_t^2 + P Delta^2/12
+
+The LC and GC stages are split exactly as in the paper so that an *online*
+rate controller (BT-MP-AMP, Sec. 3.3) can observe the current plug-in noise
+estimate sigma_hat_{t,D}^2 = sum_p ||z_t^p||^2 / M — which is available after
+LC — before choosing the quantizer for this iteration's fusion.
+
+This module is the *emulated* multi-processor solver: the processor axis is a
+leading array axis and fusion is a sum over it — bit-exact to the physical
+cluster algorithm (quantization included), independent of device count. The
+mesh/shard_map production version (fusion = compressed psum over the 'data'
+axis) lives in repro/core/compression.py + repro/launch/solver.py and is
+cross-checked against this one in tests.
+
+Rate accounting per iteration: analytic ECSQ entropy H_Q of the model message
+distribution, plus the empirical entropy of the realized symbol stream (and,
+in tests, exact rANS bitstream length).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .denoisers import BernoulliGauss, eta
+from .quantize import (dequantize_midtread, ecsq_entropy, message_mixture,
+                       quantize_midtread)
+
+__all__ = ["MPAMPConfig", "MPAMPResult", "mp_amp_solve", "split_problem",
+           "mp_local_step", "mp_fusion_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MPAMPConfig:
+    n_proc: int = 30
+    n_iter: int = 10
+
+
+@dataclasses.dataclass
+class MPAMPResult:
+    x: np.ndarray
+    mse: np.ndarray | None        # per-iteration MSE vs s0 (if s0 given)
+    sigma2_hat: np.ndarray        # plug-in sigma_t^2 estimates (post-LC)
+    rates_analytic: np.ndarray    # H_Q from the model mixture (bits/elem/proc)
+    rates_empirical: np.ndarray   # empirical entropy of realized symbols
+    deltas: np.ndarray            # quantizer bin sizes used (inf = lossless)
+
+    @property
+    def total_bits_analytic(self) -> float:
+        r = self.rates_analytic
+        return float(np.sum(r[np.isfinite(r)]))
+
+    @property
+    def total_bits_empirical(self) -> float:
+        r = self.rates_empirical
+        return float(np.sum(r[np.isfinite(r)]))
+
+
+def split_problem(a_mat: np.ndarray, y: np.ndarray, n_proc: int):
+    """Row-partition (A, y) across processors: (P, M/P, N), (P, M/P)."""
+    m, n = a_mat.shape
+    assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
+    mp = m // n_proc
+    return a_mat.reshape(n_proc, mp, n), y.reshape(n_proc, mp)
+
+
+@jax.jit
+def mp_local_step(x, z_p, onsager_coef, a_p, y_p):
+    """LC: residual update + per-processor message. Returns (z_new, f_p, s2)."""
+    n_proc = a_p.shape[0]
+    m = a_p.shape[0] * a_p.shape[1]
+    z_new = y_p - jnp.einsum("pmn,n->pm", a_p, x) + onsager_coef * z_p
+    f_p = x[None, :] / n_proc + jnp.einsum("pmn,pm->pn", a_p, z_new)
+    sigma2_hat = jnp.sum(z_new * z_new) / m
+    return z_new, f_p, sigma2_hat
+
+
+@partial(jax.jit, static_argnames=("prior",))
+def mp_fusion_step(f_p, sigma2_hat, delta, prior: BernoulliGauss, kappa):
+    """GC: quantize messages, fuse, denoise. Returns (x_new, onsager, q_syms)."""
+    n_proc = f_p.shape[0]
+    lossless = ~jnp.isfinite(delta)
+    safe_delta = jnp.where(lossless, 1.0, delta)
+    q = quantize_midtread(f_p, safe_delta)
+    f_q = jnp.where(lossless, f_p, dequantize_midtread(q, safe_delta))
+    f = jnp.sum(f_q, axis=0)
+
+    sigma_q2 = jnp.where(lossless, 0.0, safe_delta**2 / 12.0)
+    denoise_var = sigma2_hat + n_proc * sigma_q2
+
+    eta_fn = lambda v: eta(v, denoise_var, prior, xp=jnp)
+    x_new = eta_fn(f)
+    onsager_new = jax.grad(lambda v: jnp.sum(eta_fn(v)))(f).mean() / kappa
+    return x_new, onsager_new, q
+
+
+def _empirical_entropy(q: np.ndarray) -> float:
+    """Empirical entropy (bits/symbol) of the quantized index stream."""
+    _, counts = np.unique(q.astype(np.int64), return_counts=True)
+    p = counts / counts.sum()
+    return float(-(p * np.log2(p)).sum())
+
+
+def mp_amp_solve(y, a_mat, prior: BernoulliGauss, cfg: MPAMPConfig,
+                 delta_schedule, s0: np.ndarray | None = None,
+                 sigma2_for_model=None) -> MPAMPResult:
+    """Run MP-AMP with a per-iteration quantizer schedule.
+
+    delta_schedule: either a sequence of bin sizes (len n_iter; np.inf =>
+      lossless fusion at that iteration), or an online controller callable
+      ``delta_schedule(t, sigma2_hat) -> delta`` receiving this iteration's
+      post-LC plug-in estimate (BT-MP-AMP).
+    sigma2_for_model: optional per-iteration channel variances for the
+      *analytic* rate accounting (defaults to the online plug-in estimates).
+    """
+    a_p, y_p = split_problem(np.asarray(a_mat, np.float32), np.asarray(y, np.float32),
+                             cfg.n_proc)
+    a_p = jnp.asarray(a_p)
+    y_p = jnp.asarray(y_p)
+    n = a_p.shape[2]
+    m = a_p.shape[0] * a_p.shape[1]
+    kappa = m / n
+
+    x = jnp.zeros(n, jnp.float32)
+    z_p = jnp.zeros_like(y_p)
+    onsager = jnp.zeros(())
+
+    callable_sched = callable(delta_schedule)
+    mses, s2s, r_ana, r_emp, deltas_used = [], [], [], [], []
+    for t in range(cfg.n_iter):
+        z_p, f_p, s2 = mp_local_step(x, z_p, onsager, a_p, y_p)
+        s2_host = float(s2)
+        if callable_sched:
+            delta_t = float(delta_schedule(t, s2_host))
+        else:
+            delta_t = float(delta_schedule[t])
+        x, onsager, q = mp_fusion_step(f_p, s2, jnp.asarray(delta_t), prior, kappa)
+
+        s2s.append(s2_host)
+        deltas_used.append(delta_t)
+        if math.isfinite(delta_t):
+            model_s2 = (sigma2_for_model[t] if sigma2_for_model is not None
+                        else s2_host)
+            mix = message_mixture(prior, model_s2, cfg.n_proc)
+            r_ana.append(float(ecsq_entropy(delta_t, mix)[0]))
+            r_emp.append(_empirical_entropy(np.asarray(q)))
+        else:
+            r_ana.append(np.inf)
+            r_emp.append(np.inf)
+        if s0 is not None:
+            mses.append(float(np.mean((np.asarray(x) - s0) ** 2)))
+
+    return MPAMPResult(
+        x=np.asarray(x),
+        mse=np.asarray(mses) if s0 is not None else None,
+        sigma2_hat=np.asarray(s2s),
+        rates_analytic=np.asarray(r_ana),
+        rates_empirical=np.asarray(r_emp),
+        deltas=np.asarray(deltas_used),
+    )

@@ -1,0 +1,208 @@
+"""Coding-rate allocation across AMP iterations (paper Secs. 3.3-3.4).
+
+BT-MP-AMP (online back-tracking): at iteration t, given the plug-in estimate
+sigma_hat_{t,D}^2, find the largest quantizer MSE sigma_Q^2 such that the
+predicted next-iteration variance stays within a factor ``c_ratio`` of the
+offline centralized-SE value:
+
+    sigma_e^2 + mmse(sigma_hat_{t,D}^2 + P sigma_Q^2)/kappa
+        <= c_ratio * sigma_{t+1,C}^2,
+
+subject to rate(sigma_Q^2) <= r_max bits/element.
+
+DP-MP-AMP (offline optimal, eqs. 9-12): given a total budget R over T
+iterations discretized at dR (=0.1 in the paper), dynamic programming over
+the table sigma_D^2(s, t) = best variance using R^{(s)} bits in the first t
+iterations, with transition
+    sigma_D^2(s,t) = min_r f1(sigma_D^2(r, t-1), R^{(s-r+1)}).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .denoisers import BernoulliGauss, make_mmse_interp
+from .quantize import (delta_for_rate_ecsq, delta_for_sigma_q2, ecsq_entropy,
+                       message_mixture)
+from .rate_distortion import RDModel
+from .state_evolution import CSProblem, se_trajectory
+
+__all__ = ["BTController", "bt_schedule_offline", "dp_allocate", "DPResult"]
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _rate_for_sigma_q2(sigma_q2: float, sigma_t2: float, prob: CSProblem,
+                       n_proc: int, rate_model: str, rd: RDModel | None) -> float:
+    """Bits/element needed for per-message quantizer MSE sigma_q2."""
+    if rate_model == "rd":
+        return rd.rate_for_msg_distortion(sigma_q2, sigma_t2, n_proc)
+    mix = message_mixture(prob.prior, sigma_t2, n_proc)
+    return float(ecsq_entropy(delta_for_sigma_q2(sigma_q2), mix)[0])
+
+
+def _sigma_q2_for_rate(rate: float, sigma_t2: float, prob: CSProblem,
+                       n_proc: int, rate_model: str, rd: RDModel | None) -> float:
+    if rate_model == "rd":
+        return float(rd.distortion_msg(rate, sigma_t2, n_proc))
+    mix = message_mixture(prob.prior, sigma_t2, n_proc)
+    return delta_for_rate_ecsq(rate, mix) ** 2 / 12.0
+
+
+# ---------------------------------------------------------------------------
+# BT-MP-AMP
+# ---------------------------------------------------------------------------
+
+class BTController:
+    """Online back-tracking rate controller (paper Sec. 3.3).
+
+    Usable directly as the ``delta_schedule`` callable of mp_amp_solve.
+    Records per-iteration (rate, sigma_q2, delta) decisions.
+    """
+
+    def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
+                 c_ratio: float = 1.05, r_max: float = 6.0,
+                 rate_model: str = "ecsq", rd: RDModel | None = None,
+                 mmse_fn=None):
+        self.prob = prob
+        self.n_proc = n_proc
+        self.c_ratio = c_ratio
+        self.r_max = r_max
+        self.rate_model = rate_model
+        self.rd = rd if (rd is not None or rate_model != "rd") else RDModel(prob.prior)
+        self.mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
+        # offline centralized SE reference sigma_{t,C}^2, t = 0..n_iter
+        self.sigma2_c = se_trajectory(prob, n_iter, mmse_fn=self.mmse_fn)
+        self.rates: list[float] = []
+        self.sigma_q2s: list[float] = []
+
+    def _predict_next(self, sigma2_d: float, sigma_q2: float) -> float:
+        eff = sigma2_d + self.n_proc * sigma_q2
+        return self.prob.sigma_e2 + float(self.mmse_fn(eff)) / self.prob.kappa
+
+    def __call__(self, t: int, sigma2_hat: float) -> float:
+        prob, p = self.prob, self.n_proc
+        target = self.c_ratio * self.sigma2_c[t + 1]
+        # feasibility at zero quantization noise (plug-in may exceed SE ref)
+        base = self._predict_next(sigma2_hat, 0.0)
+        if base >= target:
+            # cannot meet the ratio even losslessly -> spend r_max
+            rate = self.r_max
+            sq2 = _sigma_q2_for_rate(rate, sigma2_hat, prob, p,
+                                     self.rate_model, self.rd)
+        else:
+            # largest sigma_Q^2 with predicted variance <= target (bisection;
+            # _predict_next is increasing in sigma_Q^2)
+            lo, hi = 0.0, sigma2_hat / p + 1e-12
+            while self._predict_next(sigma2_hat, hi) < target:
+                hi *= 4.0
+                if hi > 1e6:
+                    break
+            for _ in range(80):
+                mid = 0.5 * (lo + hi)
+                if self._predict_next(sigma2_hat, mid) <= target:
+                    lo = mid
+                else:
+                    hi = mid
+            sq2 = lo
+            rate = _rate_for_sigma_q2(sq2, sigma2_hat, prob, p,
+                                      self.rate_model, self.rd)
+            if rate > self.r_max:
+                rate = self.r_max
+                sq2 = _sigma_q2_for_rate(rate, sigma2_hat, prob, p,
+                                         self.rate_model, self.rd)
+        self.rates.append(rate)
+        self.sigma_q2s.append(sq2)
+        return delta_for_sigma_q2(sq2)
+
+
+def bt_schedule_offline(prob: CSProblem, n_proc: int, n_iter: int,
+                        c_ratio: float = 1.05, r_max: float = 6.0,
+                        rate_model: str = "rd", rd: RDModel | None = None,
+                        mmse_fn=None):
+    """Pure-SE BT prediction (no data): returns (rates, sigma2_D trajectory).
+
+    This is the paper's "BT-MP-AMP (RD prediction)" row: run the BT rule on
+    the quantized SE recursion itself, using the RD function as rate model.
+    """
+    ctrl = BTController(prob, n_proc, n_iter, c_ratio, r_max, rate_model, rd,
+                        mmse_fn)
+    sigma2_d = [prob.sigma0_2]
+    for t in range(n_iter):
+        ctrl(t, sigma2_d[-1])
+        sigma2_d.append(ctrl._predict_next(sigma2_d[-1], ctrl.sigma_q2s[-1]))
+    return np.asarray(ctrl.rates), np.asarray(sigma2_d)
+
+
+# ---------------------------------------------------------------------------
+# DP-MP-AMP
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DPResult:
+    rates: np.ndarray          # optimal R_t, t = 1..T (bits/element)
+    sigma2_d: np.ndarray       # predicted variance trajectory (T+1,)
+    sigma2_table: np.ndarray   # full DP table Sigma (S, T)
+    r_grid: np.ndarray         # R^{(s)} grid
+
+
+def dp_allocate(prob: CSProblem, n_proc: int, n_iter: int, r_total: float,
+                dr: float = 0.1, rd: RDModel | None = None,
+                mmse_fn=None) -> DPResult:
+    """Optimal rate allocation by dynamic programming (paper eqs. 10-12)."""
+    rd = rd or RDModel(prob.prior)
+    mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
+    p = n_proc
+    s_count = int(round(r_total / dr)) + 1
+    r_grid = np.arange(s_count) * dr  # R^{(s)}, s = 1..S (0-indexed)
+
+    def f1_matrix(v_prev: np.ndarray, rates: np.ndarray) -> np.ndarray:
+        """f1(v_prev[r], rates[k]) for all (r, k): (S, S) array."""
+        sigma_p = np.sqrt(p * v_prev)[:, None]          # (S, 1)
+        d_g = rd.distortion_g(rates[None, :], sigma_p)  # (S, S)
+        eff = v_prev[:, None] + d_g / p                 # + P * sigma_Q^2
+        return prob.sigma_e2 + mmse_fn(eff) / prob.kappa
+
+    big = np.inf
+    sigma_tab = np.full((s_count, n_iter), big)
+    choice = np.zeros((s_count, n_iter), dtype=np.int64)
+
+    # t = 1 (column 0): all budget R^{(s)} spent here
+    v0 = np.full(s_count, prob.sigma0_2)
+    sigma_tab[:, 0] = f1_matrix(v0[:1], r_grid)[0]
+    choice[:, 0] = np.arange(s_count)
+
+    for t in range(1, n_iter):
+        v_prev = sigma_tab[:, t - 1]                    # (S,) indexed by r
+        m = f1_matrix(v_prev, r_grid)                   # m[r, k] = f1(prev_r, k*dr)
+        # sigma(s, t) = min over r <= s of m[r, s - r]
+        r_idx = np.arange(s_count)[:, None]             # (S, 1)
+        s_idx = np.arange(s_count)[None, :]             # (1, S)
+        k_idx = s_idx - r_idx
+        valid = k_idx >= 0
+        vals = np.where(valid, m[r_idx, np.clip(k_idx, 0, s_count - 1)], big)
+        best_r = np.argmin(vals, axis=0)                # (S,)
+        sigma_tab[:, t] = vals[best_r, np.arange(s_count)]
+        choice[:, t] = np.arange(s_count) - best_r      # rate index spent at t
+
+    # backtrack from (S-1, T-1)
+    rates = np.zeros(n_iter)
+    s = s_count - 1
+    for t in range(n_iter - 1, -1, -1):
+        k = choice[s, t]
+        rates[t] = r_grid[k]
+        s = s - k
+
+    # predicted trajectory under the optimal schedule
+    sigma2_d = [prob.sigma0_2]
+    for t in range(n_iter):
+        sq2 = float(rd.distortion_msg(rates[t], sigma2_d[-1], p))
+        eff = sigma2_d[-1] + p * sq2
+        sigma2_d.append(prob.sigma_e2 + float(mmse_fn(eff)) / prob.kappa)
+
+    return DPResult(rates=rates, sigma2_d=np.asarray(sigma2_d),
+                    sigma2_table=sigma_tab, r_grid=r_grid)

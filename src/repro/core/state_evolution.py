@@ -1,0 +1,113 @@
+"""State evolution (SE) for centralized and quantized multi-processor AMP.
+
+Centralized SE (paper eq. 4):
+    sigma_{t+1}^2 = sigma_e^2 + (1/kappa) * mmse(sigma_t^2)
+with  sigma_0^2 = sigma_e^2 + E[S0^2]/kappa.
+
+Quantized SE (paper eq. 8): the fusion sum of P independently-quantized
+messages adds ~N(0, P*sigma_Q^2), so the denoiser sees effective variance
+sigma_t^2 + P*sigma_Q^2:
+    sigma_{t+1}^2 = sigma_e^2 + (1/kappa) * mmse(sigma_t^2 + P*sigma_Q^2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .denoisers import BernoulliGauss, mmse
+
+__all__ = ["CSProblem", "se_trajectory", "se_trajectory_quantized", "sdr",
+           "steady_state_iters", "sigma_e2_for_snr", "PAPER_T"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CSProblem:
+    """Compressed-sensing problem spec (paper Sec. 4): y = A s0 + e."""
+
+    n: int = 10_000
+    m: int = 3_000
+    prior: BernoulliGauss = dataclasses.field(default_factory=BernoulliGauss)
+    snr_db: float = 20.0
+
+    @property
+    def kappa(self) -> float:
+        return self.m / self.n
+
+    @property
+    def rho(self) -> float:
+        """E[||s0||^2]/(N*kappa); equals eps/kappa when mu_s=0, sigma_s=1."""
+        return self.prior.second_moment / self.kappa
+
+    @property
+    def sigma_e2(self) -> float:
+        return sigma_e2_for_snr(self.snr_db, self.rho)
+
+    @property
+    def sigma0_2(self) -> float:
+        """Initial SE variance (x_0 = 0)."""
+        return self.sigma_e2 + self.prior.second_moment / self.kappa
+
+
+def sigma_e2_for_snr(snr_db: float, rho: float) -> float:
+    """Invert SNR = 10 log10(rho / sigma_e^2)."""
+    return rho / (10.0 ** (snr_db / 10.0))
+
+
+def sdr(sigma_t2, prob: CSProblem) -> np.ndarray:
+    """Signal-to-distortion ratio SDR(t) = 10 log10(rho / (sigma_t^2 - sigma_e^2))."""
+    sigma_t2 = np.asarray(sigma_t2, dtype=np.float64)
+    return 10.0 * np.log10(prob.rho / np.maximum(sigma_t2 - prob.sigma_e2, 1e-300))
+
+
+def se_trajectory(prob: CSProblem, n_iter: int, mmse_fn=None) -> np.ndarray:
+    """Centralized SE: returns [sigma_0^2, ..., sigma_T^2] (length n_iter+1)."""
+    if mmse_fn is None:
+        mmse_fn = lambda v: mmse(v, prob.prior)
+    out = [prob.sigma0_2]
+    for _ in range(n_iter):
+        out.append(prob.sigma_e2 + float(mmse_fn(np.asarray([out[-1]]))[0]) / prob.kappa)
+    return np.asarray(out)
+
+
+def se_trajectory_quantized(prob: CSProblem, sigma_q2: np.ndarray, n_proc: int,
+                            mmse_fn=None) -> np.ndarray:
+    """Quantized SE (eq. 8) for a per-iteration quantizer-MSE schedule.
+
+    ``sigma_q2[t]`` is the per-processor quantization MSE applied at iteration
+    t (0-indexed); the fusion sum injects n_proc * sigma_q2[t].
+    """
+    if mmse_fn is None:
+        mmse_fn = lambda v: mmse(v, prob.prior)
+    sigma_q2 = np.asarray(sigma_q2, dtype=np.float64)
+    out = [prob.sigma0_2]
+    for t in range(len(sigma_q2)):
+        eff = out[-1] + n_proc * sigma_q2[t]
+        out.append(prob.sigma_e2 + float(mmse_fn(np.asarray([eff]))[0]) / prob.kappa)
+    return np.asarray(out)
+
+
+# Steady-state horizons as stated in the paper (Sec. 4, Fig. 1). Our SE with
+# the corrected MMSE quadrature reads off 8/10/18 at a 0.15 dB threshold —
+# the eps=0.1 curve's last ~2 iterations gain <0.15 dB each, a visual-read
+# ambiguity; Table-1 reproduction adopts the paper's own T values.
+PAPER_T = {0.03: 8, 0.05: 10, 0.10: 20}
+
+
+def steady_state_iters(prob: CSProblem, tol_db: float = 0.15, max_iter: int = 200,
+                       mmse_fn=None) -> int:
+    """Iterations until the SDR gain per iteration drops below ``tol_db``."""
+    if mmse_fn is None:
+        mmse_fn = lambda v: mmse(v, prob.prior)
+    prev = prob.sigma0_2
+    prev_sdr = sdr(prev, prob)
+    for t in range(1, max_iter + 1):
+        cur = prob.sigma_e2 + float(mmse_fn(np.asarray([prev]))[0]) / prob.kappa
+        cur_sdr = sdr(cur, prob)
+        if cur_sdr - prev_sdr < tol_db:
+            # t-1 -> t gained < tol, so iteration t is the first one inside
+            # the plateau; the paper counts it ("steady state after T itns").
+            return t + 1 if t + 1 <= max_iter else t
+        prev, prev_sdr = cur, cur_sdr
+    return max_iter

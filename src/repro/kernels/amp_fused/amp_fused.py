@@ -1,0 +1,92 @@
+"""Pallas TPU kernels for the AMP local-computation (LC) step.
+
+The LC step is two matvecs against the same sensing-matrix shard A^p:
+    z' = y - A x + b z          (contraction over N)
+    f  = x/P + A^T z'           (contraction over M)
+
+TPU adaptation (DESIGN.md §2): the CS literature runs this as two BLAS calls
+with A read from HBM twice. Here each kernel streams A through VMEM in
+MXU-aligned (128 x 512) tiles and fuses the residual elementwise work
+(y - . + b*z, x/P + .) into the same pass, so A is read exactly twice per
+iteration (information-theoretic minimum for the two contraction orders) and
+z'/f never round-trip to HBM in between tiles.
+
+Grid conventions: the reduction axis is the *last* grid dim (sequential on
+TPU), accumulating into the output tile with an init at step 0.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM = 128   # rows of A per tile (M axis)
+BN = 512   # cols of A per tile (N axis)
+
+
+def _z_kernel(ons_ref, a_ref, x_ref, y_ref, z_ref, o_ref):
+    """o[m] = y[m] - sum_n A[m,n] x[n] + onsager * z[m]; grid (M/BM, N/BN)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = y_ref[...] + ons_ref[0] * z_ref[...]
+
+    a = a_ref[...]
+    x = x_ref[...]
+    o_ref[...] -= jax.lax.dot_general(
+        a, x[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+
+
+def _f_kernel(a_ref, z_ref, x_ref, o_ref, *, inv_p):
+    """o[n] = x[n]/P + sum_m A[m,n] z'[m]; grid (N/BN, M/BM)."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = inv_p * x_ref[...]
+
+    a = a_ref[...]          # (BM, BN) tile
+    z = z_ref[...]          # (BM,)
+    o_ref[...] += jax.lax.dot_general(
+        z[None, :], a, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]
+
+
+@partial(jax.jit, static_argnames=("n_proc", "interpret"))
+def amp_local_pallas(a, x, y, z, onsager, n_proc: int, interpret: bool = False):
+    """Fused LC step. a (M, N) with M % BM == 0, N % BN == 0 (ops.py pads)."""
+    m, n = a.shape
+    ons = jnp.asarray(onsager, jnp.float32).reshape(1)
+
+    z_new = pl.pallas_call(
+        _z_kernel,
+        grid=(m // BM, n // BN),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+            pl.BlockSpec((BN,), lambda i, j: (j,)),
+            pl.BlockSpec((BM,), lambda i, j: (i,)),
+            pl.BlockSpec((BM,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BM,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(ons, a, x, y, z)
+
+    f = pl.pallas_call(
+        partial(_f_kernel, inv_p=1.0 / n_proc),
+        grid=(n // BN, m // BM),
+        in_specs=[
+            pl.BlockSpec((BM, BN), lambda i, j: (j, i)),
+            pl.BlockSpec((BM,), lambda i, j: (j,)),
+            pl.BlockSpec((BN,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BN,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(a, z_new, x)
+    return z_new, f

@@ -1,0 +1,29 @@
+"""Wrapper for the fused AMP LC kernel: padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .amp_fused import BM, BN, amp_local_pallas
+from .ref import amp_local_ref
+
+__all__ = ["amp_local_step"]
+
+
+def amp_local_step(a, x, y, z, onsager, n_proc: int,
+                   use_pallas: bool | None = None, interpret: bool = False):
+    """Fused z'/f computation for one processor's LC step (padded+dispatched)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return amp_local_ref(a, x, y, z, onsager, n_proc)
+    m, n = a.shape
+    pm, pn = (-m) % BM, (-n) % BN
+    ap = jnp.pad(a, ((0, pm), (0, pn)))
+    xp = jnp.pad(x, (0, pn))
+    yp = jnp.pad(y, (0, pm))
+    zp = jnp.pad(z, (0, pm))
+    z_new, f = amp_local_pallas(ap, xp, yp, zp, onsager, n_proc,
+                                interpret=interpret)
+    # padded x rows contribute x/P to padded f entries only; slice them away
+    return z_new[:m], f[:n]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused AMP local-computation step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def amp_local_ref(a, x, y, z, onsager, n_proc: int):
+    """Paper Sec. 3.1 LC step for one processor:
+
+        z' = y - A x + onsager * z
+        f  = x / P + A^T z'
+
+    a: (M, N); x: (N,); y, z: (M,). Returns (z', f)."""
+    z_new = y - a @ x + onsager * z
+    f = x / n_proc + a.T @ z_new
+    return z_new, f

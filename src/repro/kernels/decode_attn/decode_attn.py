@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: GQA decode attention (flash-decode).
+
+One query token attends over a length-S KV cache. The cache is streamed
+through VMEM in (BLOCK_S x Dh) tiles along the sequence; the kernel keeps
+running (max, sum, acc) flash accumulators in VMEM scratch, so the scores
+never touch HBM — on the jnp path they are materialized per block, which is
+exactly the decode-bandwidth overhead this kernel removes.
+
+Grid: (B * KV, S / BLOCK_S); the sequence dim is the fastest (sequential on
+TPU), carrying the accumulators across blocks; the (m, l, acc) scratch is
+re-initialized whenever the sequence index returns to 0.
+
+Block sizes: BLOCK_S = 512 rows of cache; with Dh <= 256 the K and V tiles
+are <= 512 * 256 * 2B = 256 KB each — comfortably inside VMEM with
+double-buffering.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_S = 512
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, window, block_s):
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32)            # (G, Dh)
+    k = k_ref[0].astype(jnp.float32)            # (block_s, Dh)
+    v = v_ref[0].astype(jnp.float32)            # (block_s, Dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    t = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+    ok = t <= pos
+    if window > 0:
+        ok &= t > pos - window
+    s = jnp.where(ok, s, -jnp.inf)              # (G, block_s)
+
+    m_prev = m_ref[...]                         # (G,)
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(ok, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("window", "interpret"))
+def decode_attn_pallas(q, k_cache, v_cache, pos, window: int = 0,
+                       interpret: bool = False):
+    """q (B, H, Dh); caches (B, S, KV, Dh) with S % BLOCK_S == 0."""
+    b, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = q.reshape(b, kv, g, dh).reshape(b * kv, g, dh)
+    kc = k_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, dh)
+    vc = v_cache.transpose(0, 2, 1, 3).reshape(b * kv, s, dh)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        partial(_kernel, scale=scale, window=window, block_s=BLOCK_S),
+        grid=(b * kv, s // BLOCK_S),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1, g, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, BLOCK_S, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, BLOCK_S, dh), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, g, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, kc, vc)
+    return out.reshape(b, h, dh)

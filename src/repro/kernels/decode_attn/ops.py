@@ -1,0 +1,27 @@
+"""Wrapper for flash-decode attention: padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attn import BLOCK_S, decode_attn_pallas
+from .ref import decode_attn_ref
+
+__all__ = ["decode_attention"]
+
+
+def decode_attention(q, k_cache, v_cache, pos, window: int = 0,
+                     use_pallas: bool | None = None, interpret: bool = False):
+    """q (B,H,Dh) vs caches (B,S,KV,Dh) -> (B,H,Dh)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return decode_attn_ref(q, k_cache, v_cache, pos, window)
+    s = k_cache.shape[1]
+    pad = (-s) % BLOCK_S
+    if pad:
+        # padded rows are masked out by the position check (t <= pos < s)
+        padf = lambda c: jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_cache, v_cache = padf(k_cache), padf(v_cache)
+    return decode_attn_pallas(q, k_cache, v_cache, pos, window=window,
+                              interpret=interpret)

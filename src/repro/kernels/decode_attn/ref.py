@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for GQA decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q, k_cache, v_cache, pos, window: int = 0):
+    """q (B, H, Dh); caches (B, S, KV, Dh); pos () int. Returns (B, H, Dh).
+
+    Causal mask: positions <= pos (and > pos - window if window > 0)."""
+    b, h, dh = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    s = k_cache.shape[1]
+    qg = q.reshape(b, kv, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg,
+                        k_cache.astype(jnp.float32)) / math.sqrt(dh)
+    t = jnp.arange(s)
+    ok = t <= pos
+    if window > 0:
+        ok &= t > pos - window
+    scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh)

@@ -1,0 +1,47 @@
+"""Public wrapper for the quantize kernel: padding + CPU/TPU dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import BLOCK, N_TILE, TILE_R, dequantize_pallas, quantize_pallas
+from .ref import dequantize_ref, quantize_ref
+
+__all__ = ["quantize", "dequantize", "BLOCK"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2(x, tr, tn):
+    r, n = x.shape
+    pr, pn = (-r) % tr, (-n) % tn
+    if pr or pn:
+        x = jnp.pad(x, ((0, pr), (0, pn)))
+    return x, (r, n)
+
+
+def quantize(x, qmax: int = 127, use_pallas: bool | None = None,
+             interpret: bool = False):
+    """Block-quantize a 2D array. Returns (q int8, scale bf16, orig shape)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    xp, orig = _pad2(x, TILE_R, N_TILE)
+    if use_pallas:
+        q, s = quantize_pallas(xp, qmax=qmax, interpret=interpret)
+    else:
+        q, s = quantize_ref(xp, qmax, BLOCK)
+    return q, s, orig
+
+
+def dequantize(q, scale, orig, use_pallas: bool | None = None,
+               interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        out = dequantize_pallas(q, scale, interpret=interpret)
+    else:
+        out = dequantize_ref(q, scale, BLOCK)
+    r, n = orig
+    return out[:r, :n]

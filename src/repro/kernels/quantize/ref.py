@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused block-quantize kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, qmax: int, block: int):
+    """x (R, N) with N % block == 0 -> (q int8 (R, N), scale bf16 (R, N/block)).
+
+    Matches core.compression.quantize_blocks numerics (bf16-rounded scale
+    with the 1.004 no-clip nudge).
+    """
+    r, n = x.shape
+    xb = x.astype(jnp.float32).reshape(r, n // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    delta = (jnp.maximum(amax / qmax, 1e-30) * 1.004)
+    delta = delta.astype(jnp.bfloat16).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xb / delta), -qmax, qmax).astype(jnp.int8)
+    return q.reshape(r, n), delta[..., 0].astype(jnp.bfloat16)
+
+
+def dequantize_ref(q, scale, block: int):
+    r, n = q.shape
+    qb = q.reshape(r, n // block, block).astype(jnp.float32)
+    return (qb * scale.astype(jnp.float32)[..., None]).reshape(r, n)

@@ -1,0 +1,27 @@
+"""Wrapper for the WKV6 kernel: padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import wkv_chunked
+from .wkv6 import CHUNK, wkv6_pallas
+
+__all__ = ["wkv6"]
+
+
+def wkv6(r, k, v, logw, u, use_pallas: bool | None = None,
+         interpret: bool = False):
+    """WKV6 sequence mix (zero initial state). Returns y (B,T,H,Dh) fp32."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        y, _ = wkv_chunked(r, k, v, logw, u)
+        return y
+    b, t, h, dh = r.shape
+    pad = (-t) % CHUNK
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, logw = padf(r), padf(k), padf(v), padf(logw)
+    y = wkv6_pallas(r, k, v, logw, u, interpret=interpret)
+    return y[:, :t]

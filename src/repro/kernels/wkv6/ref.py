@@ -1,0 +1,2 @@
+"""Oracle for the WKV6 kernel = the rwkv6 module's scan reference."""
+from repro.models.rwkv6 import wkv_chunked, wkv_scan_ref  # noqa: F401

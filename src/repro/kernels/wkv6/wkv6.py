@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: RWKV-6 WKV recurrence (chunked linear attention).
+
+TPU adaptation of the Finch CUDA kernel (DESIGN.md §2): instead of one
+thread-block per (batch, head) running a serial loop with warp-level
+parallelism over channels, the TPU kernel processes the sequence in chunks
+of 32 steps held in VMEM; the intra-chunk contribution is an MXU matmul in
+the decay-rebased basis (r' = r e^{l}, k' = k e^{-l}) and the (Dh x Dh)
+recurrent state lives in VMEM scratch across the sequential chunk grid.
+
+Grid: (B*H, T/CHUNK) — chunk axis fastest (sequential), state scratch
+carried across it and re-initialized at chunk 0. Per-step log-decay is
+assumed clamped to >= -2 by the caller (rwkv6._time_mix), which bounds the
+rebased factors to e^{+-64} — inside fp32 range.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 32
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_ref):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref[...])
+
+    r = r_ref[0].astype(jnp.float32)       # (C, Dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)     # per-step log decay (C, Dh)
+    u = u_ref[0].astype(jnp.float32)       # (1, Dh) bonus
+
+    l_inc = jnp.cumsum(lw, axis=0)
+    l_exc = l_inc - lw
+    r_resc = r * jnp.exp(l_exc)
+    k_resc = k * jnp.exp(-l_inc)
+    l_tot = l_inc[-1]                      # (Dh,)
+
+    cdim = r.shape[0]
+    a_mat = jax.lax.dot_general(r_resc, k_resc, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (cdim, cdim), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (cdim, cdim), 1)
+    a_mat = jnp.where(tri, a_mat, 0.0)
+    diag = jnp.sum(r * u * k, axis=1)      # u-bonus for j == t
+    y = jax.lax.dot_general(a_mat, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y += diag[:, None] * v
+    # inter-chunk: r' sees the carried state
+    y += jax.lax.dot_general(r_resc, s_ref[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S <- diag(e^{l_tot}) S + sum_t (k'_t e^{l_tot}) v_t^T
+    k_fold = k_resc * jnp.exp(l_tot)[None, :]
+    s_new = jnp.exp(l_tot)[:, None] * s_ref[...] + jax.lax.dot_general(
+        k_fold, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_ref[...] = s_new
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def wkv6_pallas(r, k, v, logw, u, interpret: bool = False):
+    """r/k/v/logw (B, T, H, Dh) with T % CHUNK == 0; u (H, Dh).
+
+    Returns y (B, T, H, Dh) fp32. (State output handled by the ops wrapper
+    via a trailing identity chunk when needed.)"""
+    b, t, h, dh = r.shape
+    bh = b * h
+    resh = lambda a: a.transpose(0, 2, 1, 3).reshape(bh, t, dh)
+    rr, kk, vv, lw = resh(r), resh(k), resh(v), resh(logw)
+    uu = jnp.broadcast_to(u[None], (b, h, dh)).reshape(bh, 1, dh)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=(bh, t // CHUNK),
+        in_specs=[
+            pl.BlockSpec((1, CHUNK, dh), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, CHUNK, dh), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, CHUNK, dh), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, CHUNK, dh), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, 1, dh), lambda i, c: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, CHUNK, dh), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, dh), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, lw, uu)
+    return y.reshape(b, h, t, dh).transpose(0, 2, 1, 3)

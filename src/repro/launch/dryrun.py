@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+512 placeholder host devices stand in for 2 TPU v5e pods; the compile proves
+the sharding config is coherent end-to-end (no sharding mismatches, no
+unsupported collectives, memory fits). Per cell we record:
+
+  * compiled.memory_analysis()  — per-device argument/output/temp bytes
+  * compiled.cost_analysis()    — per-device HLO FLOPs and bytes accessed
+  * the collective wire bytes parsed from the optimized (post-SPMD) HLO,
+    with ring-model factors: all-reduce 2(n-1)/n, all-gather / reduce-scatter
+    / all-to-all (n-1)/n, collective-permute 1 — shapes in SPMD HLO are
+    already per-partition, so these are per-device wire bytes.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import get_config, list_archs, shape_for, SHAPES
+from ..configs.base import ModelConfig, ShapeSpec
+from .mesh import make_production_mesh
+from .steps import TrainStepConfig, build_serve_step, build_train_step
+
+# long_500k runs only for sub-quadratic-attention families (DESIGN.md §5)
+LONG_OK = {"rwkv6-3b", "recurrentgemma-2b", "gemma3-1b", "mixtral-8x7b"}
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "s4": 0.5, "u4": 0.5}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*) = (\([^)]*\)|\S+) (all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|pred)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-kind {count, result_bytes, wire_bytes} from post-SPMD HLO."""
+    out: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, result_type, kind, _ = m.groups()
+        res_bytes = _type_bytes(result_type)
+        # operand types appear inside the call parens
+        paren = line[m.end():]
+        op_bytes = _type_bytes(paren.split(", replica_groups")[0]
+                               .split(", channel_id")[0])
+        gm = _GROUPS_RE.search(line)
+        n = len(gm.group(1).split(",")) if gm else 0
+        eff = (n - 1) / n if n > 1 else 1.0
+        if kind == "all-reduce":
+            wire = 2.0 * res_bytes * eff
+        elif kind == "all-gather":
+            wire = res_bytes * eff
+        elif kind == "reduce-scatter":
+            wire = op_bytes * eff
+        elif kind == "all-to-all":
+            wire = op_bytes * eff
+        else:  # collective-permute
+            wire = res_bytes
+        d = out.setdefault(kind, {"count": 0, "result_bytes": 0.0,
+                                  "wire_bytes": 0.0})
+        d["count"] += 1
+        d["result_bytes"] += res_bytes
+        d["wire_bytes"] += wire
+    return out
+
+
+def cell_config(cfg: ModelConfig, shape: ShapeSpec) -> TrainStepConfig:
+    mb = 8 if shape.kind == "train" else 1
+    return TrainStepConfig(microbatches=mb, moe_groups=64)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             compression: str = "default", pad_heads: int = 0,
+             scores_bf16: bool = False, strategy: str = "tp",
+             microbatches: int | None = None, q_chunk: int = 0) -> dict:
+    cfg = get_config(arch)
+    if pad_heads:
+        cfg = cfg.padded_heads(pad_heads)
+    if scores_bf16:
+        cfg = dataclasses_replace(cfg, scores_bf16=True)
+    if q_chunk:
+        cfg = dataclasses_replace(cfg, attn_q_chunk=q_chunk)
+    shape = shape_for(shape_name)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "compression": compression, "pad_heads": pad_heads,
+                 "scores_bf16": scores_bf16, "strategy": strategy,
+                 "ok": False}
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        rec.update(skipped=True,
+                   reason="full-attention arch; long_500k skipped per DESIGN.md §5")
+        return rec
+    multi = mesh_kind == "pod2"
+    n_dev = 512 if multi else 256
+    mesh = make_production_mesh(multi_pod=multi) if multi else None
+    if mesh is None:
+        from jax.sharding import AxisType
+        mesh = jax.make_mesh((16, 16), ("data", "model"),
+                             devices=jax.devices()[:256],
+                             axis_types=(AxisType.Auto,) * 2)
+
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            bits = {"default": 8 if multi else None, "none": None,
+                    "int8": 8, "int4": 4}[compression]
+            tcfg = cell_config(cfg, shape)
+            mb = microbatches
+            if mb is None:
+                # FSDP shards the batch over the whole mesh and multi-pod
+                # leaves <= 8 samples/device: microbatching is pointless
+                # there (and the grad-accum scan inside the manual-pod
+                # shard_map trips an XLA partitioner CHECK at 512 devices —
+                # see EXPERIMENTS.md §Dry-run notes).
+                mb = 1 if (strategy == "fsdp" or multi) else tcfg.microbatches
+            tcfg = dataclasses_replace(tcfg, compression_bits=bits,
+                                       strategy=strategy, microbatches=mb)
+            fn, shardings, abstract = build_train_step(cfg, mesh, shape, tcfg)
+            args = (abstract["params"], abstract["opt_state"],
+                    abstract["tokens"], abstract["labels"], abstract["aux"])
+            in_sh = (shardings["params"], shardings["opt_state"],
+                     shardings["tokens"], shardings["labels"], shardings["aux"])
+            out_sh = (shardings["params"], shardings["opt_state"],
+                      _replicated_tree(mesh))
+            # donate params/opt state so memory_analysis reflects the real
+            # training peak (outputs alias arguments, as in the Trainer)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(*args)
+        else:
+            fn, shardings, abstract = build_serve_step(cfg, mesh, shape)
+            if shape.kind == "prefill":
+                args = (abstract["params"], abstract["tokens"], abstract["aux"])
+                in_sh = (shardings["params"], shardings["tokens"],
+                         shardings["aux"])
+            else:
+                args = (abstract["params"], abstract["tokens"],
+                        abstract["state"], abstract["pos"])
+                in_sh = (shardings["params"], shardings["tokens"],
+                         shardings["state"], shardings["pos"])
+            jitted = jax.jit(fn, in_shardings=in_sh)
+            lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        ca = compiled.cost_analysis() or {}
+        rec["flops_per_device"] = float(ca.get("flops", 0.0))
+        rec["bytes_accessed_per_device"] = float(ca.get("bytes accessed", 0.0))
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        txt = compiled.as_text()
+        from .hlo_analysis import analyze_hlo
+        stats = analyze_hlo(txt, top_k=12)
+        rec["collectives"] = stats.collectives
+        rec["wire_bytes_per_device"] = stats.wire_bytes
+        rec["wire_bytes_crosspod"] = stats.wire_bytes_crosspod
+        rec["dot_flops_per_device"] = stats.dot_flops
+        rec["hbm_bytes_per_device"] = stats.bytes_accessed
+        rec["while_trips"] = stats.while_trips[:16]
+        rec["top_bytes"] = [
+            {"bytes": b, "kind": k, "mult": m, "line": ln}
+            for b, k, m, ln in stats.top_bytes]
+        rec["n_devices"] = n_dev
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def dataclasses_replace(obj, **kw):
+    import dataclasses
+    return dataclasses.replace(obj, **kw)
+
+
+def _replicated_tree(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+    rep = NamedSharding(mesh, PartitionSpec())
+    return {"grad_norm": rep, "clip": rep, "loss": rep, "quant_noise": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", type=str, default="pod1",
+                    choices=["pod1", "pod2", "both"])
+    ap.add_argument("--compression", type=str, default="default",
+                    choices=["default", "none", "int8", "int4"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--pad-heads", type=int, default=0)
+    ap.add_argument("--scores-bf16", action="store_true")
+    ap.add_argument("--strategy", type=str, default="tp",
+                    choices=["tp", "tp_sp", "fsdp"])
+    ap.add_argument("--tag", type=str, default="")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--q-chunk", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, args.compression,
+                           pad_heads=args.pad_heads,
+                           scores_bf16=args.scores_bf16,
+                           strategy=args.strategy,
+                           microbatches=args.microbatches,
+                           q_chunk=args.q_chunk)
+            tag = f"{arch}_{shape}_{mk}" + (
+                f"_{args.compression}" if args.compression != "default" else "") + (
+                f"_{args.tag}" if args.tag else "")
+            path = os.path.join(args.out, tag + ".json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            status = ("SKIP" if rec.get("skipped")
+                      else "OK" if rec["ok"] else "FAIL")
+            print(f"[{status}] {tag} ({rec.get('total_s', 0)}s) "
+                  f"flops/dev={rec.get('flops_per_device', 0):.3g} "
+                  f"wire/dev={rec.get('wire_bytes_per_device', 0):.3g}",
+                  flush=True)
+            if not rec["ok"] and not rec.get("skipped"):
+                print(rec.get("error", ""), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Serving launcher: batched prefill + decode with the KV-cache runtime.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import get_model, lm_logits
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_config()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+
+    b, pl_len, gen = args.batch, args.prompt_len, args.gen
+    max_len = pl_len + gen
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (b, pl_len)), jnp.int32)
+    aux = {k: jnp.ones((b,) + v.shape[1:], v.dtype)
+           for k, v in model.aux_inputs(b, pl_len).items()}
+
+    # prefill
+    t0 = time.time()
+    hidden, caches = model.forward(params, prompts, cfg, mode="prefill", **aux)
+    state = model.init_state(cfg, b, max_len)
+    # place prefill KV into the decode cache where the family uses one
+    if cfg.family in ("dense", "moe"):
+        state["k"] = state["k"].at[:, :, :pl_len].set(caches[0])
+        state["v"] = state["v"].at[:, :, :pl_len].set(caches[1])
+    elif cfg.family == "whisper":
+        state["k"] = state["k"].at[:, :, :pl_len].set(caches["k"])
+        state["v"] = state["v"].at[:, :, :pl_len].set(caches["v"])
+        state["ck"], state["cv"] = caches["ck"], caches["cv"]
+    else:
+        state = caches  # recurrent families carry their own state
+    t_prefill = time.time() - t0
+
+    # greedy decode
+    step_fn = jax.jit(lambda p, t, s, i: model.decode_step(p, t, s, i, cfg))
+    tok = prompts[:, -1:]
+    out_tokens = []
+    t1 = time.time()
+    for i in range(gen):
+        hidden, state = step_fn(params, tok, state, pl_len + i)
+        logits = lm_logits(params, hidden, cfg)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok[:, 0]))
+    t_decode = time.time() - t1
+
+    gen_arr = np.stack(out_tokens, axis=1)
+    print(f"prefill: {b}x{pl_len} tokens in {t_prefill:.2f}s")
+    print(f"decode : {gen} steps in {t_decode:.2f}s "
+          f"({b * gen / max(t_decode, 1e-9):.1f} tok/s)")
+    print("generated token ids (first row):", gen_arr[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Training launcher: --arch <id> --shape <name> [--steps N] [--smoke].
+
+On real hardware this is the multi-host entry point (jax.distributed
+initializes from the cluster env; the mesh comes from make_production_mesh).
+On the CPU container, --smoke runs the reduced config end-to-end through the
+identical code path: data pipeline, sharded train_step, checkpoints, resume.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from ..configs import get_config, shape_for
+from ..configs.base import ShapeSpec
+from ..launch.mesh import make_host_mesh, make_production_mesh
+from ..launch.steps import TrainStepConfig
+from ..optim import AdamWConfig
+from ..runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + host mesh (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", type=int, default=None,
+                    help="gradient-fusion bits over the pod axis (8/4)")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "tp_sp", "fsdp"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke_config()
+        shape = ShapeSpec("smoke", 64, 4, "train")
+        mesh = make_host_mesh(model=1)
+    else:
+        shape = shape_for(args.shape)
+        mesh = make_production_mesh()
+
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=max(args.steps // 5, 10),
+        ckpt_dir=args.ckpt_dir,
+        step_cfg=TrainStepConfig(
+            microbatches=args.microbatches,
+            compression_bits=args.compression,
+            strategy=args.strategy,
+            moe_groups=2 if args.smoke else 64,
+            adamw=AdamWConfig(lr=args.lr)))
+    trainer = Trainer(cfg, shape, mesh, tcfg)
+    trainer.run(resume=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .model_api import ModelBundle, get_model, lm_logits, chunked_xent_loss

@@ -1,0 +1,331 @@
+"""Shared neural layers for the model zoo (pure JAX, bf16 + fp32 numerics).
+
+Conventions:
+  * Params live in a *flat* dict[str, Array] with '/'-joined paths; per-layer
+    weights are stacked on a leading `layers` axis and consumed via lax.scan.
+  * Tensor layout: activations (B, S, D); attention heads (B, S, H, Dh);
+    KV caches (B, S_max, KV, Dh).
+  * Norms/softmax in fp32, matmuls in bf16 with fp32 accumulation
+    (preferred_element_type).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+
+__all__ = ["ParamSchema", "init_from_schema", "specs_from_schema", "rms_norm",
+           "rope_cache", "apply_rope", "mrope_positions", "attention",
+           "decode_attention", "swiglu", "embed_tokens", "Schema"]
+
+Schema = dict  # path -> ParamSchema
+
+
+class ParamSchema(NamedTuple):
+    shape: tuple
+    axes: tuple            # logical axis names, len == len(shape)
+    std: float = 0.02
+    init: str = "normal"   # normal | zeros | ones
+
+
+def init_from_schema(schema: Schema, key, dtype=jnp.bfloat16):
+    """Materialize a flat param dict from a schema (deterministic per path)."""
+    params = {}
+    for i, (path, ps) in enumerate(sorted(schema.items())):
+        k = jax.random.fold_in(key, i)
+        if ps.init == "zeros":
+            params[path] = jnp.zeros(ps.shape, dtype)
+        elif ps.init == "ones":
+            params[path] = jnp.ones(ps.shape, dtype)
+        else:
+            params[path] = (ps.std * jax.random.normal(k, ps.shape, jnp.float32)).astype(dtype)
+    return params
+
+
+def specs_from_schema(schema: Schema) -> dict:
+    return {path: ps.axes for path, ps in schema.items()}
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def head_mask(cfg, dtype=jnp.float32):
+    """Activity mask (h_eff,) for padded attention heads.
+
+    Heads are grouped (KV-major); within each effective group of
+    g_eff = h_eff/kv_eff slots, the first g_real = n_heads/n_kv_heads are
+    real. Zeroing padded slots after PV makes the padded model exactly the
+    unpadded function (dead params get zero gradients)."""
+    h_eff, kv_eff = cfg.h_eff, cfg.kv_eff
+    if h_eff == cfg.n_heads and kv_eff == cfg.n_kv_heads:
+        return None
+    g_eff = h_eff // kv_eff
+    g_real = cfg.n_heads // cfg.n_kv_heads
+    idx = jnp.arange(h_eff)
+    active = ((idx // g_eff) < cfg.n_kv_heads) & ((idx % g_eff) < g_real)
+    return active.astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_cache(seq_len: int, d_head: int, theta: float, dtype=jnp.float32,
+               positions=None):
+    """(sin, cos) of shape (S, Dh/2) — split-half rotary convention."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions is None:
+        positions = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = positions[..., None] * freqs  # (..., S, half)
+    return jnp.sin(ang).astype(dtype), jnp.cos(ang).astype(dtype)
+
+
+def apply_rope(x, sin, cos):
+    """x: (B, S, H, Dh); sin/cos: (S, Dh/2) or (B, S, Dh/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:  # (B, S, half) — m-rope merged
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(batch: int, seq_len: int, n_vision: int, grid: int | None = None):
+    """Qwen2-VL M-RoPE position ids (3, B, S): (temporal, height, width).
+
+    Vision tokens occupy the first ``n_vision`` positions as a sqrt grid;
+    text follows sequentially (all three components equal, offset past the
+    max vision position) — matching the M-RoPE text continuation rule.
+    """
+    if n_vision == 0:
+        pos = jnp.arange(seq_len, dtype=jnp.float32)
+        return jnp.broadcast_to(pos, (3, batch, seq_len))
+    g = grid or max(int(math.sqrt(n_vision)), 1)
+    idx = jnp.arange(n_vision)
+    t_vis = jnp.zeros(n_vision, jnp.float32)
+    h_vis = (idx // g).astype(jnp.float32)
+    w_vis = (idx % g).astype(jnp.float32)
+    text_start = float(g)  # max(h,w) + 1
+    t_txt = text_start + jnp.arange(seq_len - n_vision, dtype=jnp.float32)
+    pos3 = jnp.stack([
+        jnp.concatenate([t_vis, t_txt]),
+        jnp.concatenate([h_vis, t_txt]),
+        jnp.concatenate([w_vis, t_txt]),
+    ])  # (3, S)
+    return jnp.broadcast_to(pos3[:, None, :], (3, batch, seq_len))
+
+
+def mrope_cache(positions3, d_head: int, theta: float, sections=(16, 24, 24)):
+    """Merge 3-component positions into per-token (sin, cos) of (B, S, Dh/2)."""
+    half = d_head // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # component id per frequency slot -> gather per-slot positions (B, S, half)
+    comp = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    per_slot = jnp.einsum("cbs,ch->bsh", positions3,
+                          jax.nn.one_hot(comp, 3).T.astype(positions3.dtype))
+    ang = per_slot * freqs[None, None, :]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _mask_bias(seq_q: int, seq_k: int, kind: str, window: int,
+               q_offset=0, dtype=jnp.float32):
+    """Additive attention bias (S_q, S_k): causal, optionally banded (local)."""
+    qi = jnp.arange(seq_q)[:, None] + q_offset
+    kj = jnp.arange(seq_k)[None, :]
+    ok = kj <= qi
+    if kind == "local" and window > 0:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(dtype)
+
+
+def attention(x, wq, wk, wv, wo, cfg, kind: str, sin, cos,
+              qk_norm_scales=None, bias_mode: str = "causal"):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    x: (B,S,D). Weights: wq (D,H,Dh), wk/wv (D,KV,Dh), wo (H,Dh,D).
+    bias_mode: 'causal' (LM) or 'full' (encoder self-attention).
+    """
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+
+    q = jnp.einsum("bsd,dhk->bshk", x, wq, preferred_element_type=jnp.bfloat16)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk, preferred_element_type=jnp.bfloat16)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv, preferred_element_type=jnp.bfloat16)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+
+    if qk_norm_scales is not None:
+        qn, kn = qk_norm_scales
+        q = rms_norm(q, qn, cfg.norm_eps)
+        k = rms_norm(k, kn, cfg.norm_eps)
+    if sin is not None:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+
+    qg = q.reshape(b, s, kv, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / math.sqrt(dh)
+    if bias_mode == "causal":
+        scores += _mask_bias(s, s, kind, cfg.window)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v,
+                     preferred_element_type=jnp.bfloat16)
+    ctx = ctx.reshape(b, s, h, dh)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, wo, preferred_element_type=jnp.bfloat16)
+    return out.astype(x.dtype), (k, v)
+
+
+def cross_attention(x, enc_kv, wq, wo, cfg):
+    """Decoder cross-attention against precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kvh
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, wq, preferred_element_type=jnp.bfloat16)
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v,
+                     preferred_element_type=jnp.bfloat16).reshape(b, s, h, dh)
+    return jnp.einsum("bshk,hkd->bsd", ctx, wo, preferred_element_type=jnp.bfloat16)
+
+
+def decode_attention(q, k_cache, v_cache, pos, cfg, kind: str):
+    """One-token attention against a KV cache.
+
+    q: (B, 1, H, Dh); caches (B, S_max, KV, Dh); pos: () current index.
+    Softmax over the cache axis works under sequence-sharded caches — GSPMD
+    turns the max/sum reductions into collectives.
+    """
+    b, _, h, dh = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    s_max = k_cache.shape[1]
+
+    qg = q.reshape(b, kv, g, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    t = jnp.arange(s_max)
+    ok = t <= pos
+    if kind == "local" and cfg.window > 0:
+        ok &= t > pos - cfg.window
+    scores = jnp.where(ok[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache,
+                     preferred_element_type=jnp.bfloat16)
+    return ctx.reshape(b, 1, h, dh)
+
+
+def streaming_attention(qg, k, v, is_local, window: int, scale: float,
+                        q_chunk: int = 512, kv_chunk: int = 1024,
+                        causal: bool = True, scores_bf16: bool = False):
+    """Memory-efficient attention (Rabe-Staats / flash-style streaming softmax).
+
+    qg: (B, S, KV, G, Dh) grouped queries; k, v: (B, T, KV, Dh).
+    Scans over query chunks (outer) and KV chunks (inner, checkpointed), so
+    peak memory is O(q_chunk * kv_chunk) instead of O(S*T). The local/global
+    choice (``is_local``, traced bool) folds into the per-block mask. This is
+    also the pure-jnp oracle for the Pallas flash kernel (kernels/decode_attn).
+    """
+    b, s, kvh, g, dh = qg.shape
+    t = k.shape[1]
+    q_chunk = min(q_chunk, s)
+    while s % q_chunk:
+        q_chunk -= 1
+    kv_chunk = min(kv_chunk, t)
+    while t % kv_chunk:
+        kv_chunk -= 1
+    nq, nk = s // q_chunk, t // kv_chunk
+
+    qs = qg.reshape(b, nq, q_chunk, kvh, g, dh).swapaxes(0, 1)
+    ks = k.reshape(b, nk, kv_chunk, kvh, dh).swapaxes(0, 1)
+    vs = v.reshape(b, nk, kv_chunk, kvh, dh).swapaxes(0, 1)
+
+    def q_block(carry, xs):
+        del carry
+        qi_blk, i0 = xs  # (B, qc, KV, G, Dh), scalar base index
+        qidx = i0 + jnp.arange(q_chunk)
+
+        def kv_block(state, ys):
+            m, l, acc = state
+            kj_blk, vj_blk, j0 = ys
+            kidx = j0 + jnp.arange(kv_chunk)
+            sc = jnp.einsum("bqkgd,btkd->bkgqt", qi_blk, kj_blk,
+                            preferred_element_type=(
+                                jnp.bfloat16 if scores_bf16 else jnp.float32))
+            sc = sc.astype(jnp.float32) * scale
+            ok = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                ok &= kidx[None, :] <= qidx[:, None]
+            if window > 0:
+                band = ok & (kidx[None, :] > qidx[:, None] - window)
+                ok = jnp.where(is_local, band, ok)
+            sc = jnp.where(ok[None, None, None], sc, -jnp.inf)
+            m_new = jnp.maximum(m, sc.max(-1))
+            # guard fully-masked rows (m_new = -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(sc - m_safe[..., None])
+            p = jnp.where(ok[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vj_blk.dtype), vj_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        kv_body = jax.checkpoint(kv_block, prevent_cse=False)
+        init = (jnp.full((b, kvh, g, q_chunk), -jnp.inf, jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk), jnp.float32),
+                jnp.zeros((b, kvh, g, q_chunk, dh), jnp.float32))
+        j0s = jnp.arange(nk) * kv_chunk
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, (ks, vs, j0s))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,KV,G,qc,Dh)
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    i0s = jnp.arange(nq) * q_chunk
+    _, outs = jax.lax.scan(q_block, None, (qs, i0s))        # (nq,B,qc,KV,G,Dh)
+    out = outs.swapaxes(0, 1).reshape(b, s, kvh, g, dh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mlp / embedding
+# ---------------------------------------------------------------------------
+
+def swiglu(x, w_gate, w_up, w_down):
+    gate = jnp.einsum("bsd,df->bsf", x, w_gate, preferred_element_type=jnp.bfloat16)
+    up = jnp.einsum("bsd,df->bsf", x, w_up, preferred_element_type=jnp.bfloat16)
+    act = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    act = shard(act, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", act, w_down, preferred_element_type=jnp.bfloat16)
+
+
+def embed_tokens(table, tokens, scale: bool = False):
+    out = jnp.take(table, tokens, axis=0)
+    if scale:
+        out = out * math.sqrt(table.shape[1])
+    return shard(out, "batch", "residual_seq", "residual_embed")

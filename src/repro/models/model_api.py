@@ -1,0 +1,127 @@
+"""Unified model interface over the zoo families.
+
+Every architecture exposes:
+    schema(cfg)                         -> flat param Schema
+    forward(params, tokens, cfg, mode, **aux) -> (hidden, caches/state)
+    decode_step(params, tokens, state, pos, cfg) -> (hidden, state)
+    init_state(cfg, batch, max_len)     -> decode cache/state pytree
+    logits(params, hidden, cfg)         -> vocab logits (or use chunked loss)
+plus ``aux_inputs(cfg, batch, seq)`` describing extra stub-frontend inputs
+(whisper frames / vlm patch embeddings) as ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import rglru, rwkv6, transformer, whisper
+from .layers import init_from_schema, specs_from_schema
+
+__all__ = ["ModelBundle", "get_model", "lm_logits", "chunked_xent_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    schema: dict
+    forward: Callable
+    decode_step: Callable
+    init_state: Callable
+
+    def init_params(self, key):
+        return init_from_schema(self.schema, key)
+
+    def param_specs(self):
+        return specs_from_schema(self.schema)
+
+    def aux_inputs(self, batch: int, seq: int) -> dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        if cfg.family == "whisper":
+            return {"frames": jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)}
+        if cfg.n_vision_tokens:
+            return {"vision_embeds": jax.ShapeDtypeStruct(
+                (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)}
+        return {}
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    if cfg.family in ("dense", "moe"):
+        return ModelBundle(
+            cfg=cfg, schema=transformer.dense_schema(cfg),
+            forward=transformer.dense_forward,
+            decode_step=transformer.dense_decode_step,
+            init_state=lambda c, b, s: transformer.init_cache(c, b, s))
+    if cfg.family == "rwkv6":
+        return ModelBundle(
+            cfg=cfg, schema=rwkv6.rwkv6_schema(cfg),
+            forward=rwkv6.rwkv6_forward,
+            decode_step=rwkv6.rwkv6_decode_step,
+            init_state=lambda c, b, s: rwkv6.rwkv6_init_state(c, b))
+    if cfg.family == "rglru":
+        return ModelBundle(
+            cfg=cfg, schema=rglru.rglru_schema(cfg),
+            forward=rglru.rglru_forward,
+            decode_step=rglru.rglru_decode_step,
+            init_state=rglru.rglru_init_state)
+    if cfg.family == "whisper":
+        return ModelBundle(
+            cfg=cfg, schema=whisper.whisper_schema(cfg),
+            forward=whisper.whisper_forward,
+            decode_step=whisper.whisper_decode_step,
+            init_state=lambda c, b, s: whisper.whisper_init_cache(c, b, s))
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def lm_logits(params, hidden, cfg: ModelConfig):
+    """Full logits — only for small vocab / smoke paths."""
+    table = params.get("lm_head/table", params["embed/table"])
+    return jnp.einsum("bsd,vd->bsv", hidden, table,
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_xent_loss(params, hidden, labels, cfg: ModelConfig,
+                      chunk: int = 512, label_mask=None):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; per chunk, logits (B, chunk, V) live briefly
+    (sharded over 'vocab'); padded-vocab logits are masked to -inf.
+    """
+    from ..sharding import shard
+
+    table = params.get("lm_head/table", params["embed/table"])
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    n_chunks = s // chunk
+    h = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    lab = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    if label_mask is None:
+        label_mask = jnp.ones_like(labels, jnp.float32)
+    msk = label_mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    vocab_ok = (jnp.arange(cfg.vocab_padded) < cfg.vocab)
+
+    def body(acc, xs):
+        hc, lc, mc = xs
+        logits = jnp.einsum("bcd,vd->bcv", hc.astype(jnp.bfloat16), table,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", "seq", "vocab")
+        logits = jnp.where(vocab_ok[None, None, :], logits, -jnp.inf)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        loss = ((lse - gold) * mc).sum()
+        return (acc[0] + loss, acc[1] + mc.sum()), ()
+
+    # checkpoint: without it, autodiff saves every chunk's (B, c, V) logits
+    # as scan residuals — exactly the materialization chunking exists to
+    # avoid (found via HLO attribution; EXPERIMENTS.md §Perf gemma3 cell).
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                          prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (h, lab, msk))
+    return tot / jnp.maximum(cnt, 1.0)

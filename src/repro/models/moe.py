@@ -1,0 +1,90 @@
+"""Token-choice top-k MoE layer (qwen3-moe, mixtral).
+
+Dispatch is the sort-based capacity scheme (dropless up to a capacity factor):
+tokens are processed in groups (one group per data shard so all routing math
+is shard-local), each group scatters its tokens into a per-expert buffer
+(G, E, C, D), the expert FFN runs with experts sharded over the 'model' mesh
+axis (GSPMD materializes the token all-to-all at the G/E resharding), and
+rows are gathered back and combined with the top-k gates.
+
+When n_experts doesn't divide the model axis (mixtral: 8 experts, 16-way
+axis) the axis-rule table falls back to tensor parallelism *inside* each
+expert (d_ff sharded), in which case no expert all-to-all exists and the only
+collective is the usual down-projection reduce — the same code path, driven
+entirely by the sharding rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+
+__all__ = ["moe_mlp"]
+
+
+def _dispatch_group(x_g, e_idx_g, capacity: int, n_experts: int):
+    """Group-local dispatch. x_g (T, D); e_idx_g (T, k) -> buf (E*C+1, D),
+    dest (T*k,), keep (T*k,)."""
+    t, k = e_idx_g.shape
+    ef = e_idx_g.reshape(t * k)
+    order = jnp.argsort(ef, stable=True)
+    sorted_e = ef[order]
+    # position of each routed slot within its expert
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos_within = jnp.arange(t * k) - start[sorted_e]
+    keep_sorted = pos_within < capacity
+    dest_sorted = jnp.where(keep_sorted, sorted_e * capacity + pos_within,
+                            n_experts * capacity)
+    # invert the sort: dest[j] for original flat slot j
+    dest = jnp.zeros(t * k, jnp.int32).at[order].set(dest_sorted.astype(jnp.int32))
+    keep = jnp.zeros(t * k, bool).at[order].set(keep_sorted)
+    tok_idx = order // k
+    buf = jnp.zeros((n_experts * capacity + 1, x_g.shape[-1]), x_g.dtype)
+    buf = buf.at[dest_sorted].set(x_g[tok_idx], mode="drop")
+    return buf, dest, keep
+
+
+def moe_mlp(x, router_w, w_gate, w_up, w_down, cfg, n_groups: int):
+    """x: (B, S, D) -> (B, S, D). Expert weights (E, D, F) / (E, F, D)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tokens = b * s
+    g = max(min(n_groups, tokens), 1)
+    while tokens % g:
+        g -= 1
+    t_g = tokens // g
+    capacity = max(int(cfg.capacity_factor * k * t_g / e), 1)
+
+    xf = x.reshape(g, t_g, d)
+    xf = shard(xf, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xf, router_w,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, e_idx = jax.lax.top_k(probs, k)                 # (G, T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    buf, dest, keep = jax.vmap(
+        lambda xg, eg: _dispatch_group(xg, eg, capacity, e))(xf, e_idx)
+    buf = buf[:, :-1].reshape(g, e, capacity, d)           # drop dummy row
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # expert FFN (SwiGLU) — experts over 'model' (EP) or d_ff over 'model' (TP)
+    gate_act = jnp.einsum("gecd,edf->gecf", buf, w_gate,
+                          preferred_element_type=jnp.bfloat16)
+    up_act = jnp.einsum("gecd,edf->gecf", buf, w_up,
+                        preferred_element_type=jnp.bfloat16)
+    gate_act = shard(gate_act, "batch", "experts", None, "expert_mlp")
+    act = jax.nn.silu(gate_act.astype(jnp.float32)).astype(x.dtype) * up_act
+    out_buf = jnp.einsum("gecf,efd->gecd", act, w_down,
+                         preferred_element_type=jnp.bfloat16)
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+
+    # gather back + combine
+    flat = out_buf.reshape(g, e * capacity, d)
+    flat = jnp.concatenate([flat, jnp.zeros((g, 1, d), flat.dtype)], axis=1)
+    rows = jnp.take_along_axis(flat, dest[..., None], axis=1)  # (G, T*k, D)
+    w = (gates.reshape(g, t_g * k) * keep.astype(gates.dtype)).astype(x.dtype)
+    y = (rows * w[..., None]).reshape(g, t_g, k, d).sum(axis=2)
+    return y.reshape(b, s, d)

@@ -1,0 +1,283 @@
+"""RecurrentGemma (Griffin) — RG-LRU recurrent blocks + local attention
+[arXiv:2402.19427].
+
+Block pattern (recurrent, recurrent, local-attn) repeating; 26 layers =
+8 full macro-blocks + 2 trailing recurrent layers. The macro-blocks are
+scanned (params stacked on a leading axis of 8); the tail has its own params.
+
+RG-LRU: a_t = exp(c * softplus-free log sigmoid(Lambda) * r_t),
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed with jax.lax.associative_scan (log-depth, TPU friendly) for
+train/prefill and a single step for decode. A depthwise conv1d (width 4)
+precedes the recurrence, as in Griffin.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import (ParamSchema, Schema, apply_rope, embed_tokens, rms_norm,
+                     rope_cache, swiglu)
+from .transformer import _attention_flagged, _decode_attention_flagged
+
+__all__ = ["rglru_schema", "rglru_forward", "rglru_decode_step",
+           "rglru_init_state", "rg_lru_scan"]
+
+_C_FACTOR = 8.0
+
+
+def _macro_count(cfg):
+    n_macro = cfg.n_layers // 3
+    n_tail = cfg.n_layers - 3 * n_macro  # trailing recurrent layers
+    return n_macro, n_tail
+
+
+def _rec_schema(l: int, cfg, prefix: str, stacked: bool = True) -> Schema:
+    d, w = cfg.d_model, cfg.lru_width
+    cw = cfg.conv1d_width
+    sh = (lambda *s: (l, *s)) if stacked else (lambda *s: s)
+    ax = (lambda *a: ("layers", *a)) if stacked else (lambda *a: a)
+    return {
+        f"{prefix}/pre_norm": ParamSchema(sh(d), ax(None), init="zeros"),
+        f"{prefix}/w_gate": ParamSchema(sh(d, w), ax("embed", "mlp")),
+        f"{prefix}/w_in": ParamSchema(sh(d, w), ax("embed", "mlp")),
+        f"{prefix}/conv_w": ParamSchema(sh(cw, w), ax(None, "mlp")),
+        f"{prefix}/conv_b": ParamSchema(sh(w), ax("mlp"), init="zeros"),
+        f"{prefix}/lambda": ParamSchema(sh(w), ax("mlp"), init="ones"),
+        f"{prefix}/wa": ParamSchema(sh(w, w), ax("mlp", None)),
+        f"{prefix}/wx": ParamSchema(sh(w, w), ax("mlp", None)),
+        f"{prefix}/w_out": ParamSchema(sh(w, d), ax("mlp", "embed")),
+        f"{prefix}/mlp_pre_norm": ParamSchema(sh(d), ax(None), init="zeros"),
+        f"{prefix}/mlp_gate": ParamSchema(sh(d, cfg.d_ff), ax("embed", "mlp")),
+        f"{prefix}/mlp_up": ParamSchema(sh(d, cfg.d_ff), ax("embed", "mlp")),
+        f"{prefix}/mlp_down": ParamSchema(sh(cfg.d_ff, d), ax("mlp", "embed")),
+    }
+
+
+def rglru_schema(cfg) -> Schema:
+    n_macro, n_tail = _macro_count(cfg)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    vp = cfg.vocab_padded
+    s: Schema = {
+        "embed/table": ParamSchema((vp, d), ("vocab", "embed")),
+        "final_norm/w": ParamSchema((d,), (None,), init="zeros"),
+    }
+    # two recurrent sub-layers per macro-block (stacked n_macro)
+    for sub in ("rec0", "rec1"):
+        s.update(_rec_schema(n_macro, cfg, f"macro/{sub}"))
+    # one local-attention sub-layer per macro-block
+    s.update({
+        "macro/attn/pre_norm": ParamSchema((n_macro, d), ("layers", None), init="zeros"),
+        "macro/attn/wq": ParamSchema((n_macro, d, h, dh), ("layers", "embed", "heads", "head_dim")),
+        "macro/attn/wk": ParamSchema((n_macro, d, kv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "macro/attn/wv": ParamSchema((n_macro, d, kv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "macro/attn/wo": ParamSchema((n_macro, h, dh, d), ("layers", "heads", "head_dim", "embed")),
+        "macro/attn/mlp_pre_norm": ParamSchema((n_macro, d), ("layers", None), init="zeros"),
+        "macro/attn/mlp_gate": ParamSchema((n_macro, d, cfg.d_ff), ("layers", "embed", "mlp")),
+        "macro/attn/mlp_up": ParamSchema((n_macro, d, cfg.d_ff), ("layers", "embed", "mlp")),
+        "macro/attn/mlp_down": ParamSchema((n_macro, cfg.d_ff, d), ("layers", "mlp", "embed")),
+    })
+    for i in range(n_tail):
+        s.update(_rec_schema(0, cfg, f"tail{i}", stacked=False))
+    return s
+
+
+def rg_lru_scan(x, a_log, gate_in):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t) via associative scan.
+
+    x, a_log (=log a_t), gate_in: (B, T, W). Returns (h, last_h)."""
+    a = jnp.exp(a_log)
+    b_term = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gate_in * x
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b_term), axis=1)
+    return h, h[:, -1]
+
+
+def _rec_block(x, p, cfg, state, decode: bool = False):
+    """Griffin recurrent block + MLP. state: (conv_buf (B,cw-1,W), h (B,W))."""
+    conv_buf, h_prev = state
+    u = rms_norm(x, p["pre_norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", u, p["w_gate"],
+                                  preferred_element_type=jnp.float32))
+    xin = jnp.einsum("btd,dw->btw", u, p["w_in"],
+                     preferred_element_type=jnp.bfloat16)
+    xin = shard(xin, "batch", "seq", "mlp")
+
+    # depthwise causal conv1d (width cw)
+    cw = p["conv_w"].shape[0]
+    seq = jnp.concatenate([conv_buf.astype(xin.dtype), xin], axis=1)
+    conv = sum(seq[:, i:i + xin.shape[1]] * p["conv_w"][i] for i in range(cw))
+    conv = conv + p["conv_b"]
+    new_conv_buf = seq[:, -(cw - 1):] if cw > 1 else conv_buf
+
+    # RG-LRU gates
+    conv_f = conv.astype(jnp.float32)
+    r_gate = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", conv, p["wa"],
+                                       preferred_element_type=jnp.float32))
+    i_gate = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", conv, p["wx"],
+                                       preferred_element_type=jnp.float32))
+    log_a_base = -_C_FACTOR * jax.nn.softplus(p["lambda"].astype(jnp.float32))
+    a_log = log_a_base[None, None] * r_gate
+
+    if decode:
+        a = jnp.exp(a_log[:, 0])
+        h_new = a * h_prev + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * \
+            (i_gate[:, 0] * conv_f[:, 0])
+        h_seq = h_new[:, None]
+    else:
+        h_seq, h_new = rg_lru_scan(conv_f, a_log, i_gate)
+        # fold in carried state: h_t += (prod_{s<=t} a_s) * h_prev
+        cum_a = jnp.exp(jnp.cumsum(a_log, axis=1))
+        h_seq = h_seq + cum_a * h_prev[:, None]
+        h_new = h_seq[:, -1]
+
+    y = (gate * h_seq).astype(x.dtype)
+    y = shard(y, "batch", "seq", "mlp")
+    out = jnp.einsum("btw,wd->btd", y, p["w_out"],
+                     preferred_element_type=jnp.bfloat16)
+    x = x + out.astype(x.dtype)
+    x = shard(x, "batch", "residual_seq", "residual_embed")
+    # MLP
+    u = rms_norm(x, p["mlp_pre_norm"], cfg.norm_eps)
+    x = x + swiglu(u, p["mlp_gate"], p["mlp_up"], p["mlp_down"])
+    x = shard(x, "batch", "residual_seq", "residual_embed")
+    return x, (new_conv_buf, h_new)
+
+
+def _sub(params, prefix):
+    plen = len(prefix) + 1
+    return {k[plen:]: v for k, v in params.items() if k.startswith(prefix + "/")}
+
+
+def rglru_init_state(cfg, batch: int, max_len: int):
+    n_macro, n_tail = _macro_count(cfg)
+    w, cw = cfg.lru_width, cfg.conv1d_width
+    rec = lambda n: {
+        "conv": jnp.zeros((n, batch, cw - 1, w), jnp.bfloat16),
+        "h": jnp.zeros((n, batch, w), jnp.float32),
+    }
+    return {
+        "rec0": rec(n_macro), "rec1": rec(n_macro),
+        "k": jnp.zeros((n_macro, batch, max_len, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+        "v": jnp.zeros((n_macro, batch, max_len, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+        "tail": rec(n_tail),
+    }
+
+
+def rglru_forward(params, tokens, cfg, mode: str = "train", state=None,
+                  remat: bool = True, **_):
+    b, t = tokens.shape
+    n_macro, n_tail = _macro_count(cfg)
+    x = embed_tokens(params["embed/table"], tokens, scale=True)
+    sin, cos = rope_cache(t, cfg.d_head, cfg.rope_theta)
+    ropes = (sin, cos, None, None)
+    if state is None:
+        state = rglru_init_state(cfg, b, 1 if mode == "train" else t)
+
+    rec0, rec1 = _sub(params, "macro/rec0"), _sub(params, "macro/rec1")
+    attn = _sub(params, "macro/attn")
+
+    def macro_body(x, sl):
+        p0, p1, pa, s0c, s0h, s1c, s1h = sl
+        x, st0 = _rec_block(x, p0, cfg, (s0c, s0h))
+        x, st1 = _rec_block(x, p1, cfg, (s1c, s1h))
+        h = rms_norm(x, pa["pre_norm"], cfg.norm_eps)
+        lp = {"wq": pa["wq"], "wk": pa["wk"], "wv": pa["wv"], "wo": pa["wo"]}
+        a_out, kv = _attention_flagged(h, lp, cfg, jnp.asarray(True), sin, cos, None)
+        x = x + a_out
+        x = shard(x, "batch", "residual_seq", "residual_embed")
+        u = rms_norm(x, pa["mlp_pre_norm"], cfg.norm_eps)
+        x = x + swiglu(u, pa["mlp_gate"], pa["mlp_up"], pa["mlp_down"])
+        x = shard(x, "batch", "residual_seq", "residual_embed")
+        if mode == "train":  # don't stack KV caches during training
+            return x, (st0, st1)
+        return x, (st0, st1, kv)
+
+    if mode == "train" and remat:
+        macro_body = jax.checkpoint(macro_body,
+                                    policy=jax.checkpoint_policies.nothing_saveable,
+                                    prevent_cse=False)
+    xs = (rec0, rec1, attn, state["rec0"]["conv"], state["rec0"]["h"],
+          state["rec1"]["conv"], state["rec1"]["h"])
+    if mode == "train":
+        x, (st0, st1) = jax.lax.scan(macro_body, x, xs)
+        kv = (None, None)
+    else:
+        x, (st0, st1, kv) = jax.lax.scan(macro_body, x, xs)
+
+    tail_states = []
+    for i in range(n_tail):
+        x, sti = _rec_block(x, _sub(params, f"tail{i}"), cfg,
+                            (state["tail"]["conv"][i], state["tail"]["h"][i]))
+        tail_states.append(sti)
+    x = rms_norm(x, params["final_norm/w"], cfg.norm_eps)
+    if mode == "train":
+        return x, None
+    new_state = {
+        "rec0": {"conv": st0[0], "h": st0[1]},
+        "rec1": {"conv": st1[0], "h": st1[1]},
+        "k": kv[0], "v": kv[1],
+        "tail": {"conv": jnp.stack([s[0] for s in tail_states]) if n_tail else state["tail"]["conv"],
+                 "h": jnp.stack([s[1] for s in tail_states]) if n_tail else state["tail"]["h"]},
+    }
+    return x, new_state
+
+
+def rglru_decode_step(params, tokens, state, pos, cfg, **_):
+    b = tokens.shape[0]
+    n_macro, n_tail = _macro_count(cfg)
+    x = embed_tokens(params["embed/table"], tokens, scale=True)
+    pos_arr = jnp.asarray([pos])
+    sin, cos = rope_cache(1, cfg.d_head, cfg.rope_theta, positions=pos_arr)
+
+    rec0, rec1 = _sub(params, "macro/rec0"), _sub(params, "macro/rec1")
+    attn = _sub(params, "macro/attn")
+
+    def macro_body(x, sl):
+        p0, p1, pa, s0c, s0h, s1c, s1h, k_c, v_c = sl
+        x, st0 = _rec_block(x, p0, cfg, (s0c, s0h), decode=True)
+        x, st1 = _rec_block(x, p1, cfg, (s1c, s1h), decode=True)
+        h = rms_norm(x, pa["pre_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, pa["wq"], preferred_element_type=jnp.bfloat16)
+        k = jnp.einsum("bsd,dhk->bshk", h, pa["wk"], preferred_element_type=jnp.bfloat16)
+        v = jnp.einsum("bsd,dhk->bshk", h, pa["wv"], preferred_element_type=jnp.bfloat16)
+        q, k = apply_rope(q, sin, cos), apply_rope(k, sin, cos)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, pos, 0, 0))
+        k_c = shard(k_c, "batch", "kv_seq", "kv_heads", "head_dim")
+        v_c = shard(v_c, "batch", "kv_seq", "kv_heads", "head_dim")
+        ctx = _decode_attention_flagged(q, k_c, v_c, pos, cfg, jnp.asarray(True))
+        a_out = jnp.einsum("bshk,hkd->bsd", ctx, pa["wo"],
+                           preferred_element_type=jnp.bfloat16)
+        x = x + a_out.astype(x.dtype)
+        u = rms_norm(x, pa["mlp_pre_norm"], cfg.norm_eps)
+        x = x + swiglu(u, pa["mlp_gate"], pa["mlp_up"], pa["mlp_down"])
+        return x, (st0, st1, (k_c, v_c))
+
+    xs = (rec0, rec1, attn, state["rec0"]["conv"], state["rec0"]["h"],
+          state["rec1"]["conv"], state["rec1"]["h"], state["k"], state["v"])
+    x, (st0, st1, kv) = jax.lax.scan(macro_body, x, xs)
+
+    tail_states = []
+    for i in range(n_tail):
+        x, sti = _rec_block(x, _sub(params, f"tail{i}"), cfg,
+                            (state["tail"]["conv"][i], state["tail"]["h"][i]),
+                            decode=True)
+        tail_states.append(sti)
+    x = rms_norm(x, params["final_norm/w"], cfg.norm_eps)
+    new_state = {
+        "rec0": {"conv": st0[0], "h": st0[1]},
+        "rec1": {"conv": st1[0], "h": st1[1]},
+        "k": kv[0], "v": kv[1],
+        "tail": {"conv": jnp.stack([s[0] for s in tail_states]) if n_tail else state["tail"]["conv"],
+                 "h": jnp.stack([s[1] for s in tail_states]) if n_tail else state["tail"]["h"]},
+    }
+    return x, new_state

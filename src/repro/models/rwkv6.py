@@ -1,0 +1,277 @@
+"""RWKV-6 "Finch" — attention-free LM with data-dependent decay
+[arXiv:2404.05892].
+
+Per layer: time-mix (the WKV recurrence with per-channel, per-token decay
+w_t = exp(-exp(ww_t)), LoRA-produced from the token stream — Finch's key
+feature) and channel-mix (squared-ReLU FFN).
+
+The WKV recurrence  S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+                    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+is computed in *chunked* form for train/prefill (chunk 32, fp32): intra-chunk
+terms become an MXU matmul in the decay-rebased basis r' = r * exp(l),
+k' = k * exp(-l) (l = cumulative log-decay within the chunk, re-based to the
+chunk start), masked causally; inter-chunk state propagates through a scan
+over chunks. The per-step log-decay is clamped to >= -2 so the rebased
+factors stay inside fp32 range (|l| <= 64 per chunk) — noted in DESIGN.md.
+A step-by-step scan oracle (`wkv_scan_ref`) validates the chunked path, and
+kernels/wkv6 provides the Pallas TPU kernel for the same contraction.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import ParamSchema, Schema, embed_tokens, rms_norm
+
+__all__ = ["rwkv6_schema", "rwkv6_forward", "rwkv6_decode_step",
+           "rwkv6_init_state", "wkv_chunked", "wkv_scan_ref"]
+
+_LORA_MIX = 32
+_LORA_W = 64
+_CHUNK = 32
+_LOGW_MIN = -2.0  # per-step log-decay clamp (fp32 safety of the rebased basis)
+
+
+def rwkv6_schema(cfg) -> Schema:
+    l, d, f, vp = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_padded
+    h, dh = cfg.n_heads, cfg.d_head
+    la = ("layers", None)
+    s: Schema = {
+        "embed/table": ParamSchema((vp, d), ("vocab", "embed")),
+        "final_norm/w": ParamSchema((d,), (None,), init="zeros"),
+        "lm_head/table": ParamSchema((vp, d), ("vocab", "embed")),
+        # time-mix
+        "layers/ln1": ParamSchema((l, d), la, init="zeros"),
+        "layers/mu_x": ParamSchema((l, d), la),
+        "layers/mu_rkvwg": ParamSchema((l, 5, d), ("layers", None, None)),
+        "layers/mix_w1": ParamSchema((l, d, 5 * _LORA_MIX), ("layers", "embed", None)),
+        "layers/mix_w2": ParamSchema((l, 5, _LORA_MIX, d), ("layers", None, None, "embed")),
+        "layers/w0": ParamSchema((l, d), la, init="zeros"),
+        "layers/w_lora1": ParamSchema((l, d, _LORA_W), ("layers", "embed", None)),
+        "layers/w_lora2": ParamSchema((l, _LORA_W, d), ("layers", None, "embed")),
+        "layers/u": ParamSchema((l, h, dh), ("layers", "heads", "head_dim")),
+        "layers/wr": ParamSchema((l, d, h, dh), ("layers", "embed", "heads", "head_dim")),
+        "layers/wk": ParamSchema((l, d, h, dh), ("layers", "embed", "heads", "head_dim")),
+        "layers/wv": ParamSchema((l, d, h, dh), ("layers", "embed", "heads", "head_dim")),
+        "layers/wg": ParamSchema((l, d, h, dh), ("layers", "embed", "heads", "head_dim")),
+        "layers/wo": ParamSchema((l, h, dh, d), ("layers", "heads", "head_dim", "embed"),
+                                 std=0.02 / math.sqrt(2 * l)),
+        "layers/ln_x": ParamSchema((l, h, dh), ("layers", "heads", "head_dim"), init="zeros"),
+        # channel-mix
+        "layers/ln2": ParamSchema((l, d), la, init="zeros"),
+        "layers/cmix_mu_k": ParamSchema((l, d), la),
+        "layers/cmix_mu_r": ParamSchema((l, d), la),
+        "layers/cmix_wk": ParamSchema((l, d, f), ("layers", "embed", "mlp")),
+        "layers/cmix_wv": ParamSchema((l, f, d), ("layers", "mlp", "embed"),
+                                      std=0.02 / math.sqrt(2 * l)),
+        "layers/cmix_wr": ParamSchema((l, d, d), ("layers", "embed", None)),
+    }
+    return s
+
+
+# ---------------------------------------------------------------------------
+# WKV recurrence
+# ---------------------------------------------------------------------------
+
+def wkv_scan_ref(r, k, v, logw, u, state0=None):
+    """Step-by-step oracle. r/k/v/logw: (B,T,H,Dh); u: (H,Dh).
+
+    Returns (y (B,T,H,Dh) fp32, final state (B,H,Dh,Dh))."""
+    b, t, h, dh = r.shape
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, dh, dh), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,Dh)
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,Dk,Dv)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, w))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def wkv_chunked(r, k, v, logw, u, state0=None, chunk: int = _CHUNK):
+    """Chunked WKV (matmul form). Same signature/semantics as wkv_scan_ref."""
+    b, t, h, dh = r.shape
+    pad = (-t) % chunk
+    if pad:
+        padf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = padf(r), padf(k), padf(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tp = t + pad
+    nc = tp // chunk
+    shp = (b, nc, chunk, h, dh)
+    rf, kf, vf, lw = (a.astype(jnp.float32).reshape(shp)
+                      for a in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, dh, dh), jnp.float32) if state0 is None
+          else state0.astype(jnp.float32))
+
+    l_inc = jnp.cumsum(lw, axis=2)            # inclusive cumulative log decay
+    l_exc = l_inc - lw                        # exclusive (decay before step t)
+    k_resc = kf * jnp.exp(-l_inc)             # k' basis
+    r_resc = rf * jnp.exp(l_exc)              # r' basis
+    l_tot = l_inc[:, :, -1]                   # (B,nc,H,Dh)
+
+    # intra-chunk: A[t,j] = sum_d r'_t k'_j  (strictly lower triangular)
+    a_mat = jnp.einsum("bnthd,bnjhd->bnhtj", r_resc, k_resc)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    a_mat = a_mat * tri[None, None, None]
+    diag = jnp.einsum("bnthd,hd,bnthd->bnth", rf, uf, kf)  # u-bonus (j == t)
+    y_intra = jnp.einsum("bnhtj,bnjhd->bnthd", a_mat, vf)
+    y_intra += diag[..., None] * vf
+
+    # inter-chunk state scan. Contribution of step t to the end-of-chunk state
+    # decays by exp(l_tot - l_inc_t); in the k' = k*exp(-l_inc) basis that is
+    # exp(l_tot) * k'. l_tot enters the scan as per-chunk (B, H, Dh) slices.
+    def body(s, xs):
+        r_r, k_r, v_c, ltot = xs                 # (B,C,H,Dh) x3, (B,H,Dh)
+        y_in = jnp.einsum("bthk,bhkv->bthv", r_r, s)
+        decay = jnp.exp(ltot)                    # per-Dk-channel chunk decay
+        k_fold = k_r * decay[:, None]            # (B,C,H,Dh)
+        s_new = decay[..., None] * s + jnp.einsum("bthk,bthv->bhkv", k_fold, v_c)
+        return s_new, y_in
+
+    xs = (jnp.moveaxis(r_resc, 1, 0), jnp.moveaxis(k_resc, 1, 0),
+          jnp.moveaxis(vf, 1, 0),
+          jnp.moveaxis(l_tot, 1, 0))             # l_tot: (B,nc,H,Dh)->(nc,B,H,Dh)
+    s_fin, y_inter = jax.lax.scan(body, s0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)
+    y = (y_intra + y_inter).reshape(b, tp, h, dh)
+    return y[:, :t], s_fin
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, last):
+    """x_{t-1} stream: (B,T,D) with carry-in ``last`` (B,1,D)."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _head_norm(y, scale, eps):
+    """Per-head RMS norm of (B,T,H,Dh) (RWKV GroupNorm analogue)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+
+
+def _time_mix(x, lp, cfg, shift_last, wkv_state):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x_prev = _token_shift(x, shift_last)
+    xx = x_prev - x
+
+    xxx = x + xx * lp["mu_x"]
+    # LoRA projections in fp32 (small; CPU backend lacks bf16->f32 dots)
+    s5 = jnp.tanh(jnp.einsum("btd,dr->btr", xxx.astype(jnp.float32),
+                             lp["mix_w1"].astype(jnp.float32)))
+    s5 = s5.reshape(b, t, 5, _LORA_MIX)
+    mu_dyn = jnp.einsum("btfr,frd->btfd", s5, lp["mix_w2"].astype(jnp.float32))
+    mu = lp["mu_rkvwg"].astype(jnp.float32)[None, None] + mu_dyn  # (B,T,5,D)
+    xr, xk, xv, xw, xg = (x + xx * mu[:, :, i].astype(x.dtype) for i in range(5))
+
+    proj = lambda inp, w: jnp.einsum("btd,dhk->bthk", inp, w,
+                                     preferred_element_type=jnp.bfloat16)
+    r, k, v = proj(xr, lp["wr"]), proj(xk, lp["wk"]), proj(xv, lp["wv"])
+    g = jax.nn.silu(proj(xg, lp["wg"]).astype(jnp.float32))
+    r = shard(r, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "heads", "head_dim")
+    v = shard(v, "batch", "seq", "heads", "head_dim")
+
+    # Finch data-dependent decay, clamped for the chunked fp32 basis
+    ww = lp["w0"].astype(jnp.float32) + jnp.einsum(
+        "btd,dr,re->bte", xw.astype(jnp.float32),
+        lp["w_lora1"].astype(jnp.float32), lp["w_lora2"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.minimum(ww, math.log(-_LOGW_MIN)))
+    logw = logw.reshape(b, t, h, dh)
+
+    wkv_fn = wkv_scan_ref if t <= 2 else wkv_chunked   # decode fast path
+    y, wkv_new = wkv_fn(r, k, v, logw, lp["u"], wkv_state)
+    y = _head_norm(y, lp["ln_x"], cfg.norm_eps) * g
+    out = jnp.einsum("bthk,hkd->btd", y.astype(x.dtype), lp["wo"],
+                     preferred_element_type=jnp.bfloat16)
+    return out.astype(x.dtype), x[:, -1:], wkv_new
+
+
+def _channel_mix(x, lp, shift_last):
+    x_prev = _token_shift(x, shift_last)
+    xx = x_prev - x
+    xk = x + xx * lp["cmix_mu_k"]
+    xr = x + xx * lp["cmix_mu_r"]
+    kk = jnp.einsum("btd,df->btf", xk, lp["cmix_wk"],
+                    preferred_element_type=jnp.bfloat16)
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    kk = shard(kk, "batch", "seq", "mlp")
+    vv = jnp.einsum("btf,fd->btd", kk, lp["cmix_wv"],
+                    preferred_element_type=jnp.bfloat16)
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, lp["cmix_wr"],
+                                   preferred_element_type=jnp.float32))
+    return (rr.astype(x.dtype) * vv), x[:, -1:]
+
+
+def _layer(x, lp, cfg, state):
+    shift_t, wkv, shift_c = state
+    h, s_t_new, wkv_new = _time_mix(rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                    lp, cfg, shift_t, wkv)
+    x = x + h
+    x = shard(x, "batch", "residual_seq", "residual_embed")
+    h, s_c_new = _channel_mix(rms_norm(x, lp["ln2"], cfg.norm_eps), lp, shift_c)
+    x = x + h
+    x = shard(x, "batch", "residual_seq", "residual_embed")
+    return x, (s_t_new, wkv_new, s_c_new)
+
+
+def _layer_params(params, prefix="layers/"):
+    return {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def rwkv6_init_state(cfg, batch: int):
+    l, d, h, dh = cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "shift_t": jnp.zeros((l, batch, 1, d), jnp.bfloat16),
+        "wkv": jnp.zeros((l, batch, h, dh, dh), jnp.float32),
+        "shift_c": jnp.zeros((l, batch, 1, d), jnp.bfloat16),
+    }
+
+
+def rwkv6_forward(params, tokens, cfg, mode: str = "train", state=None,
+                  remat: bool = True, **_):
+    """Full-sequence forward. Returns (hidden, states or None)."""
+    b, t = tokens.shape
+    x = embed_tokens(params["embed/table"], tokens)
+    if state is None:
+        state = rwkv6_init_state(cfg, b)
+    lp_stack = _layer_params(params)
+
+    def body(x, sl):
+        lp, s_t, wkv, s_c = sl
+        x, new_state = _layer(x, lp, cfg, (s_t, wkv, s_c))
+        return x, new_state
+
+    if mode == "train" and remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    x, states = jax.lax.scan(
+        body, x, (lp_stack, state["shift_t"], state["wkv"], state["shift_c"]))
+    x = rms_norm(x, params["final_norm/w"], cfg.norm_eps)
+    if mode == "train":
+        return x, None
+    return x, {"shift_t": states[0], "wkv": states[1], "shift_c": states[2]}
+
+
+def rwkv6_decode_step(params, tokens, state, pos, cfg, **_):
+    """One-token step; the recurrence makes this O(1) in context length."""
+    hidden, new_state = rwkv6_forward(params, tokens, cfg, mode="decode",
+                                      state=state, remat=False)
+    return hidden, new_state

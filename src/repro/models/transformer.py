@@ -1,0 +1,271 @@
+"""Decoder-only transformer (dense + MoE families): gemma3, glm4, granite,
+yi, qwen2-vl (M-RoPE), qwen3-moe, mixtral (SWA).
+
+Layers are stacked on a leading axis and consumed with lax.scan; per-layer
+heterogeneity (gemma3's 5:1 local:global pattern, mixtral's SWA) is carried
+as scanned boolean/float flags selecting the attention mask and RoPE table —
+the computation structure is identical across layers, which keeps the HLO
+small and compile times tractable at 512 devices.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import (ParamSchema, Schema, apply_rope, attention,
+                     decode_attention, embed_tokens, head_mask, mrope_cache,
+                     mrope_positions, rms_norm, rope_cache,
+                     streaming_attention, swiglu)
+from .moe import moe_mlp
+
+__all__ = ["dense_schema", "dense_forward", "dense_decode_step", "init_cache"]
+
+
+def dense_schema(cfg) -> Schema:
+    l, d, h, kv, dh, f, vp = (cfg.n_layers, cfg.d_model, cfg.h_eff,
+                              cfg.kv_eff, cfg.d_head, cfg.d_ff,
+                              cfg.vocab_padded)
+    s: Schema = {
+        "embed/table": ParamSchema((vp, d), ("vocab", "embed")),
+        "final_norm/w": ParamSchema((d,), (None,), init="zeros"),
+        "layers/pre_attn_norm": ParamSchema((l, d), ("layers", None), init="zeros"),
+        "layers/pre_mlp_norm": ParamSchema((l, d), ("layers", None), init="zeros"),
+        "layers/wq": ParamSchema((l, d, h, dh), ("layers", "embed", "heads", "head_dim"),
+                                 std=0.02),
+        "layers/wk": ParamSchema((l, d, kv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "layers/wv": ParamSchema((l, d, kv, dh), ("layers", "embed", "kv_heads", "head_dim")),
+        "layers/wo": ParamSchema((l, h, dh, d), ("layers", "heads", "head_dim", "embed"),
+                                 std=0.02 / math.sqrt(2 * l)),
+    }
+    if cfg.n_experts:
+        e, fe = cfg.n_experts, cfg.d_ff
+        s.update({
+            "layers/router": ParamSchema((l, d, e), ("layers", "embed", None)),
+            "layers/we_gate": ParamSchema((l, e, d, fe), ("layers", "experts", "embed", "expert_mlp")),
+            "layers/we_up": ParamSchema((l, e, d, fe), ("layers", "experts", "embed", "expert_mlp")),
+            "layers/we_down": ParamSchema((l, e, fe, d), ("layers", "experts", "expert_mlp", "embed"),
+                                          std=0.02 / math.sqrt(2 * l)),
+        })
+    else:
+        s.update({
+            "layers/w_gate": ParamSchema((l, d, f), ("layers", "embed", "mlp")),
+            "layers/w_up": ParamSchema((l, d, f), ("layers", "embed", "mlp")),
+            "layers/w_down": ParamSchema((l, f, d), ("layers", "mlp", "embed"),
+                                         std=0.02 / math.sqrt(2 * l)),
+        })
+    if cfg.qk_norm:
+        s["layers/q_norm"] = ParamSchema((l, dh), ("layers", None), init="zeros")
+        s["layers/k_norm"] = ParamSchema((l, dh), ("layers", None), init="zeros")
+    if not cfg.tie_embeddings:
+        s["lm_head/table"] = ParamSchema((vp, d), ("vocab", "embed"))
+    return s
+
+
+def _layer_params(params, prefix="layers/"):
+    return {k[len(prefix):]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _is_local_flags(cfg):
+    return jnp.asarray([k == "local" for k in cfg.attn_kinds], dtype=bool)
+
+
+def _mlp(x, lp, cfg, n_groups):
+    if cfg.n_experts:
+        return moe_mlp(x, lp["router"], lp["we_gate"], lp["we_up"],
+                       lp["we_down"], cfg, n_groups)
+    return swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"])
+
+
+def _layer_body(x, lp, cfg, is_local, ropes, n_groups, mode):
+    """One transformer block. x (B,S,D). Returns (x', (k, v))."""
+    sin_g, cos_g, sin_l, cos_l = ropes
+    sin = jnp.where(is_local, sin_l, sin_g) if sin_l is not None else sin_g
+    cos = jnp.where(is_local, cos_l, cos_g) if cos_l is not None else cos_g
+
+    qk_scales = (lp["q_norm"], lp["k_norm"]) if cfg.qk_norm else None
+    h = rms_norm(x, lp["pre_attn_norm"], cfg.norm_eps)
+    attn_out, kv_out = _attention_flagged(h, lp, cfg, is_local, sin, cos,
+                                          qk_scales)
+    x = x + attn_out
+    x = shard(x, "batch", "residual_seq", "residual_embed")
+    h = rms_norm(x, lp["pre_mlp_norm"], cfg.norm_eps)
+    x = x + _mlp(h, lp, cfg, n_groups)
+    x = shard(x, "batch", "residual_seq", "residual_embed")
+    return x, kv_out
+
+
+def _attention_flagged(h, lp, cfg, is_local, sin, cos, qk_scales):
+    """attention() with the local/global choice as a traced flag: the band
+    constraint is ANDed into the causal mask weighted by the flag."""
+    b, s, _ = h.shape
+    nh, kv, dh = cfg.h_eff, cfg.kv_eff, cfg.d_head
+    g = nh // kv
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"], preferred_element_type=jnp.bfloat16)
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"], preferred_element_type=jnp.bfloat16)
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"], preferred_element_type=jnp.bfloat16)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    if qk_scales is not None:
+        q = rms_norm(q, qk_scales[0], cfg.norm_eps)
+        k = rms_norm(k, qk_scales[1], cfg.norm_eps)
+    if sin is not None:
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    qg = q.reshape(b, s, kv, g, dh)
+    if s > 2048:
+        # flash-style streaming path: O(chunk^2) memory instead of O(S^2)
+        ctx = streaming_attention(qg, k, v, is_local, cfg.window,
+                                  1.0 / math.sqrt(dh),
+                                  q_chunk=cfg.attn_q_chunk,
+                                  kv_chunk=cfg.attn_kv_chunk,
+                                  scores_bf16=cfg.scores_bf16)
+        ctx = ctx.astype(h.dtype).reshape(b, s, nh, dh)
+    else:
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                            preferred_element_type=jnp.float32) / math.sqrt(dh)
+        qi = jnp.arange(s)[:, None]
+        kj = jnp.arange(s)[None, :]
+        causal = kj <= qi
+        band = causal & (kj > qi - cfg.window) if cfg.window > 0 else causal
+        ok = jnp.where(is_local, band, causal)
+        scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+        probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+        ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v,
+                         preferred_element_type=jnp.bfloat16).reshape(b, s, nh, dh)
+    hm = head_mask(cfg, ctx.dtype)
+    if hm is not None:
+        ctx = ctx * hm[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", ctx, lp["wo"],
+                     preferred_element_type=jnp.bfloat16)
+    return out.astype(h.dtype), (k, v)
+
+
+def _decode_attention_flagged(q, k_cache, v_cache, pos, cfg, is_local):
+    """decode_attention with the local/global kind as a traced flag."""
+    b, _, h, dh = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    s_max = k_cache.shape[1]
+    qg = q.reshape(b, kv, g, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                        preferred_element_type=jnp.float32) / math.sqrt(dh)
+    t = jnp.arange(s_max)
+    ok = t <= pos
+    if cfg.window > 0:
+        ok &= ~is_local | (t > pos - cfg.window)
+    scores = jnp.where(ok[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgt,btkd->bkgd", probs, v_cache,
+                     preferred_element_type=jnp.bfloat16)
+    return ctx.reshape(b, 1, h, dh)
+
+
+def _ropes_for(cfg, positions, batch: int, seq: int):
+    """RoPE tables; gemma3-style dual theta (local layers may use 1e4)."""
+    if cfg.m_rope:
+        if positions is not None:  # decode: all three components equal
+            pos3 = jnp.broadcast_to(positions.astype(jnp.float32),
+                                    (3, batch, seq))
+        else:
+            pos3 = mrope_positions(batch, seq, cfg.n_vision_tokens)
+        half = cfg.d_head // 2
+        sec = (half - 2 * (half * 3 // 8), half * 3 // 8, half * 3 // 8)
+        sin, cos = mrope_cache(pos3, cfg.d_head, cfg.rope_theta, sec)
+        return sin, cos, None, None
+    pos = positions if positions is not None else jnp.arange(seq)
+    sin_g, cos_g = rope_cache(seq, cfg.d_head, cfg.rope_theta, positions=pos)
+    theta_l = 1e4 if cfg.rope_theta != 1e4 and "local" in cfg.attn_pattern else None
+    if theta_l is not None:
+        sin_l, cos_l = rope_cache(seq, cfg.d_head, theta_l, positions=pos)
+    else:
+        sin_l = cos_l = None
+    return sin_g, cos_g, sin_l, cos_l
+
+
+def dense_forward(params, tokens, cfg, mode: str = "train",
+                  vision_embeds=None, n_groups: int = 16, remat: bool = True):
+    """Full-sequence forward. Returns (hidden, kv_caches or None).
+
+    mode: 'train' (remat, no cache out) | 'prefill' (cache out).
+    """
+    b, s = tokens.shape
+    x = embed_tokens(params["embed/table"], tokens,
+                     scale=cfg.family == "dense" and cfg.vocab > 200_000)
+    if vision_embeds is not None and cfg.n_vision_tokens:
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embeds.astype(x.dtype), (0, 0, 0))
+
+    ropes = _ropes_for(cfg, None, b, s)
+    lp_stack = _layer_params(params)
+    flags = _is_local_flags(cfg)
+
+    def body(x, sl):
+        lp, is_local = sl
+        return _layer_body(x, lp, cfg, is_local, ropes, n_groups, mode)
+
+    if mode == "train" and remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    x, kv = jax.lax.scan(body, x, (lp_stack, flags))
+    x = rms_norm(x, params["final_norm/w"], cfg.norm_eps)
+    return x, (kv if mode == "prefill" else None)
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.kv_eff, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def dense_decode_step(params, tokens, cache, pos, cfg, n_groups: int = 16):
+    """One decode step. tokens (B, 1); cache dict of (L,B,S,KV,Dh); pos ().
+
+    Returns (hidden (B,1,D), updated cache).
+    """
+    b = tokens.shape[0]
+    x = embed_tokens(params["embed/table"], tokens,
+                     scale=cfg.family == "dense" and cfg.vocab > 200_000)
+    pos_arr = jnp.asarray([pos]) if jnp.ndim(pos) == 0 else pos
+    ropes = _ropes_for(cfg, pos_arr, b, 1)
+    lp_stack = _layer_params(params)
+    flags = _is_local_flags(cfg)
+
+    def body(x, sl):
+        lp, is_local, k_c, v_c = sl
+        sin_g, cos_g, sin_l, cos_l = ropes
+        sin = jnp.where(is_local, sin_l, sin_g) if sin_l is not None else sin_g
+        cos = jnp.where(is_local, cos_l, cos_g) if cos_l is not None else cos_g
+        qk_scales = ((lp["q_norm"], lp["k_norm"]) if cfg.qk_norm else None)
+
+        h = rms_norm(x, lp["pre_attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"], preferred_element_type=jnp.bfloat16)
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"], preferred_element_type=jnp.bfloat16)
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"], preferred_element_type=jnp.bfloat16)
+        if qk_scales is not None:
+            q = rms_norm(q, qk_scales[0], cfg.norm_eps)
+            k = rms_norm(k, qk_scales[1], cfg.norm_eps)
+        if sin is not None:
+            q = apply_rope(q, sin, cos)
+            k = apply_rope(k, sin, cos)
+        k_c = jax.lax.dynamic_update_slice(k_c, k.astype(k_c.dtype), (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v.astype(v_c.dtype), (0, pos, 0, 0))
+        k_c = shard(k_c, "batch", "kv_seq", "kv_heads", "head_dim")
+        v_c = shard(v_c, "batch", "kv_seq", "kv_heads", "head_dim")
+        ctx = _decode_attention_flagged(q, k_c, v_c, pos, cfg, is_local)
+        hm = head_mask(cfg, ctx.dtype)
+        if hm is not None:
+            ctx = ctx * hm[None, None, :, None]
+        attn_out = jnp.einsum("bshk,hkd->bsd", ctx, lp["wo"],
+                              preferred_element_type=jnp.bfloat16)
+        x = x + attn_out.astype(x.dtype)
+        h2 = rms_norm(x, lp["pre_mlp_norm"], cfg.norm_eps)
+        x = x + _mlp(h2, lp, cfg, n_groups)
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (lp_stack, flags, cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm/w"], cfg.norm_eps)
+    return x, {"k": k_new, "v": v_new}

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .schedules import cosine_schedule, linear_warmup_cosine

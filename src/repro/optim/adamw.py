@@ -1,0 +1,102 @@
+"""AdamW (from scratch, flat-dict pytrees) with mixed precision + ZeRO-1.
+
+Params live in bf16; the optimizer keeps fp32 master weights and moments.
+``opt_state_specs`` extends each param's logical axes with 'data' on the
+largest still-unsharded divisible dimension, sharding the fp32 state over the
+data axis as well (ZeRO-1): at 34B params this is the difference between
+17 GB and ~1 GB of optimizer bytes per chip. GSPMD inserts the corresponding
+gather when the updated master weights are cast back to the bf16 replicas.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(jnp.zeros_like, jax.tree.map(f32, params)),
+        "v": jax.tree.map(jnp.zeros_like, jax.tree.map(f32, params)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """One AdamW step. Returns (new bf16 params, new state, metrics)."""
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+
+    new_master, new_m, new_v, new_p = {}, {}, {}, {}
+    for k in params:
+        g = grads[k].astype(jnp.float32) * clip
+        m = cfg.b1 * state["m"][k] + (1 - cfg.b1) * g
+        v = cfg.b2 * state["v"][k] + (1 - cfg.b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        master = state["master"][k] * (1.0 - lr * cfg.weight_decay) - lr * upd
+        new_master[k], new_m[k], new_v[k] = master, m, v
+        new_p[k] = master.astype(params[k].dtype)
+    new_state = {"master": new_master, "m": new_m, "v": new_v, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "clip": clip}
+
+
+def opt_state_specs(param_specs: dict, mesh, param_shapes: dict,
+                    zero1: bool = True) -> dict:
+    """Logical-axis specs for the optimizer state (ZeRO-1 data sharding).
+
+    Must be called inside a use_sharding context: a dim is eligible for the
+    'zero' axis when its logical name *resolves* to no physical mesh axis
+    under the active rules (checking the logical name against None is wrong —
+    every dim has a logical name; what matters is whether it ended up
+    sharded)."""
+    from ..sharding import logical_spec
+
+    data_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            data_size *= mesh.shape[a]
+
+    def extend(path, axes):
+        if not zero1:
+            return axes
+        shape = param_shapes[path]
+        resolved = logical_spec(axes, shape)
+        best, best_dim = None, 0
+        for i, dim in enumerate(shape):
+            phys = resolved[i] if i < len(resolved) else None
+            if phys is None and dim % data_size == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best is None:
+            return axes
+        out = list(axes)
+        out[best] = "zero"  # logical axis mapped to ('pod','data')
+        return tuple(out)
+
+    per_param = {k: extend(k, v) for k, v in param_specs.items()}
+    return {"master": per_param, "m": per_param, "v": per_param,
+            "step": ()}

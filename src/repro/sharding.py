@@ -1,0 +1,183 @@
+"""Logical-axis sharding system (MaxText-style) for the model zoo.
+
+Model code annotates tensors with *logical* axis names; a per-(config, mesh,
+mode) rule table maps them to physical mesh axes. Rules degrade gracefully:
+a logical axis only maps to a mesh axis when the dimension is divisible by the
+axis size (checked at annotation time with the actual shape), else it is left
+replicated — this is what makes e.g. yi-34b (56 heads, 16-way model axis)
+lower cleanly by falling back to head_dim sharding.
+
+No global jax state: the active (mesh, rules) pair lives in a module-level
+context set by the trainer / dryrun; when unset, ``shard`` is the identity so
+single-device smoke tests never touch device placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AxisRules", "shard", "logical_spec", "use_sharding", "make_rules",
+           "named_sharding", "current_mesh"]
+
+
+@dataclasses.dataclass
+class _Ctx:
+    mesh: Mesh | None = None
+    rules: dict | None = None
+
+
+_CTX = _Ctx()
+
+
+# mapping: logical axis name -> mesh axis name, tuple of names, or None
+AxisRules = dict
+
+
+@contextmanager
+def use_sharding(mesh: Mesh, rules: AxisRules):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, (tuple, list)):
+        n = 1
+        for a in phys:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[phys]
+
+
+def logical_spec(names: Sequence[str | None], shape: Sequence[int] | None = None) -> P:
+    """Resolve logical names to a PartitionSpec under the active rules.
+
+    With ``shape`` given, any mapping whose mesh-axis size does not divide the
+    dimension is dropped (replicated) rather than erroring.
+    """
+    mesh, rules = _CTX.mesh, _CTX.rules
+    assert mesh is not None and rules is not None, "no active sharding context"
+    out = []
+    used: set = set()
+    for i, name in enumerate(names):
+        phys = rules.get(name) if name is not None else None
+        if phys is not None:
+            flat = tuple(phys) if isinstance(phys, (tuple, list)) else (phys,)
+            if any(a in used for a in flat):
+                phys = None  # mesh axis already consumed by an earlier dim
+            elif shape is not None and shape[i] % _axis_size(mesh, phys) != 0:
+                phys = None
+            else:
+                used.update(flat)
+        out.append(tuple(phys) if isinstance(phys, list) else phys)
+    return P(*out)
+
+
+def shard(x, *names: str | None):
+    """Annotate ``x`` with logical axes (identity when no context is active)."""
+    if _CTX.mesh is None:
+        return x
+    spec = logical_spec(names, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def named_sharding(names: Sequence[str | None], shape=None) -> NamedSharding:
+    return NamedSharding(_CTX.mesh, logical_spec(names, shape))
+
+
+def make_rules(cfg, mesh: Mesh, mode: str = "train",
+               decode_batch: int | None = None,
+               strategy: str = "tp") -> AxisRules:
+    """Build the logical->physical table for a model config on a mesh.
+
+    mode: 'train' / 'prefill' -> heads (or head_dim) sharded over 'model';
+          'decode'            -> KV-cache sequence sharded over 'model'
+                                 (cache dominates memory; attention math is
+                                 sequence-parallel through GSPMD reductions).
+    Long-context decode with batch==1 additionally routes 'kv_seq' over
+    ('data','model') via the divisibility fallback in logical_spec.
+
+    strategy 'tp' (default): megatron-style tensor parallelism over 'model'.
+    strategy 'tp_sp': TP + sequence parallelism — the inter-layer residual
+    stream shards its *sequence* dim over 'model' (instead of d_model), so
+    layer entry/exit become all-gather + reduce-scatter instead of
+    all-gather + all-reduce: ~1/3 less activation wire volume.
+    strategy 'fsdp': no tensor parallelism — batch shards over the *whole*
+    mesh and parameters/optimizer shard over it too (gathered per layer by
+    GSPMD). For small models (gemma3-1b at TP=16 spends 100x more time in
+    activation collectives than compute) this is the right point on the
+    same physical mesh; see EXPERIMENTS.md §Perf.
+    """
+    axes = dict(mesh.shape)
+    model = "model" if "model" in axes else None
+    data: tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
+    msize = axes.get("model", 1)
+
+    if strategy == "fsdp" and mode == "train":
+        full = data + ((model,) if model else ())
+        return {
+            "batch": full, "seq": None, "embed": None,
+            "residual_embed": None,
+            # params/grads/opt state shard over everything ('zero' is set by
+            # the caller to the same full tuple); weights gather per layer.
+            "vocab": model, "mlp": None, "heads": None, "kv_heads": None,
+            "head_dim": None, "experts": None, "expert_mlp": None,
+            "layers": None, "kv_seq": None, "state": None, "frames": None,
+        }
+
+    def div(n: int) -> bool:
+        return model is not None and n > 0 and n % msize == 0
+
+    heads_sharded = div(getattr(cfg, "h_eff", getattr(cfg, "n_heads", 0)))
+    rules: AxisRules = {
+        "batch": data,
+        "seq": None,
+        "embed": None,
+        # inter-layer residual stream: shard d_model over 'model' ('tp',
+        # ZeRO-R style) or the sequence dim ('tp_sp', megatron-SP style);
+        # layers gather as needed.
+        "residual_seq": model if strategy == "tp_sp" else None,
+        "residual_embed": (model if (strategy != "tp_sp"
+                                     and div(getattr(cfg, "d_model", 0)))
+                           else None),
+        "vocab": model if div(getattr(cfg, "vocab_padded", 0)) else None,
+        "mlp": model if div(getattr(cfg, "d_ff", 0)) else None,
+        "heads": model if heads_sharded else None,
+        "kv_heads": model if div(getattr(cfg, "kv_eff", getattr(cfg, "n_kv_heads", 0))) else None,
+        "head_dim": (model if (not heads_sharded and div(getattr(cfg, "d_head", 0)))
+                     else None),
+        "experts": model if div(getattr(cfg, "n_experts", 0)) else None,
+        "expert_mlp": None,
+        "layers": None,
+        "kv_seq": None,
+        "state": None,
+        "frames": None,
+    }
+    if getattr(cfg, "n_experts", 0) and not div(cfg.n_experts):
+        # e.g. mixtral 8 experts on a 16-way model axis: TP inside the expert
+        rules["expert_mlp"] = model if div(cfg.d_ff) else None
+    if mode == "decode":
+        # KV-cache length dominates decode memory: shard it over 'model'
+        # (plus 'data' first when batch=1 long-context decode can't use it).
+        # Weight sharding (heads/head_dim/mlp/vocab) stays as in train —
+        # GSPMD reshards the single new KV row into the cache layout.
+        bsz = decode_batch
+        if bsz is not None and data and bsz % _axis_size(mesh, data) != 0:
+            rules["batch"] = None
+            rules["kv_seq"] = tuple(data) + ((model,) if model else ())
+        else:
+            rules["kv_seq"] = model
+    return rules

@@ -1,0 +1,28 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: device count is deliberately NOT forced here — smoke tests run on the
+# single real CPU device. Multi-device tests spawn subprocesses with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 (see _multidev helper).
+import subprocess
+
+import pytest
+
+
+def run_multidev(code: str, n_dev: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with n_dev fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(f"multidev subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def multidev():
+    return run_multidev

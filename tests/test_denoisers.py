@@ -1,0 +1,66 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.denoisers import BernoulliGauss, eta, make_mmse_interp, mmse
+
+
+PRIOR = BernoulliGauss(eps=0.1, mu_s=0.0, sigma_s=1.0)
+
+
+def test_eta_shrinks_toward_zero():
+    f = np.linspace(-5, 5, 101)
+    out = eta(f, 0.5, PRIOR, xp=np)
+    assert np.all(np.abs(out) <= np.abs(f) + 1e-12)
+    # odd symmetry for mu_s = 0
+    np.testing.assert_allclose(out, -out[::-1], atol=1e-12)
+
+
+def test_eta_limits():
+    f = np.asarray([0.001, 3.0])
+    # tiny noise: eta(f) ~ f for f in the slab, ~0 near the spike
+    out = eta(f, 1e-6, PRIOR, xp=np)
+    assert abs(out[1] - 3.0) < 1e-3
+    # huge noise: eta -> prior mean (0)
+    out = eta(f, 1e6, PRIOR, xp=np)
+    assert np.all(np.abs(out) < 1e-3)
+
+
+def test_mmse_bounds_and_monotonicity():
+    v = np.geomspace(1e-6, 1e3, 50)
+    m = mmse(v, PRIOR)
+    # MMSE is bounded by the prior variance and by the channel-linear bound
+    assert np.all(m <= PRIOR.second_moment + 1e-9)
+    assert np.all(m <= v + 1e-9)
+    assert np.all(np.diff(m) >= -1e-12)  # nondecreasing in noise
+
+
+def test_mmse_interp_accuracy():
+    interp = make_mmse_interp(PRIOR)
+    v = np.geomspace(1e-5, 10, 23)
+    exact = mmse(v, PRIOR)
+    approx = interp(v)
+    np.testing.assert_allclose(approx, exact, rtol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(eps=st.floats(0.01, 0.9), sigma2=st.floats(1e-4, 1e2),
+       mu=st.floats(-1.0, 1.0))
+def test_eta_is_posterior_mean_bounded(eps, sigma2, mu):
+    prior = BernoulliGauss(eps=eps, mu_s=mu, sigma_s=1.0)
+    f = np.linspace(-10, 10, 41)
+    out = eta(f, sigma2, prior, xp=np)
+    assert np.all(np.isfinite(out))
+    # posterior mean lies between 0 (spike) and the slab posterior mean
+    slab = (mu * sigma2 + f * 1.0) / (1.0 + sigma2)
+    lo = np.minimum(0.0, slab) - 1e-9
+    hi = np.maximum(0.0, slab) + 1e-9
+    assert np.all(out >= lo) and np.all(out <= hi)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma2=st.floats(1e-3, 10.0))
+def test_mmse_quadrature_stable(sigma2):
+    a = mmse(np.asarray([sigma2]), PRIOR, n_nodes=2001)[0]
+    b = mmse(np.asarray([sigma2]), PRIOR, n_nodes=6001)[0]
+    assert abs(a - b) / max(a, 1e-12) < 1e-2

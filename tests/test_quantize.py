@@ -1,0 +1,77 @@
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.denoisers import BernoulliGauss
+from repro.core.quantize import (GaussMixture, HIGH_RATE_ECSQ_GAP_BITS,
+                                 delta_for_rate_ecsq, delta_for_sigma_q2,
+                                 dequantize_midtread, ecsq_entropy,
+                                 message_mixture, quantize_midtread)
+
+MIX = message_mixture(BernoulliGauss(eps=0.1), sigma_t2=0.05, n_proc=30)
+
+
+def test_entropy_decreasing_in_delta():
+    deltas = np.geomspace(1e-4, 1.0, 30) * math.sqrt(MIX.variance)
+    h = ecsq_entropy(deltas, MIX)
+    assert np.all(np.diff(h) <= 1e-9)
+
+
+def test_high_rate_entropy_formula():
+    """H_Q(Delta) -> h(F) - log2(Delta) in the fine-quantization limit."""
+    from repro.core.rate_distortion import gauss_mixture_entropy
+    # build the equivalent scaled source: F^p has a two-component mixture pdf
+    sd = math.sqrt(MIX.variance)
+    delta = sd * 2.0**-8
+    h_q = ecsq_entropy(delta, MIX)[0]
+    # differential entropy via the same mixture (numerical)
+    import scipy.integrate as si
+    xs = np.linspace(*MIX.std_span(12.0), 400001)
+    from scipy.stats import norm
+    pdf = sum(w * norm.pdf(xs, m, math.sqrt(v))
+              for w, m, v in zip(MIX.w, MIX.mu, MIX.var))
+    h_diff = -si.simpson(pdf * np.log2(np.maximum(pdf, 1e-300)), x=xs)
+    assert abs(h_q - (h_diff - math.log2(delta))) < 2e-2
+
+
+def test_rate_inversion_roundtrip():
+    for rate in (1.0, 2.5, 5.0):
+        d = delta_for_rate_ecsq(rate, MIX)
+        h = ecsq_entropy(d, MIX)[0]
+        assert abs(h - rate) < 5e-3
+
+
+def test_delta_sigma_q2_relation():
+    assert abs(delta_for_sigma_q2(1.0 / 12.0) - 1.0) < 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(delta=st.floats(1e-3, 10.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_midtread_error_bound(delta, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=1000) * 3.0
+    q = quantize_midtread(x, delta, xp=np)
+    xr = dequantize_midtread(q, delta)
+    assert np.all(np.abs(xr - x) <= delta / 2 + 1e-12)
+
+
+def test_quantization_error_statistics():
+    """Widrow condition: Delta <= 2 sigma -> error ~ U[-D/2, D/2], uncorrelated."""
+    rng = np.random.default_rng(0)
+    sigma = math.sqrt(MIX.variance)
+    delta = 1.0 * sigma
+    comp = rng.random(200_000) < MIX.w[0]
+    x = np.where(comp,
+                 rng.normal(MIX.mu[0], math.sqrt(MIX.var[0]), 200_000),
+                 rng.normal(MIX.mu[1], math.sqrt(MIX.var[1]), 200_000))
+    err = dequantize_midtread(quantize_midtread(x, delta, xp=np), delta) - x
+    assert abs(err.var() - delta**2 / 12) / (delta**2 / 12) < 0.03
+    corr = np.corrcoef(err, x)[0, 1]
+    assert abs(corr) < 0.02
+
+
+def test_ecsq_gap_constant():
+    assert abs(HIGH_RATE_ECSQ_GAP_BITS - 0.2546) < 1e-3

@@ -1,0 +1,76 @@
+import numpy as np
+import pytest
+
+from repro.core.denoisers import BernoulliGauss, make_mmse_interp
+from repro.core.rate_alloc import BTController, bt_schedule_offline, dp_allocate
+from repro.core.rate_distortion import RDModel
+from repro.core.state_evolution import CSProblem, se_trajectory
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    prob = CSProblem(prior=BernoulliGauss(eps=0.05))
+    rd = RDModel(prob.prior)
+    mm = make_mmse_interp(prob.prior)
+    return prob, rd, mm
+
+
+def test_dp_uses_full_budget(ctx):
+    prob, rd, mm = ctx
+    dp = dp_allocate(prob, 30, 10, 20.0, rd=rd, mmse_fn=mm)
+    assert abs(dp.rates.sum() - 20.0) < 1e-9
+    assert np.all(dp.rates >= 0)
+
+
+def test_dp_beats_uniform_allocation(ctx):
+    """DP optimality: no worse than the uniform 2-bit schedule."""
+    prob, rd, mm = ctx
+    t, r = 10, 20.0
+    dp = dp_allocate(prob, 30, t, r, rd=rd, mmse_fn=mm)
+    # simulate uniform schedule through the same quantized-SE recursion
+    sig = prob.sigma0_2
+    for _ in range(t):
+        sq2 = float(rd.distortion_msg(r / t, sig, 30))
+        sig = prob.sigma_e2 + float(mm(sig + 30 * sq2)) / prob.kappa
+    assert dp.sigma2_d[-1] <= sig + 1e-12
+
+
+def test_dp_rates_increase_with_iteration(ctx):
+    """Paper Fig. 1: optimal allocation spends more bits in later iterations."""
+    prob, rd, mm = ctx
+    dp = dp_allocate(prob, 30, 10, 20.0, rd=rd, mmse_fn=mm)
+    # overall increasing trend (allow small plateaus)
+    assert dp.rates[-1] >= dp.rates[0]
+    assert np.sum(np.diff(dp.rates) < -0.25) == 0
+
+
+def test_dp_monotone_in_budget(ctx):
+    prob, rd, mm = ctx
+    d1 = dp_allocate(prob, 30, 8, 8.0, rd=rd, mmse_fn=mm)
+    d2 = dp_allocate(prob, 30, 8, 16.0, rd=rd, mmse_fn=mm)
+    assert d2.sigma2_d[-1] <= d1.sigma2_d[-1] + 1e-12
+
+
+def test_bt_respects_caps_and_ratio(ctx):
+    prob, rd, mm = ctx
+    t = 10
+    rates, sig = bt_schedule_offline(prob, 30, t, c_ratio=1.002, r_max=6.0,
+                                     rate_model="rd", rd=rd, mmse_fn=mm)
+    assert np.all(rates <= 6.0 + 1e-9)
+    cen = se_trajectory(prob, t, mmse_fn=mm)
+    # wherever the rate cap did NOT bind, the ratio constraint holds
+    unbound = rates < 6.0 - 1e-6
+    ratio = sig[1:][unbound] / cen[1:][unbound]
+    assert np.all(ratio <= 1.002 + 1e-6)
+
+
+def test_bt_controller_online_matches_offline_on_se(ctx):
+    """Feeding the controller the SE trajectory reproduces the offline rates."""
+    prob, rd, mm = ctx
+    t = 8
+    off_rates, off_sig = bt_schedule_offline(prob, 30, t, 1.002, 6.0, "rd",
+                                             rd, mm)
+    ctrl = BTController(prob, 30, t, 1.002, 6.0, "rd", rd, mm)
+    for i in range(t):
+        ctrl(i, float(off_sig[i]))
+    np.testing.assert_allclose(ctrl.rates, off_rates, atol=1e-6)

@@ -1,0 +1,64 @@
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.denoisers import BernoulliGauss
+from repro.core.rate_distortion import (RDModel, ba_rd_curve,
+                                        gauss_mixture_entropy)
+
+
+def test_ba_matches_gaussian_closed_form():
+    """eps=1 reduces the source to a pure Gaussian: R(D) = 1/2 log2(var/D)."""
+    prior = BernoulliGauss(eps=1.0, mu_s=0.0, sigma_s=1.0)
+    r, d = ba_rd_curve(prior, 0.5, n_grid=513, n_beta=24)
+    var = 1.25
+    mask = r > 0.25
+    d_true = var * 2.0 ** (-2 * r[mask])
+    # 7%: the last valid BA point sits at the D >= 30 dx^2 grid boundary,
+    # where the discretized R(D) deviates by ~6% at this grid size
+    np.testing.assert_allclose(d[mask], d_true, rtol=0.07)
+
+
+def test_gaussian_entropy_quadrature():
+    prior = BernoulliGauss(eps=1.0, mu_s=0.0, sigma_s=1.0)
+    h = gauss_mixture_entropy(prior, 0.5)
+    h_true = 0.5 * math.log2(2 * math.pi * math.e * 1.25)
+    assert abs(h - h_true) < 1e-4
+
+
+def test_rd_model_monotone_and_bounded():
+    prior = BernoulliGauss(eps=0.1)
+    rd = RDModel(prior)
+    rates = np.linspace(0, 8, 81)
+    for sp in (0.2, 1.0, 3.0):
+        d = rd.distortion_g(rates, np.full_like(rates, sp))
+        assert np.all(np.diff(d) <= 1e-12), sp
+        # 0.5% slack: the BA grid's discretized source variance slightly
+        # exceeds the continuous one (~dx^2/12 + interpolation in sigma')
+        assert d[0] <= (prior.second_moment + sp**2) * 1.005 + 1e-6
+        # Shannon lower bound holds
+        h = gauss_mixture_entropy(prior, sp)
+        slb = 2.0 ** (2 * (h - rates)) / (2 * math.pi * math.e)
+        assert np.all(d >= slb * 0.999)
+
+
+def test_distortion_msg_scaling():
+    """D_{F^p}(R) = D_G(R) / P^2 with sigma' = sqrt(P sigma_t^2)."""
+    prior = BernoulliGauss(eps=0.1)
+    rd = RDModel(prior)
+    p, s2 = 30, 0.04
+    got = rd.distortion_msg(2.0, s2, p)
+    expect = rd.distortion_g(np.asarray(2.0),
+                             np.asarray(math.sqrt(p * s2))) / p**2
+    np.testing.assert_allclose(got, expect, rtol=1e-12)
+
+
+def test_rate_inverse_consistency():
+    prior = BernoulliGauss(eps=0.1)
+    rd = RDModel(prior)
+    s2, p = 0.04, 30
+    for rate in (0.8, 2.0, 3.5):
+        d = float(rd.distortion_msg(rate, s2, p))
+        r_back = rd.rate_for_msg_distortion(d, s2, p)
+        assert abs(r_back - rate) < 0.06, (rate, r_back)

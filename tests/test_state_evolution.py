@@ -1,0 +1,48 @@
+import numpy as np
+import pytest
+
+from repro.core.denoisers import BernoulliGauss, make_mmse_interp
+from repro.core.state_evolution import (CSProblem, sdr, se_trajectory,
+                                        se_trajectory_quantized,
+                                        steady_state_iters)
+
+
+@pytest.mark.parametrize("eps,expected_T", [(0.03, 8), (0.05, 10), (0.10, 18)])
+def test_steady_state_read_off(eps, expected_T):
+    """Paper Sec. 4 reads T = 8/10/20 off Fig. 1. Our SE (corrected MMSE
+    quadrature, validated against Monte Carlo + AMP simulation) reads
+    8/10/18 at 0.15 dB/iter: the eps=0.1 curve's last two iterations each
+    gain <0.15 dB. Table-1 reproduction uses the paper's own T (PAPER_T)."""
+    prob = CSProblem(prior=BernoulliGauss(eps=eps))
+    assert steady_state_iters(prob) == expected_T
+
+
+def test_paper_t_constants():
+    from repro.core.state_evolution import PAPER_T
+    assert PAPER_T == {0.03: 8, 0.05: 10, 0.10: 20}
+
+
+def test_se_monotone_decreasing():
+    prob = CSProblem(prior=BernoulliGauss(eps=0.05))
+    traj = se_trajectory(prob, 30)
+    assert np.all(np.diff(traj) <= 1e-12)
+    assert traj[-1] >= prob.sigma_e2  # bounded below by the noise floor
+
+
+def test_quantized_se_dominates_clean_se():
+    """Quantization noise can only hurt: sigma_{t,D} >= sigma_{t,C}."""
+    prob = CSProblem(prior=BernoulliGauss(eps=0.05))
+    mm = make_mmse_interp(prob.prior)
+    clean = se_trajectory(prob, 10, mmse_fn=mm)
+    noisy = se_trajectory_quantized(prob, np.full(10, 1e-4), 30, mmse_fn=mm)
+    assert np.all(noisy >= clean - 1e-12)
+    # and vanishing quantization noise recovers the clean SE
+    tiny = se_trajectory_quantized(prob, np.full(10, 1e-12), 30, mmse_fn=mm)
+    np.testing.assert_allclose(tiny, clean, rtol=1e-6)
+
+
+def test_sdr_snr_consistency():
+    prob = CSProblem(prior=BernoulliGauss(eps=0.1), snr_db=20.0)
+    # at sigma_t^2 = sigma_0^2 (x=0), SDR = 0 dB by construction
+    assert abs(sdr(prob.sigma0_2, prob)) < 1e-9
+    assert abs(10 * np.log10(prob.rho / prob.sigma_e2) - 20.0) < 1e-12
