@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core.amp import amp_solve, sample_problem
 from repro.core.denoisers import BernoulliGauss, make_mmse_interp
+from repro.core.engine import DPSchedule
 from repro.core.mp_amp import MPAMPConfig, mp_amp_solve
 from repro.core.rate_alloc import BTController, bt_schedule_offline, dp_allocate
 from repro.core.rate_distortion import RDModel
@@ -74,8 +75,7 @@ def run_fig1(eps: float, seed: int = 0) -> dict:
     out["dp_sdr_rd"] = sdr(dp.sigma2_d[1:], prob)
     # ECSQ implementation: quantizer bins sized to hit the DP distortions
     # predicted offline (paper: "+0.255 bits"); entropy measured empirically.
-    deltas = np.sqrt(12.0 * np.maximum(
-        rd.distortion_msg(dp.rates, dp.sigma2_d[:-1], N_PROC), 1e-30))
+    deltas = DPSchedule(dp, rd, N_PROC).deltas
     dp_sim = mp_amp_solve(y, a, prob.prior, MPAMPConfig(N_PROC, t_star),
                           deltas, s0=s0, sigma2_for_model=dp.sigma2_d[:-1])
     out["dp_sdr_sim"] = mse_to_sdr(prob, dp_sim.mse)

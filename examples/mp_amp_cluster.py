@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.amp import amp_solve, sample_problem
 from repro.core.denoisers import BernoulliGauss, make_mmse_interp
+from repro.core.engine import DPSchedule
 from repro.core.mp_amp import MPAMPConfig, mp_amp_solve
 from repro.core.rate_alloc import BTController, dp_allocate
 from repro.core.rate_distortion import RDModel
@@ -47,8 +48,7 @@ def part1_paper_experiment():
           f"{bt.total_bits_empirical:6.2f} bits/elem (paper: 49.19)")
 
     dp = dp_allocate(prob, 30, t, 2.0 * t, rd=rd, mmse_fn=mm)
-    deltas = np.sqrt(12 * np.maximum(
-        rd.distortion_msg(dp.rates, dp.sigma2_d[:-1], 30), 1e-30))
+    deltas = DPSchedule(dp, rd, 30).deltas
     dps = mp_amp_solve(y, a, prior, MPAMPConfig(30, t), deltas, s0=s0,
                        sigma2_for_model=dp.sigma2_d[:-1])
     print(f"DP-MP-AMP   : SDR {sdr(dps.mse[-1]):6.2f} dB, "
@@ -57,12 +57,12 @@ def part1_paper_experiment():
 
 def part2_mesh_solver():
     print("\n=== Part 2: SPMD mesh solver (8 devices, int8 fusion) ===")
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     prior = BernoulliGauss(eps=0.1)
     prob = CSProblem(n=4000, m=1200, prior=prior)
     s0, a, y = sample_problem(jax.random.PRNGKey(1), prob.n, prob.m, prior,
                               prob.sigma_e2)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     sdr = lambda x: 10 * np.log10(prior.second_moment / np.mean((x - s0) ** 2))
 
     for label, scfg in [

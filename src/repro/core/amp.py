@@ -7,6 +7,12 @@
 The channel variance fed to the conditional-mean denoiser is the standard
 plug-in estimate  sigma_hat_t^2 = ||z_t||^2 / M  [Bayati-Montanari; paper
 Sec. 3.3], making the solver fully data-driven.
+
+This is the P=1, lossless-fusion frontend of the unified ``core/engine.py``
+solver: with one processor the LC/GC split reduces exactly to the
+centralized recursion above (same iterates, bit-for-bit math), so the whole
+solve is one scan-compiled engine call. ``amp_iteration`` is kept as the
+public single-step API.
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .denoisers import BernoulliGauss, eta
+from .engine import AmpEngine, EngineConfig, ExactFusion
 
 __all__ = ["AMPState", "amp_iteration", "amp_solve", "sample_problem"]
 
@@ -49,23 +56,14 @@ def amp_iteration(x, z, y, a_mat, prior: BernoulliGauss):
 
 def amp_solve(y, a_mat, prior: BernoulliGauss, n_iter: int,
               s0: np.ndarray | None = None) -> AMPTrace:
-    """Run centralized AMP for ``n_iter`` iterations (jit-scanned)."""
-    m, n = a_mat.shape
-    y = jnp.asarray(y, dtype=jnp.float32)
-    a = jnp.asarray(a_mat, dtype=jnp.float32)
-
-    def step(carry, _):
-        x, z = carry
-        x_new, z_new, s2 = amp_iteration(x, z, y, a, prior)
-        return (x_new, z_new), (s2, x_new if s0 is not None else jnp.zeros(()))
-
-    init = (jnp.zeros(n, jnp.float32), y)
-    (x, _), (s2s, xs) = jax.lax.scan(step, init, None, length=n_iter)
-    mse = None
-    if s0 is not None:
-        s0 = np.asarray(s0)
-        mse = np.asarray([float(np.mean((np.asarray(xi) - s0) ** 2)) for xi in xs])
-    return AMPTrace(x=np.asarray(x), sigma2_hat=np.asarray(s2s), mse=mse)
+    """Run centralized AMP for ``n_iter`` iterations (one engine scan)."""
+    engine = AmpEngine(
+        prior, EngineConfig(n_proc=1, n_iter=n_iter, collect_symbols=False,
+                            collect_xs=s0 is not None),
+        ExactFusion())
+    trace = engine.solve(y, a_mat)
+    mse = trace.mse(s0) if s0 is not None else None
+    return AMPTrace(x=trace.x, sigma2_hat=trace.sigma2_hat, mse=mse)
 
 
 def sample_problem(key, n: int, m: int, prior: BernoulliGauss, sigma_e2: float):

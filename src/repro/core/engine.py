@@ -1,0 +1,579 @@
+"""Unified scan-compiled MP-AMP engine (DESIGN.md §3).
+
+The paper's algorithm family — centralized AMP, lossless MP-AMP, ECSQ
+MP-AMP with fixed / DP / BT rate schedules, int8/int4 block-quantized
+fusion — is one iteration body parameterized by
+
+  * a **Transport**: how the per-processor fusion messages f_t^p are
+    compressed before the sum at the fusion center
+    (``ExactFusion`` | ``EcsqTransport`` | ``BlockQuantTransport``), and
+  * a **RateController**: how the quantizer resolution is chosen per
+    iteration (``FixedSchedule`` | ``DPSchedule`` | ``BTRateControl``).
+
+``AmpEngine`` runs the full T-iteration solve as a *single* ``lax.scan``
+over that body — including BT back-tracking rate control, re-expressed as a
+fixed-count in-graph bisection against precomputed MMSE/rate tables — so
+there is no per-iteration host round-trip (the ``float(s2)`` syncs of the
+pre-engine ``mp_amp.py`` host loop). A ``vmap``-batched ``solve_many``
+solves many CS instances at once (the serving scenario), and the local
+computation routes through the ``kernels/amp_fused`` Pallas kernel on TPU.
+
+``core/amp.py`` (centralized), ``core/mp_amp.py`` (emulated multi-processor)
+and ``launch/solver.py`` (mesh-distributed) are thin frontends over this
+module; arbitrary Python rate-controller callables are still supported via
+``solve_host_loop``, which reuses the exact same jitted iteration body one
+step at a time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.amp_fused.ops import amp_local_step
+from .compression import (QuantConfig, dequantize_blocks, quant_noise_var,
+                          quantize_blocks)
+from .denoisers import BernoulliGauss, eta
+from .quantize import dequantize_midtread, message_mixture, quantize_midtread
+from .rate_alloc import BTController, rate_for_sigma_q2
+from .rate_distortion import RDModel
+from .state_evolution import CSProblem
+
+__all__ = [
+    "AmpEngine", "EngineConfig", "EngineTrace",
+    "Transport", "ExactFusion", "EcsqTransport", "BlockQuantTransport",
+    "RateController", "FixedSchedule", "DPSchedule", "BTRateControl",
+    "amp_gc_step", "split_problem",
+]
+
+
+# ---------------------------------------------------------------------------
+# shared iteration pieces
+# ---------------------------------------------------------------------------
+
+def split_problem(a_mat: np.ndarray, y: np.ndarray, n_proc: int):
+    """Row-partition (A, y) across processors: (P, M/P, N), (P, M/P)."""
+    m, n = a_mat.shape
+    assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
+    mp = m // n_proc
+    return a_mat.reshape(n_proc, mp, n), y.reshape(n_proc, mp)
+
+
+def amp_gc_step(f, denoise_var, prior: BernoulliGauss, kappa):
+    """GC tail shared by every frontend: denoise + Onsager coefficient."""
+    eta_fn = lambda v: eta(v, denoise_var, prior, xp=jnp)
+    x_new = eta_fn(f)
+    onsager_new = jax.grad(lambda v: jnp.sum(eta_fn(v)))(f).mean() / kappa
+    return x_new, onsager_new
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class Transport(Protocol):
+    """Fusion-message compression: (P, N) messages -> fused (N,) estimate.
+
+    ``fuse`` must be pure jnp (it runs inside jit/scan/vmap) and returns
+    ``(f, extra_var, symbols)`` where ``extra_var`` is the additional
+    denoiser variance injected by compression (the paper's P*sigma_Q^2
+    accounting) and ``symbols`` the per-processor quantizer indices for
+    empirical-rate accounting (all-zeros when not applicable).
+    """
+
+    def fuse(self, f_p, delta): ...  # pragma: no cover - protocol
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactFusion:
+    """Lossless fusion (centralized AMP / the paper's 32-bit baseline)."""
+
+    def fuse(self, f_p, delta):
+        return jnp.sum(f_p, axis=0), jnp.zeros(()), jnp.zeros_like(f_p)
+
+
+@dataclasses.dataclass(frozen=True)
+class EcsqTransport:
+    """Midtread uniform quantizer per message (paper Sec. 3.2).
+
+    ``delta`` is the bin size chosen by the rate controller; non-finite
+    delta means lossless fusion at that iteration. Rate accounting is the
+    ECSQ entropy H_Q (analytic) plus the empirical entropy of ``symbols``
+    — both computed by the frontends from the returned trace.
+    """
+
+    def fuse(self, f_p, delta):
+        n_proc = f_p.shape[0]
+        lossless = ~jnp.isfinite(delta)
+        safe_delta = jnp.where(lossless, 1.0, delta)
+        q = quantize_midtread(f_p, safe_delta)
+        f_q = jnp.where(lossless, f_p, dequantize_midtread(q, safe_delta))
+        f = jnp.sum(f_q, axis=0)
+        extra = jnp.where(lossless, 0.0, n_proc * safe_delta**2 / 12.0)
+        return f, extra, q
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockQuantTransport:
+    """Per-block max-abs int8/int4 quantization (the compressed_psum wire
+    format of core/compression.py, emulated over the leading P axis).
+
+    The rate is fixed by the wire width (``bits`` + bf16 scale per block)
+    instead of a controller, so ``delta`` is ignored; noise accounting uses
+    the realized per-block bin sizes exactly like ``compressed_psum``.
+    """
+
+    bits: int = 8
+    block: int = 512
+
+    @property
+    def qc(self) -> QuantConfig:
+        return QuantConfig(bits=self.bits, block=self.block)
+
+    def fuse(self, f_p, delta):
+        n_proc, n = f_p.shape
+        qc = self.qc
+        q, scale = quantize_blocks(f_p, qc)
+        deq = dequantize_blocks(q, scale, qc, orig_len=n)
+        f = jnp.sum(deq, axis=0)
+        extra = quant_noise_var(scale, qc) * n_proc
+        return f, extra, q[..., :n].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# rate controllers
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class RateController(Protocol):
+    """Chooses the quantizer bin size for iteration ``t``.
+
+    ``delta_for`` must be pure jnp; it receives the traced iteration index
+    and the post-LC plug-in estimate sigma_hat_{t,D}^2 and returns
+    ``(delta, rate_bits)`` (rate = +inf when the controller does not track
+    a coding rate, e.g. fixed schedules whose H_Q is computed offline).
+    """
+
+    n_iter: int
+
+    def delta_for(self, t, sigma2_hat): ...  # pragma: no cover - protocol
+
+
+class FixedSchedule:
+    """Predetermined per-iteration bin sizes (np.inf = lossless)."""
+
+    def __init__(self, deltas):
+        self.deltas = np.asarray(deltas, np.float32)
+        self.n_iter = len(self.deltas)
+
+    def delta_for(self, t, sigma2_hat):
+        return jnp.asarray(self.deltas)[t], jnp.float32(jnp.inf)
+
+
+class DPSchedule(FixedSchedule):
+    """Offline-optimal DP allocation realized as ECSQ bin sizes.
+
+    Converts a ``dp_allocate`` result to the bin sizes hitting the DP's
+    predicted per-iteration distortions (paper's "+0.255 bits" ECSQ
+    implementation; mirrors benchmarks/paper_repro.py).
+    """
+
+    def __init__(self, dp_result, rd: RDModel, n_proc: int):
+        sq2 = np.maximum(
+            rd.distortion_msg(dp_result.rates, dp_result.sigma2_d[:-1],
+                              n_proc), 1e-30)
+        super().__init__(np.sqrt(12.0 * sq2))
+        self.rates = np.asarray(dp_result.rates)
+        self.sigma2_d = np.asarray(dp_result.sigma2_d)
+
+
+class BTRateControl:
+    """In-graph BT back-tracking (paper Sec. 3.3), scan/jit/vmap-safe.
+
+    Re-expresses ``rate_alloc.BTController`` as fixed-count jittable loops:
+
+      * the MMSE SE map is a log-log interpolation table (same 400-point
+        grid as ``make_mmse_interp``),
+      * the bracket-growth ``while`` and the 80-step bisection for the
+        largest admissible sigma_Q^2 become ``lax.fori_loop``s,
+      * the rate model (ECSQ entropy or RD function) is a bilinear table
+        over (log sigma_t^2, log2 u), u = Delta/sd(F^p), built from the
+        same ``rate_alloc`` helpers the host controller calls, with a
+        fixed-count bisection for the r_max cap inversion.
+
+    Tables are built once at construction (host side); the per-iteration
+    decision then runs entirely inside the solver scan.
+    """
+
+    def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
+                 c_ratio: float = 1.05, r_max: float = 6.0,
+                 rate_model: str = "ecsq", rd: RDModel | None = None,
+                 mmse_fn=None, n_s2_grid: int = 25, n_u_grid: int = 61):
+        host = BTController(prob, n_proc, n_iter, c_ratio, r_max,
+                            rate_model, rd, mmse_fn)
+        self.host = host
+        self.prob = prob
+        self.n_proc = n_proc
+        self.n_iter = n_iter
+        self.c_ratio = c_ratio
+        self.r_max = r_max
+
+        # (1) MMSE interp table — same grid as make_mmse_interp, evaluated
+        # through the host controller's own mmse_fn so both agree.
+        grid_v = np.geomspace(1e-9, 1e3, 400)
+        grid_m = np.maximum(np.asarray(host.mmse_fn(grid_v), np.float64),
+                            1e-300)
+        self._log_v = jnp.asarray(np.log(grid_v), jnp.float32)
+        self._log_m = jnp.asarray(np.log(grid_m), jnp.float32)
+
+        # (2) per-iteration targets c * sigma_{t+1,C}^2
+        self._targets = jnp.asarray(c_ratio * host.sigma2_c[1:], jnp.float32)
+
+        # (3) rate table R(log s2, log2 u), u = Delta / sd(F^p | s2)
+        s2_lo = max(prob.sigma_e2 * 1e-2, 1e-9)
+        s2_hi = prob.sigma0_2 * 8.0
+        s2_grid = np.geomspace(s2_lo, s2_hi, n_s2_grid)
+        log2u_grid = np.linspace(-12.0, 5.0, n_u_grid)
+        tab = np.empty((n_s2_grid, n_u_grid))
+        sds = np.empty(n_s2_grid)
+        for i, s2 in enumerate(s2_grid):
+            sds[i] = math.sqrt(message_mixture(prob.prior, float(s2),
+                                               n_proc).variance)
+            for j, lu in enumerate(log2u_grid):
+                delta = sds[i] * 2.0**lu
+                tab[i, j] = rate_for_sigma_q2(delta**2 / 12.0, float(s2),
+                                              prob, n_proc, host.rate_model,
+                                              host.rd)
+        self._log_s2_grid = jnp.asarray(np.log(s2_grid), jnp.float32)
+        self._log2u_grid = jnp.asarray(log2u_grid, jnp.float32)
+        # store the excess over the high-rate line, G = R + log2(u): G is
+        # nearly flat where the quantizer is fine (R ~ h - log2 Delta), so
+        # bilinear interpolation of G is far more accurate than of R itself
+        self._gap_tab = jnp.asarray(tab + log2u_grid[None, :], jnp.float32)
+
+        # (4) dedicated 1D cap curve sigma_Q^2(r_max; s2): per-row inversion
+        # of the table (G is ~flat in u, so in-row accuracy ~ the host
+        # inverter's own tolerance), cubic-resampled along log s2 — the
+        # r_max-binding branch is where BT spends most iterations, so it
+        # gets its own high-accuracy path instead of the bilinear lookup.
+        from scipy.interpolate import CubicSpline
+        cap_lsq2 = np.empty(n_s2_grid)
+        for i in range(n_s2_grid):
+            g_row = CubicSpline(log2u_grid, tab[i] + log2u_grid)
+            lo, hi = log2u_grid[0], log2u_grid[-1]
+            for _ in range(60):
+                mid = 0.5 * (lo + hi)
+                if g_row(mid) - mid > r_max:
+                    lo = mid
+                else:
+                    hi = mid
+            lu_star = 0.5 * (lo + hi)
+            cap_lsq2[i] = (2.0 * math.log(sds[i] * 2.0**lu_star)
+                           - math.log(12.0))
+        dense_ls2 = np.linspace(math.log(s2_grid[0]), math.log(s2_grid[-1]),
+                                512)
+        cap_dense = CubicSpline(np.log(s2_grid), cap_lsq2)(dense_ls2)
+        self._cap_ls2 = jnp.asarray(dense_ls2, jnp.float32)
+        self._cap_lsq2 = jnp.asarray(cap_dense, jnp.float32)
+
+    # -- in-graph primitives -------------------------------------------------
+
+    def _mmse(self, v):
+        lv = jnp.clip(jnp.log(jnp.maximum(v, 1e-30)),
+                      self._log_v[0], self._log_v[-1])
+        return jnp.exp(jnp.interp(lv, self._log_v, self._log_m))
+
+    def _predict_next(self, sigma2_d, sigma_q2):
+        eff = sigma2_d + self.n_proc * sigma_q2
+        return self.prob.sigma_e2 + self._mmse(eff) / self.prob.kappa
+
+    def _msg_sd(self, sigma2_hat):
+        """sqrt(Var F^p) for the message mixture, closed form, in-graph."""
+        prior, p = self.prob.prior, float(self.n_proc)
+        w1, mu1 = prior.eps, prior.mu_s / p
+        var1 = (prior.sigma_s**2 + p * sigma2_hat) / p**2
+        var0 = sigma2_hat / p
+        mean = w1 * mu1
+        var = (w1 * (var1 + (mu1 - mean) ** 2)
+               + (1.0 - w1) * (var0 + mean**2))
+        return jnp.sqrt(var)
+
+    def _rate_lookup(self, sigma2_hat, sigma_q2):
+        """R(s2, sigma_q2) = bilinear G(log s2, log2 u) - log2 u."""
+        delta = jnp.sqrt(12.0 * jnp.maximum(sigma_q2, 1e-30))
+        lu = jnp.log2(delta / self._msg_sd(sigma2_hat))
+        ls = jnp.log(sigma2_hat)
+        gi, gj = self._log_s2_grid, self._log2u_grid
+        i = jnp.clip(jnp.searchsorted(gi, ls) - 1, 0, gi.shape[0] - 2)
+        j = jnp.clip(jnp.searchsorted(gj, lu) - 1, 0, gj.shape[0] - 2)
+        wi = jnp.clip((ls - gi[i]) / (gi[i + 1] - gi[i]), 0.0, 1.0)
+        wj = jnp.clip((lu - gj[j]) / (gj[j + 1] - gj[j]), 0.0, 1.0)
+        t00 = self._gap_tab[i, j]
+        t01 = self._gap_tab[i, j + 1]
+        t10 = self._gap_tab[i + 1, j]
+        t11 = self._gap_tab[i + 1, j + 1]
+        gap = ((1 - wi) * ((1 - wj) * t00 + wj * t01)
+               + wi * ((1 - wj) * t10 + wj * t11))
+        return gap - jnp.clip(lu, gj[0], gj[-1])
+
+    def _cap_sq2(self, sigma2_hat):
+        """sigma_Q^2 achieving rate r_max (dedicated dense 1D curve)."""
+        ls = jnp.clip(jnp.log(sigma2_hat), self._cap_ls2[0],
+                      self._cap_ls2[-1])
+        return jnp.exp(jnp.interp(ls, self._cap_ls2, self._cap_lsq2))
+
+    def delta_for(self, t, sigma2_hat):
+        target = self._targets[t]
+        base = self._predict_next(sigma2_hat, 0.0)
+
+        # bracket growth (host: hi *= 4 while predicted < target, cap 1e6)
+        def grow(_, hi):
+            ok = (self._predict_next(sigma2_hat, hi) < target) & (hi <= 1e6)
+            return jnp.where(ok, hi * 4.0, hi)
+
+        hi0 = sigma2_hat / self.n_proc + 1e-12
+        hi = jax.lax.fori_loop(0, 30, grow, hi0)
+
+        # 80-step bisection for the largest admissible sigma_Q^2
+        def bisect(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            ok = self._predict_next(sigma2_hat, mid) <= target
+            return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+        lo, _ = jax.lax.fori_loop(0, 80, bisect, (jnp.zeros_like(hi), hi))
+        rate_bis = self._rate_lookup(sigma2_hat, lo)
+
+        sq2_cap = self._cap_sq2(sigma2_hat)
+        use_cap = (base >= target) | (rate_bis > self.r_max)
+        sq2 = jnp.where(use_cap, sq2_cap, lo)
+        rate = jnp.where(use_cap, self.r_max, rate_bis)
+        return jnp.sqrt(12.0 * sq2), rate
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_proc: int = 30
+    n_iter: int = 10
+    use_kernel: bool | None = None    # None = Pallas on TPU, jnp elsewhere
+    collect_symbols: bool = True      # trace quantizer indices (T, P, N)
+    collect_xs: bool = True           # trace per-iteration estimates (T, N)
+
+
+@dataclasses.dataclass
+class EngineTrace:
+    """Per-iteration record of one engine solve (arrays are numpy on exit)."""
+
+    x: np.ndarray                 # final estimate (N,) / (B, N)
+    sigma2_hat: np.ndarray        # plug-in sigma_{t,D}^2, post-LC (T,)
+    deltas: np.ndarray            # realized bin sizes (T,)
+    extra_var: np.ndarray         # transport-injected variance P*sigma_Q^2 (T,)
+    rates: np.ndarray             # controller-chosen rate (T,), inf = untracked
+    symbols: np.ndarray | None    # quantizer indices (T, P, N)
+    xs: np.ndarray | None         # per-iteration estimates (T, N)
+
+    def mse(self, s0: np.ndarray) -> np.ndarray:
+        """Per-iteration MSE against ground truth (batched-aware)."""
+        assert self.xs is not None, "solve with collect_xs=True"
+        return np.mean((self.xs - np.asarray(s0)[..., None, :]) ** 2, axis=-1)
+
+
+class AmpEngine:
+    """One scan-compiled MP-AMP solver core with pluggable transports and
+    in-graph rate control. See module docstring."""
+
+    def __init__(self, prior: BernoulliGauss, cfg: EngineConfig,
+                 transport: Transport | None = None,
+                 controller=None):
+        self.prior = prior
+        self.cfg = cfg
+        self.transport = transport if transport is not None else ExactFusion()
+        if controller is None:
+            controller = FixedSchedule(np.full(cfg.n_iter, np.inf))
+        self.controller = controller
+        self._jit_cache: dict = {}
+
+    # -- shared iteration body ----------------------------------------------
+
+    def _local(self, x, z_p, onsager, a_p, y_p):
+        """LC: per-processor residual + message via the fused kernel path."""
+        cfg = self.cfg
+        m = a_p.shape[0] * a_p.shape[1]
+        z_new, f_p = jax.vmap(
+            lambda ap, yp, zp: amp_local_step(
+                ap, x, yp, zp, onsager, cfg.n_proc,
+                use_pallas=cfg.use_kernel))(a_p, y_p, z_p)
+        sigma2_hat = jnp.sum(z_new * z_new) / m
+        return z_new, f_p, sigma2_hat
+
+    def _gc(self, f_p, sigma2_hat, delta, kappa):
+        """GC: compress + fuse + denoise. Returns (x, onsager, extra, syms)."""
+        f, extra, syms = self.transport.fuse(f_p, delta)
+        x_new, onsager_new = amp_gc_step(f, sigma2_hat + extra, self.prior,
+                                         kappa)
+        return x_new, onsager_new, extra, syms
+
+    def _body(self, carry, xs_t, a_p, y_p, kappa):
+        t, sched_delta = xs_t
+        x, z_p, onsager = carry
+        z_p, f_p, s2 = self._local(x, z_p, onsager, a_p, y_p)
+        if isinstance(self.controller, FixedSchedule):
+            # fixed schedules arrive as a scan operand, so one compiled
+            # solve serves every schedule of the same length
+            delta, rate = sched_delta, jnp.float32(jnp.inf)
+        else:
+            delta, rate = self.controller.delta_for(t, s2)
+        x_new, onsager_new, extra, syms = self._gc(f_p, s2, delta, kappa)
+        cfg = self.cfg
+        out = (s2, delta, extra, rate,
+               x_new if cfg.collect_xs else jnp.zeros(()),
+               syms if cfg.collect_symbols else jnp.zeros(()))
+        return (x_new, z_p, onsager_new), out
+
+    def _sched_operand(self):
+        if isinstance(self.controller, FixedSchedule):
+            deltas = self.controller.deltas[:self.cfg.n_iter]
+            assert len(deltas) == self.cfg.n_iter, \
+                f"schedule has {len(self.controller.deltas)} entries, " \
+                f"need {self.cfg.n_iter}"
+            return jnp.asarray(deltas, jnp.float32)
+        return jnp.zeros(self.cfg.n_iter, jnp.float32)
+
+    # -- compiled entry points ----------------------------------------------
+
+    def _scan_fn(self, m: int, n: int):
+        """Build (once per shape) the jitted full-solve scan."""
+        key = ("scan", m, n)
+        if key not in self._jit_cache:
+            cfg, kappa = self.cfg, m / n
+
+            def solve_fn(a_p, y_p, sched):
+                init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
+                        jnp.zeros(()))
+                body = lambda c, xs: self._body(c, xs, a_p, y_p, kappa)
+                (x, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), sched))
+                return x, outs
+
+            self._jit_cache[key] = jax.jit(solve_fn)
+        return self._jit_cache[key]
+
+    def _step_fns(self, m: int, n: int):
+        """Jitted single-iteration (LC, GC) pair for host-loop mode — the
+        same body as the scan, sliced at the LC/GC boundary so an online
+        host-side controller can observe sigma_hat_{t,D}^2."""
+        key = ("step", m, n)
+        if key not in self._jit_cache:
+            kappa = m / n
+            local = jax.jit(self._local)
+            gc = jax.jit(lambda f_p, s2, delta: self._gc(f_p, s2, delta,
+                                                         kappa))
+            self._jit_cache[key] = (local, gc)
+        return self._jit_cache[key]
+
+    def _split(self, y, a_mat):
+        a_p, y_p = split_problem(np.asarray(a_mat, np.float32),
+                                 np.asarray(y, np.float32), self.cfg.n_proc)
+        return jnp.asarray(a_p), jnp.asarray(y_p)
+
+    def _trace(self, x, outs) -> EngineTrace:
+        cfg = self.cfg
+        s2, deltas, extra, rates, xs, syms = outs
+        return EngineTrace(
+            x=np.asarray(x),
+            sigma2_hat=np.asarray(s2),
+            deltas=np.asarray(deltas),
+            extra_var=np.asarray(extra),
+            rates=np.asarray(rates),
+            symbols=np.asarray(syms) if cfg.collect_symbols else None,
+            xs=np.asarray(xs) if cfg.collect_xs else None,
+        )
+
+    def solve(self, y, a_mat) -> EngineTrace:
+        """Full T-iteration solve as one scan-compiled call (no host sync)."""
+        a_p, y_p = self._split(y, a_mat)
+        m = a_p.shape[0] * a_p.shape[1]
+        x, outs = self._scan_fn(m, a_p.shape[2])(a_p, y_p,
+                                                 self._sched_operand())
+        return self._trace(x, outs)
+
+    def solve_many(self, ys, a_mats) -> EngineTrace:
+        """vmap-batched solve of B independent CS instances.
+
+        ys (B, M); a_mats (B, M, N) or a single shared (M, N) matrix.
+        Symbol collection is typically disabled for batches (memory).
+        """
+        ys = np.asarray(ys, np.float32)
+        a_mats = np.asarray(a_mats, np.float32)
+        shared_a = a_mats.ndim == 2
+        b = ys.shape[0]
+        p = self.cfg.n_proc
+        m, n = a_mats.shape[-2:]
+        assert m % p == 0, f"M={m} not divisible by P={p}"
+        if shared_a:
+            a_b = jnp.asarray(a_mats.reshape(p, m // p, n))
+        else:
+            assert a_mats.shape[0] == b
+            a_b = jnp.asarray(a_mats.reshape(b, p, m // p, n))
+        y_b = jnp.asarray(ys.reshape(b, p, m // p))
+
+        key = ("vmap", m, n, shared_a)
+        if key not in self._jit_cache:
+            fn = self._scan_fn(m, n)
+            in_axes = (None, 0, None) if shared_a else (0, 0, None)
+            self._jit_cache[key] = jax.jit(jax.vmap(fn, in_axes=in_axes))
+        x, outs = self._jit_cache[key](a_b, y_b, self._sched_operand())
+        return self._trace(x, outs)
+
+    def solve_host_loop(self, y, a_mat, host_schedule=None) -> EngineTrace:
+        """Per-iteration host loop over the same jitted body.
+
+        Exists for (a) arbitrary Python rate-controller callables and
+        (b) the engine benchmark's host-sync baseline. ``host_schedule``
+        is ``(t, sigma2_hat) -> delta``; defaults to the engine's
+        controller evaluated on host.
+        """
+        cfg = self.cfg
+        a_p, y_p = self._split(y, a_mat)
+        m, n = a_p.shape[0] * a_p.shape[1], a_p.shape[2]
+        local, gc = self._step_fns(m, n)
+
+        if host_schedule is None:
+            ctrl = self.controller
+            if isinstance(ctrl, FixedSchedule):
+                host_schedule = lambda t, s2: float(ctrl.deltas[t])
+            else:
+                host_schedule = lambda t, s2: float(
+                    ctrl.delta_for(jnp.asarray(t), jnp.asarray(s2, jnp.float32))[0])
+
+        x = jnp.zeros(n, jnp.float32)
+        z_p = jnp.zeros_like(y_p)
+        onsager = jnp.zeros(())
+        s2s, deltas, extras, xs, syms = [], [], [], [], []
+        for t in range(cfg.n_iter):
+            z_p, f_p, s2 = local(x, z_p, onsager, a_p, y_p)
+            delta_t = float(host_schedule(t, float(s2)))   # the host sync
+            x, onsager, extra, q = gc(f_p, s2, jnp.asarray(delta_t))
+            s2s.append(float(s2))
+            deltas.append(delta_t)
+            extras.append(float(extra))
+            if cfg.collect_xs:
+                xs.append(np.asarray(x))
+            if cfg.collect_symbols:
+                syms.append(np.asarray(q))
+        return EngineTrace(
+            x=np.asarray(x), sigma2_hat=np.asarray(s2s),
+            deltas=np.asarray(deltas), extra_var=np.asarray(extras),
+            rates=np.full(cfg.n_iter, np.inf, np.float32),
+            symbols=np.asarray(syms) if cfg.collect_symbols else None,
+            xs=np.asarray(xs) if cfg.collect_xs else None,
+        )

@@ -12,9 +12,13 @@ rate controller (BT-MP-AMP, Sec. 3.3) can observe the current plug-in noise
 estimate sigma_hat_{t,D}^2 = sum_p ||z_t^p||^2 / M — which is available after
 LC — before choosing the quantizer for this iteration's fusion.
 
-This module is the *emulated* multi-processor solver: the processor axis is a
-leading array axis and fusion is a sum over it — bit-exact to the physical
-cluster algorithm (quantization included), independent of device count. The
+This module is the *emulated* multi-processor frontend of the unified
+``core/engine.py`` solver: the processor axis is a leading array axis and
+fusion is a sum over it — bit-exact to the physical cluster algorithm
+(quantization included), independent of device count. Fixed schedules and
+``BTController`` instances run as a single scan-compiled engine solve (the
+BT rule runs in-graph; no per-iteration host sync); arbitrary Python
+schedule callables fall back to the engine's host-loop mode. The
 mesh/shard_map production version (fusion = compressed psum over the 'data'
 axis) lives in repro/core/compression.py + repro/launch/solver.py and is
 cross-checked against this one in tests.
@@ -33,9 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .denoisers import BernoulliGauss, eta
-from .quantize import (dequantize_midtread, ecsq_entropy, message_mixture,
-                       quantize_midtread)
+from .denoisers import BernoulliGauss
+from .engine import (AmpEngine, BTRateControl, EcsqTransport, EngineConfig,
+                     EngineTrace, FixedSchedule, amp_gc_step, split_problem)
+from .quantize import ecsq_entropy, message_mixture
+from .rate_alloc import BTController
 
 __all__ = ["MPAMPConfig", "MPAMPResult", "mp_amp_solve", "split_problem",
            "mp_local_step", "mp_fusion_step"]
@@ -67,13 +73,9 @@ class MPAMPResult:
         return float(np.sum(r[np.isfinite(r)]))
 
 
-def split_problem(a_mat: np.ndarray, y: np.ndarray, n_proc: int):
-    """Row-partition (A, y) across processors: (P, M/P, N), (P, M/P)."""
-    m, n = a_mat.shape
-    assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
-    mp = m // n_proc
-    return a_mat.reshape(n_proc, mp, n), y.reshape(n_proc, mp)
-
+# ---------------------------------------------------------------------------
+# single-iteration pieces (public API; thin over the engine's shared body)
+# ---------------------------------------------------------------------------
 
 @jax.jit
 def mp_local_step(x, z_p, onsager_coef, a_p, y_p):
@@ -89,20 +91,14 @@ def mp_local_step(x, z_p, onsager_coef, a_p, y_p):
 @partial(jax.jit, static_argnames=("prior",))
 def mp_fusion_step(f_p, sigma2_hat, delta, prior: BernoulliGauss, kappa):
     """GC: quantize messages, fuse, denoise. Returns (x_new, onsager, q_syms)."""
-    n_proc = f_p.shape[0]
-    lossless = ~jnp.isfinite(delta)
-    safe_delta = jnp.where(lossless, 1.0, delta)
-    q = quantize_midtread(f_p, safe_delta)
-    f_q = jnp.where(lossless, f_p, dequantize_midtread(q, safe_delta))
-    f = jnp.sum(f_q, axis=0)
-
-    sigma_q2 = jnp.where(lossless, 0.0, safe_delta**2 / 12.0)
-    denoise_var = sigma2_hat + n_proc * sigma_q2
-
-    eta_fn = lambda v: eta(v, denoise_var, prior, xp=jnp)
-    x_new = eta_fn(f)
-    onsager_new = jax.grad(lambda v: jnp.sum(eta_fn(v)))(f).mean() / kappa
+    f, extra, q = EcsqTransport().fuse(f_p, delta)
+    x_new, onsager_new = amp_gc_step(f, sigma2_hat + extra, prior, kappa)
     return x_new, onsager_new, q
+
+
+# per-(prior, P, T) engines for fixed-schedule / host-loop solves (schedules
+# are scan operands, so these engines' compiled scans are shape-reusable)
+_FIXED_ENGINES: dict = {}
 
 
 def _empirical_entropy(q: np.ndarray) -> float:
@@ -112,60 +108,101 @@ def _empirical_entropy(q: np.ndarray) -> float:
     return float(-(p * np.log2(p)).sum())
 
 
+def _result_from_trace(trace: EngineTrace, prior: BernoulliGauss,
+                       cfg: MPAMPConfig, s0, sigma2_for_model) -> MPAMPResult:
+    """Host-side rate accounting + MSE curve from an engine trace."""
+    r_ana, r_emp = [], []
+    for t in range(cfg.n_iter):
+        delta_t = float(trace.deltas[t])
+        if math.isfinite(delta_t):
+            model_s2 = (sigma2_for_model[t] if sigma2_for_model is not None
+                        else float(trace.sigma2_hat[t]))
+            mix = message_mixture(prior, model_s2, cfg.n_proc)
+            r_ana.append(float(ecsq_entropy(delta_t, mix)[0]))
+            r_emp.append(_empirical_entropy(np.asarray(trace.symbols[t])))
+        else:
+            r_ana.append(np.inf)
+            r_emp.append(np.inf)
+    mse = trace.mse(s0) if s0 is not None else None
+    return MPAMPResult(
+        x=trace.x, mse=mse, sigma2_hat=trace.sigma2_hat,
+        rates_analytic=np.asarray(r_ana), rates_empirical=np.asarray(r_emp),
+        deltas=trace.deltas,
+    )
+
+
 def mp_amp_solve(y, a_mat, prior: BernoulliGauss, cfg: MPAMPConfig,
                  delta_schedule, s0: np.ndarray | None = None,
                  sigma2_for_model=None) -> MPAMPResult:
     """Run MP-AMP with a per-iteration quantizer schedule.
 
     delta_schedule: either a sequence of bin sizes (len n_iter; np.inf =>
-      lossless fusion at that iteration), or an online controller callable
+      lossless fusion at that iteration), an online controller callable
       ``delta_schedule(t, sigma2_hat) -> delta`` receiving this iteration's
-      post-LC plug-in estimate (BT-MP-AMP).
+      post-LC plug-in estimate (BT-MP-AMP), or an engine RateController.
+      Sequences, ``rate_alloc.BTController`` instances and engine
+      controllers run as one scan-compiled solve; other callables use the
+      per-iteration host loop.
     sigma2_for_model: optional per-iteration channel variances for the
       *analytic* rate accounting (defaults to the online plug-in estimates).
     """
-    a_p, y_p = split_problem(np.asarray(a_mat, np.float32), np.asarray(y, np.float32),
-                             cfg.n_proc)
-    a_p = jnp.asarray(a_p)
-    y_p = jnp.asarray(y_p)
-    n = a_p.shape[2]
-    m = a_p.shape[0] * a_p.shape[1]
-    kappa = m / n
+    ecfg = EngineConfig(n_proc=cfg.n_proc, n_iter=cfg.n_iter)
 
-    x = jnp.zeros(n, jnp.float32)
-    z_p = jnp.zeros_like(y_p)
-    onsager = jnp.zeros(())
+    bt_host: BTController | None = None
+    if isinstance(delta_schedule, BTController):
+        bt_host = delta_schedule
+        # in-graph tables are cached on the controller instance (their build
+        # is the expensive part; the controller's params + (P, T) fix them)
+        controller = getattr(bt_host, "_in_graph", None)
+        if (controller is None or controller.n_iter != cfg.n_iter
+                or controller.n_proc != cfg.n_proc):
+            controller = BTRateControl(
+                bt_host.prob, cfg.n_proc, cfg.n_iter, bt_host.c_ratio,
+                bt_host.r_max, bt_host.rate_model, bt_host.rd,
+                bt_host.mmse_fn)
+            bt_host._in_graph = controller
+        host_fallback = None
+    elif callable(delta_schedule):
+        controller, host_fallback = None, delta_schedule
+    elif hasattr(delta_schedule, "delta_for"):
+        controller, host_fallback = delta_schedule, None
+    else:
+        # longer schedules are valid (legacy contract): first n_iter entries
+        controller = FixedSchedule(
+            np.asarray(delta_schedule, np.float64)[:cfg.n_iter])
+        host_fallback = None
 
-    callable_sched = callable(delta_schedule)
-    mses, s2s, r_ana, r_emp, deltas_used = [], [], [], [], []
-    for t in range(cfg.n_iter):
-        z_p, f_p, s2 = mp_local_step(x, z_p, onsager, a_p, y_p)
-        s2_host = float(s2)
-        if callable_sched:
-            delta_t = float(delta_schedule(t, s2_host))
-        else:
-            delta_t = float(delta_schedule[t])
-        x, onsager, q = mp_fusion_step(f_p, s2, jnp.asarray(delta_t), prior, kappa)
+    # fixed schedules share one engine per (prior, P, T): the schedule is a
+    # scan operand, so repeated solves hit the same compiled scan
+    if type(controller) is FixedSchedule or host_fallback is not None:
+        cache_key = (prior, cfg.n_proc, cfg.n_iter)
+        engine = _FIXED_ENGINES.get(cache_key)
+        if engine is None:
+            engine = AmpEngine(prior, ecfg, EcsqTransport(),
+                               FixedSchedule(np.full(cfg.n_iter, np.inf)))
+            _FIXED_ENGINES[cache_key] = engine
+        if type(controller) is FixedSchedule:
+            engine.controller = controller
+    else:
+        # engine (and with it the compiled scan) rides on the controller so
+        # repeated solves of same-shape problems don't re-trace
+        engine = getattr(controller, "_engine", None)
+        if engine is None or engine.prior != prior or engine.cfg != ecfg:
+            engine = AmpEngine(prior, ecfg, EcsqTransport(), controller)
+            try:
+                controller._engine = engine
+            except AttributeError:
+                pass
+        engine.controller = controller
+    if host_fallback is not None:
+        trace = engine.solve_host_loop(y, a_mat, host_schedule=host_fallback)
+    else:
+        trace = engine.solve(y, a_mat)
 
-        s2s.append(s2_host)
-        deltas_used.append(delta_t)
-        if math.isfinite(delta_t):
-            model_s2 = (sigma2_for_model[t] if sigma2_for_model is not None
-                        else s2_host)
-            mix = message_mixture(prior, model_s2, cfg.n_proc)
-            r_ana.append(float(ecsq_entropy(delta_t, mix)[0]))
-            r_emp.append(_empirical_entropy(np.asarray(q)))
-        else:
-            r_ana.append(np.inf)
-            r_emp.append(np.inf)
-        if s0 is not None:
-            mses.append(float(np.mean((np.asarray(x) - s0) ** 2)))
+    if bt_host is not None:
+        # preserve the host controller's record-keeping contract
+        for t in range(cfg.n_iter):
+            bt_host.rates.append(float(trace.rates[t]))
+            bt_host.sigma_q2s.append(float(trace.deltas[t]) ** 2 / 12.0)
 
-    return MPAMPResult(
-        x=np.asarray(x),
-        mse=np.asarray(mses) if s0 is not None else None,
-        sigma2_hat=np.asarray(s2s),
-        rates_analytic=np.asarray(r_ana),
-        rates_empirical=np.asarray(r_emp),
-        deltas=np.asarray(deltas_used),
-    )
+    return _result_from_trace(trace, prior, cfg, s0, sigma2_for_model)

@@ -29,15 +29,18 @@ from .quantize import (delta_for_rate_ecsq, delta_for_sigma_q2, ecsq_entropy,
 from .rate_distortion import RDModel
 from .state_evolution import CSProblem, se_trajectory
 
-__all__ = ["BTController", "bt_schedule_offline", "dp_allocate", "DPResult"]
+__all__ = ["BTController", "bt_schedule_offline", "dp_allocate", "DPResult",
+           "rate_for_sigma_q2", "sigma_q2_for_rate"]
 
 
 # ---------------------------------------------------------------------------
-# shared helpers
+# shared helpers (public: core/engine.py builds its in-graph BT rate tables
+# from these, so the scan-compiled controller and this host-loop controller
+# share one rate model)
 # ---------------------------------------------------------------------------
 
-def _rate_for_sigma_q2(sigma_q2: float, sigma_t2: float, prob: CSProblem,
-                       n_proc: int, rate_model: str, rd: RDModel | None) -> float:
+def rate_for_sigma_q2(sigma_q2: float, sigma_t2: float, prob: CSProblem,
+                      n_proc: int, rate_model: str, rd: RDModel | None) -> float:
     """Bits/element needed for per-message quantizer MSE sigma_q2."""
     if rate_model == "rd":
         return rd.rate_for_msg_distortion(sigma_q2, sigma_t2, n_proc)
@@ -45,12 +48,17 @@ def _rate_for_sigma_q2(sigma_q2: float, sigma_t2: float, prob: CSProblem,
     return float(ecsq_entropy(delta_for_sigma_q2(sigma_q2), mix)[0])
 
 
-def _sigma_q2_for_rate(rate: float, sigma_t2: float, prob: CSProblem,
-                       n_proc: int, rate_model: str, rd: RDModel | None) -> float:
+def sigma_q2_for_rate(rate: float, sigma_t2: float, prob: CSProblem,
+                      n_proc: int, rate_model: str, rd: RDModel | None) -> float:
     if rate_model == "rd":
         return float(rd.distortion_msg(rate, sigma_t2, n_proc))
     mix = message_mixture(prob.prior, sigma_t2, n_proc)
     return delta_for_rate_ecsq(rate, mix) ** 2 / 12.0
+
+
+# legacy private aliases (pre-engine callers)
+_rate_for_sigma_q2 = rate_for_sigma_q2
+_sigma_q2_for_rate = sigma_q2_for_rate
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +100,7 @@ class BTController:
         if base >= target:
             # cannot meet the ratio even losslessly -> spend r_max
             rate = self.r_max
-            sq2 = _sigma_q2_for_rate(rate, sigma2_hat, prob, p,
+            sq2 = sigma_q2_for_rate(rate, sigma2_hat, prob, p,
                                      self.rate_model, self.rd)
         else:
             # largest sigma_Q^2 with predicted variance <= target (bisection;
@@ -109,11 +117,11 @@ class BTController:
                 else:
                     hi = mid
             sq2 = lo
-            rate = _rate_for_sigma_q2(sq2, sigma2_hat, prob, p,
+            rate = rate_for_sigma_q2(sq2, sigma2_hat, prob, p,
                                       self.rate_model, self.rd)
             if rate > self.r_max:
                 rate = self.r_max
-                sq2 = _sigma_q2_for_rate(rate, sigma2_hat, prob, p,
+                sq2 = sigma_q2_for_rate(rate, sigma2_hat, prob, p,
                                          self.rate_model, self.rd)
         self.rates.append(rate)
         self.sigma_q2s.append(sq2)

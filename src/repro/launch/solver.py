@@ -7,6 +7,12 @@ is a ``compressed_psum`` over 'data' — int8 wire transport standing in for
 the paper's ECSQ+entropy-coded stream (DESIGN.md §2; H_Q is reported so the
 entropy-coded rate is visible even though XLA lanes are fixed-width).
 
+This is the distributed frontend of the unified ``core/engine.py`` solver:
+the per-shard LC step is the same ``kernels/amp_fused`` op the engine scans
+over, and the denoise/Onsager tail is the engine's shared ``amp_gc_step`` —
+only the fusion differs (collective over 'data' instead of a sum over the
+emulated leading axis).
+
 Straggler mitigation (beyond-paper, enabled by the paper's own analysis):
 ``drop_mask`` simulates P' < P responsive processors. The fusion then
 rescales: f = (P/P') * sum_{responsive} f^p is an unbiased estimate of the
@@ -17,7 +23,6 @@ of stalling on the slowest shard.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +30,11 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import axis_size, shard_map
 from ..core.compression import QuantConfig, compressed_psum
-from ..core.denoisers import BernoulliGauss, eta
+from ..core.denoisers import BernoulliGauss
+from ..core.engine import amp_gc_step
+from ..kernels.amp_fused.ops import amp_local_step
 
 __all__ = ["DistributedMPAMP", "SolverConfig"]
 
@@ -37,6 +45,7 @@ class SolverConfig:
     bits: int | None = 8          # None = exact (bf16/f32) fusion
     block: int = 512
     drop_rate: float = 0.0        # simulated straggler drop fraction
+    use_kernel: bool | None = None  # None = Pallas LC on TPU
 
 
 class DistributedMPAMP:
@@ -51,10 +60,10 @@ class DistributedMPAMP:
     def _iteration(self, a_p, y_p, x, z_p, onsager, drop, kappa):
         """One iteration; runs per-processor under shard_map (manual 'data')."""
         cfg, prior = self.cfg, self.prior
-        p = lax.axis_size("data")
+        p = axis_size("data")
 
-        z_new = y_p - a_p @ x + onsager * z_p
-        f_p = x / p + a_p.T @ z_new
+        z_new, f_p = amp_local_step(a_p, x, y_p, z_p, onsager, p,
+                                    use_pallas=cfg.use_kernel)
 
         sigma2_hat = lax.psum(jnp.sum(z_new * z_new), "data") / (
             lax.psum(jnp.asarray(z_new.shape[0], jnp.float32), "data"))
@@ -71,10 +80,7 @@ class DistributedMPAMP:
             f = lax.psum(f_p, "data")
             noise = jnp.zeros(())
 
-        denoise_var = sigma2_hat + noise
-        eta_fn = lambda v: eta(v, denoise_var, prior, xp=jnp)
-        x_new = eta_fn(f)
-        onsager_new = jax.grad(lambda v: jnp.sum(eta_fn(v)))(f).mean() / kappa
+        x_new, onsager_new = amp_gc_step(f, sigma2_hat + noise, prior, kappa)
         return x_new, z_new, onsager_new, sigma2_hat, noise
 
     def solve(self, a_mat: np.ndarray, y: np.ndarray, key=None):
@@ -110,10 +116,10 @@ class DistributedMPAMP:
             (x, _, _), (s2s, nvs) = lax.scan(step, (x, z_p, onsager), drops)
             return x, s2s, nvs
 
-        fn = jax.shard_map(
+        fn = shard_map(
             body, mesh=mesh,
             in_specs=(P("data", None), P("data"), P(None, "data")),
             out_specs=(P(), P(), P()),
-            axis_names={"data"}, check_vma=False)
+            axis_names={"data"}, check=False)
         x, s2s, nvs = jax.jit(fn)(a, yj, jnp.asarray(drop_sched))
         return np.asarray(x), np.asarray(s2s), np.asarray(nvs)

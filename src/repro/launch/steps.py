@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig, ShapeSpec
 from ..core.compression import QuantConfig, compressed_psum
 from ..models import chunked_xent_loss, get_model, lm_logits
@@ -178,13 +179,13 @@ def build_train_step(cfg: ModelConfig, mesh, shape: ShapeSpec,
 
         # partial-manual shard_map: specs may only mention the manual axis
         # ('pod'); data/model sharding stays under GSPMD control (auto).
-        pod_grads = jax.shard_map(
+        pod_grads = shard_map(
             pod_body, mesh=mesh,
             in_specs=({k: P() for k in p_specs},
                       P("pod", None), P("pod", None),
                       {k: P("pod", None, None) for k in aux_abstract}),
             out_specs=(P(), {k: P() for k in p_specs}, P()),
-            axis_names={"pod"}, check_vma=False)
+            axis_names={"pod"}, check=False)
     else:
         def pod_grads(params, tokens, labels, aux):  # single-pod: plain GSPMD
             loss, grads = grads_microbatched(params, tokens, labels, aux, rules)

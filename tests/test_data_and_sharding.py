@@ -33,10 +33,11 @@ def test_data_sharded_arrays():
 def test_rules_divisibility_fallbacks(multidev):
     multidev("""
 import jax
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.sharding import make_rules, logical_spec, use_sharding
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ('data', 'model'))
 
 # yi-34b: 56 heads %% 4 == 0 -> heads sharded on a 4-way model axis
 cfg = get_config('yi-34b')
@@ -64,10 +65,10 @@ print('ok')
 def test_decode_rules_long_context(multidev):
     multidev("""
 import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.sharding import make_rules
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ('data', 'model'))
 cfg = get_config('gemma3-1b')
 # batch=1 long-context decode: kv_seq takes data + model
 r = make_rules(cfg, mesh, 'decode', decode_batch=1)
@@ -84,9 +85,10 @@ def test_hlo_analysis_trip_counts(multidev):
     """Analyzer flops == analytic for a scanned matmul (trip multiplication)."""
     multidev("""
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.compat import make_mesh
 from repro.launch.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ('data', 'model'))
 L, B, D = 7, 32, 64
 def f(w, x):
     def body(c, wi):

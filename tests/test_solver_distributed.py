@@ -1,10 +1,21 @@
 """Mesh-distributed MP-AMP solver tests (8 fake devices, subprocess)."""
+import pytest
+
+from repro.compat import AxisType
+
+# The compressed pod-axis gradient fusion uses *partial-manual* shard_map
+# (manual: pod; auto: data/model). jax 0.4.x's experimental `auto=` support
+# trips an XLA SPMD partitioner CHECK (IsManualSubgroup) on this pattern;
+# the fully-manual solver path below works on all supported versions.
+partial_manual = pytest.mark.skipif(
+    AxisType is None,
+    reason="partial-manual shard_map needs jax >= 0.5 (explicit AxisType)")
 
 
 def test_distributed_solver_matches_centralized(multidev):
     multidev("""
 import jax, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.core.denoisers import BernoulliGauss
 from repro.core.state_evolution import CSProblem
 from repro.core.amp import sample_problem, amp_solve
@@ -13,7 +24,7 @@ from repro.launch.solver import DistributedMPAMP, SolverConfig
 prior = BernoulliGauss(eps=0.1)
 prob = CSProblem(n=2000, m=600, prior=prior)
 s0, a, y = sample_problem(jax.random.PRNGKey(1), prob.n, prob.m, prior, prob.sigma_e2)
-mesh = jax.make_mesh((8,), ('data',), axis_types=(AxisType.Auto,))
+mesh = make_mesh((8,), ('data',))
 
 sv = DistributedMPAMP(mesh, prior, SolverConfig(n_iter=12, bits=None))
 x, s2s, _ = sv.solve(a, y)
@@ -35,18 +46,19 @@ print('ok')
 """, 8, timeout=900)
 
 
+@partial_manual
 def test_train_step_lowers_on_small_mesh(multidev):
     """CI-scale version of the dry-run: 2x4 mesh, smoke config, pod axis."""
     multidev("""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
 from repro.launch.steps import build_train_step, build_serve_step, TrainStepConfig
 
 cfg = get_config('granite-3-8b').smoke_config()
 shape = ShapeSpec('t', 64, 8, 'train')
-mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
 fn, sh, ab = build_train_step(cfg, mesh, shape,
                               TrainStepConfig(microbatches=2, moe_groups=2,
                                               compression_bits=8))
@@ -68,13 +80,14 @@ print('ok')
 """, 8, timeout=900)
 
 
+@partial_manual
 def test_compressed_gradient_training_converges(multidev):
     """End-to-end: the paper's technique applied to training — int8 pod-axis
     gradient fusion trains a smoke LM and the loss decreases like exact
     fusion (within noise)."""
     multidev("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec
 from repro.data import SyntheticLMData
@@ -84,7 +97,7 @@ from repro.sharding import make_rules, use_sharding
 
 cfg = get_config('granite-3-8b').smoke_config()
 shape = ShapeSpec('t', 32, 8, 'train')
-mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'), axis_types=(AxisType.Auto,)*3)
+mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
 data = SyntheticLMData(cfg.vocab, shape.seq_len, shape.global_batch, seed=1)
 
 def run(bits):
