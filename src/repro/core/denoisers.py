@@ -32,6 +32,7 @@ import numpy as np
 __all__ = [
     "BernoulliGauss",
     "eta",
+    "eta_bg",
     "eta_and_deriv",
     "mmse",
     "make_mmse_interp",
@@ -64,6 +65,21 @@ def _sigmoid(xp, x):
     # numerically stable logistic for both numpy and jnp (no overflow branches)
     e = xp.exp(-xp.abs(x))
     return xp.where(x >= 0, 1.0 / (1.0 + e), e / (1.0 + e))
+
+
+def eta_bg(f, sigma2, eps, mu_s, sigma_s2, xp=jnp):
+    """``eta`` with *array-valued* prior parameters (vmap/scan-safe).
+
+    Identical formula to ``eta`` but every prior parameter may be a traced
+    scalar, so one compiled solve can serve per-instance priors (the
+    heterogeneous-batch engine path). Requires 0 < eps < 1.
+    """
+    log_g1 = _log_norm_pdf(xp, f, mu_s, sigma_s2 + sigma2)
+    log_g0 = _log_norm_pdf(xp, f, 0.0, sigma2)
+    logit_eps = xp.log(eps) - xp.log1p(-eps)
+    pi = _sigmoid(xp, logit_eps + log_g1 - log_g0)
+    cond_mean = (mu_s * sigma2 + f * sigma_s2) / (sigma_s2 + sigma2)
+    return pi * cond_mean
 
 
 def eta(f, sigma2, prior: BernoulliGauss, xp=jnp):

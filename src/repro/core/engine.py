@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Protocol, runtime_checkable
+from typing import NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,7 @@ import numpy as np
 from ..kernels.amp_fused.ops import amp_local_step
 from .compression import (QuantConfig, dequantize_blocks, quant_noise_var,
                           quantize_blocks)
-from .denoisers import BernoulliGauss, eta
+from .denoisers import BernoulliGauss, eta, eta_bg
 from .quantize import dequantize_midtread, message_mixture, quantize_midtread
 from .rate_alloc import BTController, rate_for_sigma_q2
 from .rate_distortion import RDModel
@@ -47,7 +47,8 @@ __all__ = [
     "AmpEngine", "EngineConfig", "EngineTrace",
     "Transport", "ExactFusion", "EcsqTransport", "BlockQuantTransport",
     "RateController", "FixedSchedule", "DPSchedule", "BTRateControl",
-    "amp_gc_step", "split_problem",
+    "BTTables", "HetParams", "bt_delta_for", "stack_bt_tables",
+    "pad_bt_tables", "amp_gc_step", "split_problem",
 ]
 
 
@@ -192,6 +193,179 @@ class DPSchedule(FixedSchedule):
         self.sigma2_d = np.asarray(dp_result.sigma2_d)
 
 
+class BTTables(NamedTuple):
+    """The in-graph BT controller's state as a pure array pytree.
+
+    Everything ``bt_delta_for`` needs — MMSE interpolation table, SE
+    targets, rate table, r_max cap curve, and the scalar problem
+    parameters (sigma_e2, kappa, prior, P) — lives here as jnp arrays, so
+    per-request controllers can be *stacked* (leading batch axis via
+    ``stack_bt_tables``) and ride through ``vmap`` as ordinary operands.
+    This is how one compiled heterogeneous-batch solve serves requests
+    with different SNR / sparsity / rate budgets simultaneously.
+    """
+
+    log_v: jnp.ndarray        # (400,) MMSE interp grid, log variance
+    log_m: jnp.ndarray        # (400,) log mmse values
+    targets: jnp.ndarray      # (T,) c_ratio * sigma_{t+1,C}^2
+    log_s2_grid: jnp.ndarray  # (n_s2,) rate-table axis 0
+    log2u_grid: jnp.ndarray   # (n_u,) rate-table axis 1
+    gap_tab: jnp.ndarray      # (n_s2, n_u) G = R + log2(u)
+    cap_ls2: jnp.ndarray      # (512,) cap curve axis
+    cap_lsq2: jnp.ndarray     # (512,) log sigma_Q^2 at r_max
+    sigma_e2: jnp.ndarray     # () problem scalars -------------------
+    inv_kappa: jnp.ndarray    # ()
+    n_proc: jnp.ndarray       # () float
+    eps: jnp.ndarray          # () prior
+    mu_s: jnp.ndarray         # ()
+    sigma_s2: jnp.ndarray     # ()
+    r_max: jnp.ndarray        # ()
+
+    _dummies = {}  # class-level memo for dummy tables (not a field)
+
+    @classmethod
+    def dummy(cls, n_iter: int, n_s2: int = 25, n_u: int = 61) -> "BTTables":
+        """Benign finite tables for non-BT instances inside a mixed batch.
+
+        When any instance of the batch uses BT, ``bt_delta_for`` is
+        evaluated for *every* instance (its output is discarded through
+        ``jnp.where`` for fixed-schedule requests), so the tables must
+        produce finite values — the actual numbers are irrelevant.
+        Memoized: the serving hot path requests one per bucket dispatch.
+        """
+        key = (n_iter, n_s2, n_u)
+        if key in cls._dummies:
+            return cls._dummies[key]
+        f = lambda v: jnp.asarray(v, jnp.float32)
+        lin = np.linspace(-20.0, 7.0, 400).astype(np.float32)
+        tb = cls(
+            log_v=jnp.asarray(lin), log_m=jnp.asarray(lin),
+            targets=jnp.ones(n_iter, jnp.float32),
+            log_s2_grid=jnp.asarray(np.linspace(-20.0, 2.0, n_s2),
+                                    jnp.float32),
+            log2u_grid=jnp.asarray(np.linspace(-12.0, 5.0, n_u), jnp.float32),
+            gap_tab=jnp.ones((n_s2, n_u), jnp.float32),
+            cap_ls2=jnp.asarray(np.linspace(-20.0, 2.0, 512), jnp.float32),
+            cap_lsq2=jnp.zeros(512, jnp.float32),
+            sigma_e2=f(1e-3), inv_kappa=f(1.0), n_proc=f(1.0),
+            eps=f(0.1), mu_s=f(0.0), sigma_s2=f(1.0), r_max=f(6.0),
+        )
+        cls._dummies[key] = tb
+        return tb
+
+
+def _bt_mmse(tb: BTTables, v):
+    lv = jnp.clip(jnp.log(jnp.maximum(v, 1e-30)), tb.log_v[0], tb.log_v[-1])
+    return jnp.exp(jnp.interp(lv, tb.log_v, tb.log_m))
+
+
+def _bt_predict_next(tb: BTTables, sigma2_d, sigma_q2):
+    eff = sigma2_d + tb.n_proc * sigma_q2
+    return tb.sigma_e2 + _bt_mmse(tb, eff) * tb.inv_kappa
+
+
+def _bt_msg_sd(tb: BTTables, sigma2_hat):
+    """sqrt(Var F^p) for the message mixture, closed form, in-graph."""
+    p = tb.n_proc
+    w1, mu1 = tb.eps, tb.mu_s / p
+    var1 = (tb.sigma_s2 + p * sigma2_hat) / p**2
+    var0 = sigma2_hat / p
+    mean = w1 * mu1
+    var = (w1 * (var1 + (mu1 - mean) ** 2)
+           + (1.0 - w1) * (var0 + mean**2))
+    return jnp.sqrt(var)
+
+
+def _bt_rate_lookup(tb: BTTables, sigma2_hat, sigma_q2):
+    """R(s2, sigma_q2) = bilinear G(log s2, log2 u) - log2 u."""
+    delta = jnp.sqrt(12.0 * jnp.maximum(sigma_q2, 1e-30))
+    lu = jnp.log2(delta / _bt_msg_sd(tb, sigma2_hat))
+    ls = jnp.log(sigma2_hat)
+    gi, gj = tb.log_s2_grid, tb.log2u_grid
+    i = jnp.clip(jnp.searchsorted(gi, ls) - 1, 0, gi.shape[0] - 2)
+    j = jnp.clip(jnp.searchsorted(gj, lu) - 1, 0, gj.shape[0] - 2)
+    wi = jnp.clip((ls - gi[i]) / (gi[i + 1] - gi[i]), 0.0, 1.0)
+    wj = jnp.clip((lu - gj[j]) / (gj[j + 1] - gj[j]), 0.0, 1.0)
+    t00 = tb.gap_tab[i, j]
+    t01 = tb.gap_tab[i, j + 1]
+    t10 = tb.gap_tab[i + 1, j]
+    t11 = tb.gap_tab[i + 1, j + 1]
+    gap = ((1 - wi) * ((1 - wj) * t00 + wj * t01)
+           + wi * ((1 - wj) * t10 + wj * t11))
+    return gap - jnp.clip(lu, gj[0], gj[-1])
+
+
+def _bt_cap_sq2(tb: BTTables, sigma2_hat):
+    """sigma_Q^2 achieving rate r_max (dedicated dense 1D curve)."""
+    ls = jnp.clip(jnp.log(sigma2_hat), tb.cap_ls2[0], tb.cap_ls2[-1])
+    return jnp.exp(jnp.interp(ls, tb.cap_ls2, tb.cap_lsq2))
+
+
+def bt_delta_for(tb: BTTables, t, sigma2_hat):
+    """One in-graph BT decision: (tables, t, sigma2_hat) -> (delta, rate).
+
+    Pure jnp over the ``BTTables`` pytree — the function ``vmap``s over a
+    stacked-tables batch axis, which is what lets a heterogeneous batch mix
+    per-request BT controllers inside one compiled solve.
+    """
+    sigma2_hat = jnp.maximum(sigma2_hat, 1e-30)
+    target = tb.targets[t]
+    base = _bt_predict_next(tb, sigma2_hat, 0.0)
+
+    # bracket growth (host: hi *= 4 while predicted < target, cap 1e6)
+    def grow(_, hi):
+        ok = (_bt_predict_next(tb, sigma2_hat, hi) < target) & (hi <= 1e6)
+        return jnp.where(ok, hi * 4.0, hi)
+
+    hi0 = sigma2_hat / tb.n_proc + 1e-12
+    hi = jax.lax.fori_loop(0, 30, grow, hi0)
+
+    # 80-step bisection for the largest admissible sigma_Q^2
+    def bisect(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        ok = _bt_predict_next(tb, sigma2_hat, mid) <= target
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, 80, bisect, (jnp.zeros_like(hi), hi))
+    rate_bis = _bt_rate_lookup(tb, sigma2_hat, lo)
+
+    sq2_cap = _bt_cap_sq2(tb, sigma2_hat)
+    use_cap = (base >= target) | (rate_bis > tb.r_max)
+    sq2 = jnp.where(use_cap, sq2_cap, lo)
+    rate = jnp.where(use_cap, tb.r_max, rate_bis)
+    return jnp.sqrt(12.0 * sq2), rate
+
+
+def stack_bt_tables(tables: "list[BTTables]") -> BTTables:
+    """Stack per-request tables into one leading-batch-axis pytree.
+
+    All entries must share ``targets`` length (pad with ``pad_bt_tables``)
+    and grid sizes (the constructor defaults). When every entry is the
+    same object (the all-dummy / all-same-operating-point fast path) the
+    batch axis is a zero-copy broadcast; otherwise the leaves are stacked
+    in numpy (one host pass instead of 15*B device ops).
+    """
+    b = len(tables)
+    if all(t is tables[0] for t in tables):
+        return jax.tree.map(
+            lambda x: np.broadcast_to(np.asarray(x), (b,) + x.shape),
+            tables[0])
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                        *tables)
+
+
+def pad_bt_tables(tb: BTTables, n_iter: int) -> BTTables:
+    """Extend the SE target vector to ``n_iter`` (bucket T_max) by repeating
+    the steady-state target; iterations past the request's t_active are
+    masked out in the scan, so the padding values are never acted on."""
+    cur = tb.targets.shape[0]
+    if cur >= n_iter:
+        return tb._replace(targets=tb.targets[:n_iter])
+    pad = jnp.broadcast_to(tb.targets[-1], (n_iter - cur,))
+    return tb._replace(targets=jnp.concatenate([tb.targets, pad]))
+
+
 class BTRateControl:
     """In-graph BT back-tracking (paper Sec. 3.3), scan/jit/vmap-safe.
 
@@ -206,8 +380,9 @@ class BTRateControl:
         same ``rate_alloc`` helpers the host controller calls, with a
         fixed-count bisection for the r_max cap inversion.
 
-    Tables are built once at construction (host side); the per-iteration
-    decision then runs entirely inside the solver scan.
+    Tables are built once at construction (host side) into a ``BTTables``
+    pytree (``self.tables``); the per-iteration decision then runs entirely
+    inside the solver scan via the pure ``bt_delta_for``.
     """
 
     def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
@@ -228,11 +403,11 @@ class BTRateControl:
         grid_v = np.geomspace(1e-9, 1e3, 400)
         grid_m = np.maximum(np.asarray(host.mmse_fn(grid_v), np.float64),
                             1e-300)
-        self._log_v = jnp.asarray(np.log(grid_v), jnp.float32)
-        self._log_m = jnp.asarray(np.log(grid_m), jnp.float32)
+        log_v = jnp.asarray(np.log(grid_v), jnp.float32)
+        log_m = jnp.asarray(np.log(grid_m), jnp.float32)
 
         # (2) per-iteration targets c * sigma_{t+1,C}^2
-        self._targets = jnp.asarray(c_ratio * host.sigma2_c[1:], jnp.float32)
+        targets = jnp.asarray(c_ratio * host.sigma2_c[1:], jnp.float32)
 
         # (3) rate table R(log s2, log2 u), u = Delta / sd(F^p | s2)
         s2_lo = max(prob.sigma_e2 * 1e-2, 1e-9)
@@ -249,12 +424,12 @@ class BTRateControl:
                 tab[i, j] = rate_for_sigma_q2(delta**2 / 12.0, float(s2),
                                               prob, n_proc, host.rate_model,
                                               host.rd)
-        self._log_s2_grid = jnp.asarray(np.log(s2_grid), jnp.float32)
-        self._log2u_grid = jnp.asarray(log2u_grid, jnp.float32)
+        log_s2_grid = jnp.asarray(np.log(s2_grid), jnp.float32)
+        log2u_grid_j = jnp.asarray(log2u_grid, jnp.float32)
         # store the excess over the high-rate line, G = R + log2(u): G is
         # nearly flat where the quantizer is fine (R ~ h - log2 Delta), so
         # bilinear interpolation of G is far more accurate than of R itself
-        self._gap_tab = jnp.asarray(tab + log2u_grid[None, :], jnp.float32)
+        gap_tab = jnp.asarray(tab + log2u_grid[None, :], jnp.float32)
 
         # (4) dedicated 1D cap curve sigma_Q^2(r_max; s2): per-row inversion
         # of the table (G is ~flat in u, so in-row accuracy ~ the host
@@ -278,82 +453,22 @@ class BTRateControl:
         dense_ls2 = np.linspace(math.log(s2_grid[0]), math.log(s2_grid[-1]),
                                 512)
         cap_dense = CubicSpline(np.log(s2_grid), cap_lsq2)(dense_ls2)
-        self._cap_ls2 = jnp.asarray(dense_ls2, jnp.float32)
-        self._cap_lsq2 = jnp.asarray(cap_dense, jnp.float32)
 
-    # -- in-graph primitives -------------------------------------------------
-
-    def _mmse(self, v):
-        lv = jnp.clip(jnp.log(jnp.maximum(v, 1e-30)),
-                      self._log_v[0], self._log_v[-1])
-        return jnp.exp(jnp.interp(lv, self._log_v, self._log_m))
-
-    def _predict_next(self, sigma2_d, sigma_q2):
-        eff = sigma2_d + self.n_proc * sigma_q2
-        return self.prob.sigma_e2 + self._mmse(eff) / self.prob.kappa
-
-    def _msg_sd(self, sigma2_hat):
-        """sqrt(Var F^p) for the message mixture, closed form, in-graph."""
-        prior, p = self.prob.prior, float(self.n_proc)
-        w1, mu1 = prior.eps, prior.mu_s / p
-        var1 = (prior.sigma_s**2 + p * sigma2_hat) / p**2
-        var0 = sigma2_hat / p
-        mean = w1 * mu1
-        var = (w1 * (var1 + (mu1 - mean) ** 2)
-               + (1.0 - w1) * (var0 + mean**2))
-        return jnp.sqrt(var)
-
-    def _rate_lookup(self, sigma2_hat, sigma_q2):
-        """R(s2, sigma_q2) = bilinear G(log s2, log2 u) - log2 u."""
-        delta = jnp.sqrt(12.0 * jnp.maximum(sigma_q2, 1e-30))
-        lu = jnp.log2(delta / self._msg_sd(sigma2_hat))
-        ls = jnp.log(sigma2_hat)
-        gi, gj = self._log_s2_grid, self._log2u_grid
-        i = jnp.clip(jnp.searchsorted(gi, ls) - 1, 0, gi.shape[0] - 2)
-        j = jnp.clip(jnp.searchsorted(gj, lu) - 1, 0, gj.shape[0] - 2)
-        wi = jnp.clip((ls - gi[i]) / (gi[i + 1] - gi[i]), 0.0, 1.0)
-        wj = jnp.clip((lu - gj[j]) / (gj[j + 1] - gj[j]), 0.0, 1.0)
-        t00 = self._gap_tab[i, j]
-        t01 = self._gap_tab[i, j + 1]
-        t10 = self._gap_tab[i + 1, j]
-        t11 = self._gap_tab[i + 1, j + 1]
-        gap = ((1 - wi) * ((1 - wj) * t00 + wj * t01)
-               + wi * ((1 - wj) * t10 + wj * t11))
-        return gap - jnp.clip(lu, gj[0], gj[-1])
-
-    def _cap_sq2(self, sigma2_hat):
-        """sigma_Q^2 achieving rate r_max (dedicated dense 1D curve)."""
-        ls = jnp.clip(jnp.log(sigma2_hat), self._cap_ls2[0],
-                      self._cap_ls2[-1])
-        return jnp.exp(jnp.interp(ls, self._cap_ls2, self._cap_lsq2))
+        f32 = lambda v: jnp.asarray(v, jnp.float32)
+        self.tables = BTTables(
+            log_v=log_v, log_m=log_m, targets=targets,
+            log_s2_grid=log_s2_grid, log2u_grid=log2u_grid_j,
+            gap_tab=gap_tab,
+            cap_ls2=jnp.asarray(dense_ls2, jnp.float32),
+            cap_lsq2=jnp.asarray(cap_dense, jnp.float32),
+            sigma_e2=f32(prob.sigma_e2), inv_kappa=f32(1.0 / prob.kappa),
+            n_proc=f32(float(n_proc)), eps=f32(prob.prior.eps),
+            mu_s=f32(prob.prior.mu_s), sigma_s2=f32(prob.prior.sigma_s**2),
+            r_max=f32(r_max),
+        )
 
     def delta_for(self, t, sigma2_hat):
-        target = self._targets[t]
-        base = self._predict_next(sigma2_hat, 0.0)
-
-        # bracket growth (host: hi *= 4 while predicted < target, cap 1e6)
-        def grow(_, hi):
-            ok = (self._predict_next(sigma2_hat, hi) < target) & (hi <= 1e6)
-            return jnp.where(ok, hi * 4.0, hi)
-
-        hi0 = sigma2_hat / self.n_proc + 1e-12
-        hi = jax.lax.fori_loop(0, 30, grow, hi0)
-
-        # 80-step bisection for the largest admissible sigma_Q^2
-        def bisect(_, lohi):
-            lo, hi = lohi
-            mid = 0.5 * (lo + hi)
-            ok = self._predict_next(sigma2_hat, mid) <= target
-            return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
-
-        lo, _ = jax.lax.fori_loop(0, 80, bisect, (jnp.zeros_like(hi), hi))
-        rate_bis = self._rate_lookup(sigma2_hat, lo)
-
-        sq2_cap = self._cap_sq2(sigma2_hat)
-        use_cap = (base >= target) | (rate_bis > self.r_max)
-        sq2 = jnp.where(use_cap, sq2_cap, lo)
-        rate = jnp.where(use_cap, self.r_max, rate_bis)
-        return jnp.sqrt(12.0 * sq2), rate
+        return bt_delta_for(self.tables, t, sigma2_hat)
 
 
 # ---------------------------------------------------------------------------
@@ -365,8 +480,30 @@ class EngineConfig:
     n_proc: int = 30
     n_iter: int = 10
     use_kernel: bool | None = None    # None = Pallas on TPU, jnp elsewhere
+    kernel_interpret: bool = False    # Pallas interpret mode (CPU parity/CI)
     collect_symbols: bool = True      # trace quantizer indices (T, P, N)
     collect_xs: bool = True           # trace per-iteration estimates (T, N)
+
+
+class HetParams(NamedTuple):
+    """Per-instance operands of a heterogeneous batch (``solve_het``).
+
+    Every field carries a leading batch axis B when passed to ``solve_het``
+    (shapes below are per-instance). Together with the per-instance sensing
+    shards, these are the quantities the serving layer varies *inside* one
+    compiled solve; everything structural (padded M/N, P, T_max, transport)
+    is part of the bucket key instead.
+    """
+
+    sched: jnp.ndarray     # (T,) fixed/DP bin sizes (inf = lossless)
+    t_active: jnp.ndarray  # () int32: iterations to run (masked early-exit)
+    m_real: jnp.ndarray    # () f32: true measurement count (sigma2_hat norm)
+    n_real: jnp.ndarray    # () int32: true signal length (column mask)
+    eps: jnp.ndarray       # () f32 prior sparsity
+    mu_s: jnp.ndarray      # () f32 prior mean
+    sigma_s: jnp.ndarray   # () f32 prior std
+    use_bt: jnp.ndarray    # () bool: BT controller vs fixed schedule
+    bt: BTTables           # stacked in-graph BT tables (dummy when !use_bt)
 
 
 @dataclasses.dataclass
@@ -404,14 +541,20 @@ class AmpEngine:
 
     # -- shared iteration body ----------------------------------------------
 
-    def _local(self, x, z_p, onsager, a_p, y_p):
-        """LC: per-processor residual + message via the fused kernel path."""
+    def _local(self, x, z_p, onsager, a_p, y_p, m_eff=None):
+        """LC: per-processor residual + message via the fused kernel path.
+
+        ``m_eff`` overrides the sigma2_hat normalizer (the heterogeneous
+        path passes the *real* measurement count; padded rows are zero and
+        contribute nothing to the sum).
+        """
         cfg = self.cfg
-        m = a_p.shape[0] * a_p.shape[1]
+        m = a_p.shape[0] * a_p.shape[1] if m_eff is None else m_eff
         z_new, f_p = jax.vmap(
             lambda ap, yp, zp: amp_local_step(
                 ap, x, yp, zp, onsager, cfg.n_proc,
-                use_pallas=cfg.use_kernel))(a_p, y_p, z_p)
+                use_pallas=cfg.use_kernel,
+                interpret=cfg.kernel_interpret))(a_p, y_p, z_p)
         sigma2_hat = jnp.sum(z_new * z_new) / m
         return z_new, f_p, sigma2_hat
 
@@ -532,6 +675,96 @@ class AmpEngine:
             in_axes = (None, 0, None) if shared_a else (0, 0, None)
             self._jit_cache[key] = jax.jit(jax.vmap(fn, in_axes=in_axes))
         x, outs = self._jit_cache[key](a_b, y_b, self._sched_operand())
+        return self._trace(x, outs)
+
+    # -- heterogeneous batches (the serving path) -----------------------------
+
+    def _body_het(self, carry, xs_t, a_p, y_p, hp: HetParams, n_mask,
+                  has_bt: bool):
+        """One masked iteration with per-instance (traced) problem params.
+
+        Same LC/GC split as ``_body``; differences: sigma2_hat normalizes by
+        the real M, the denoiser runs with traced prior parameters, the
+        Onsager mean covers only real columns, the quantizer bin comes from
+        either the per-instance schedule operand or the per-instance BT
+        tables, and the carry freezes once ``t >= t_active`` (masked
+        early-exit: short requests return their own T-iteration fixpoint
+        regardless of the bucket's T_max). ``has_bt`` is static: batches
+        with no BT request compile without the in-graph controller.
+        """
+        t, sched_delta = xs_t
+        x, z_p, onsager = carry
+        z_new, f_p, s2 = self._local(x, z_p, onsager, a_p, y_p,
+                                     m_eff=hp.m_real)
+
+        if has_bt:
+            bt_delta, bt_rate = bt_delta_for(hp.bt, t, s2)
+            delta = jnp.where(hp.use_bt, bt_delta, sched_delta)
+            rate = jnp.where(hp.use_bt, bt_rate, jnp.float32(jnp.inf))
+        else:
+            delta, rate = sched_delta, jnp.float32(jnp.inf)
+
+        f, extra, syms = self.transport.fuse(f_p, delta)
+        v = s2 + extra
+        eta_fn = lambda g: eta_bg(g, v, hp.eps, hp.mu_s, hp.sigma_s**2)
+        x_new = eta_fn(f) * n_mask
+        # Onsager: mean(eta') over real columns / kappa == sum(eta'*mask)/M
+        deriv = jax.grad(lambda g: jnp.sum(eta_fn(g) * n_mask))(f)
+        onsager_new = jnp.sum(deriv) / hp.m_real
+
+        act = t < hp.t_active
+        x1 = jnp.where(act, x_new, x)
+        z1 = jnp.where(act, z_new, z_p)
+        ons1 = jnp.where(act, onsager_new, onsager)
+        cfg = self.cfg
+        out = (jnp.where(act, s2, 0.0), jnp.where(act, delta, 0.0),
+               jnp.where(act, extra, 0.0),
+               jnp.where(act, rate, jnp.float32(jnp.inf)),
+               x1 if cfg.collect_xs else jnp.zeros(()),
+               syms if cfg.collect_symbols else jnp.zeros(()))
+        return (x1, z1, ons1), out
+
+    def _scan_fn_het(self, mp_: int, n: int, has_bt: bool):
+        """Jitted vmapped heterogeneous-batch solve for one padded shape."""
+        key = ("het", mp_, n, has_bt)
+        if key not in self._jit_cache:
+            cfg = self.cfg
+
+            def solve_one(a_p, y_p, hp: HetParams):
+                n_mask = (jnp.arange(n) < hp.n_real).astype(jnp.float32)
+                init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
+                        jnp.zeros(()))
+                body = lambda c, xs: self._body_het(c, xs, a_p, y_p, hp,
+                                                    n_mask, has_bt)
+                (x, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), hp.sched))
+                return x, outs
+
+            self._jit_cache[key] = jax.jit(jax.vmap(solve_one))
+        return self._jit_cache[key]
+
+    def solve_het(self, a_b, y_b, params: HetParams,
+                  has_bt: bool | None = None) -> EngineTrace:
+        """Solve a heterogeneous batch of B padded CS instances.
+
+        a_b (B, P, M_pad/P, N_pad) — per-processor shards, each processor's
+        real rows padded with zero rows *within its own shard* (so the
+        row->processor partition matches the unpadded single solve exactly);
+        y_b (B, P, M_pad/P) zero-padded the same way. ``params`` carries the
+        per-instance operands with a leading B axis. Results for instance i
+        are valid on the first ``n_real[i]`` columns / ``t_active[i]``
+        iterations of the trace. ``has_bt`` (static) may be passed by
+        callers that know no instance uses BT; None derives it from
+        ``params.use_bt``.
+        """
+        a_b = jnp.asarray(a_b, jnp.float32)
+        y_b = jnp.asarray(y_b, jnp.float32)
+        b, p, mp_, n = a_b.shape
+        assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
+        assert y_b.shape == (b, p, mp_)
+        if has_bt is None:
+            has_bt = bool(np.any(np.asarray(params.use_bt)))
+        x, outs = self._scan_fn_het(mp_, n, has_bt)(a_b, y_b, params)
         return self._trace(x, outs)
 
     def solve_host_loop(self, y, a_mat, host_schedule=None) -> EngineTrace:

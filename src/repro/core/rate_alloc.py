@@ -30,7 +30,24 @@ from .rate_distortion import RDModel
 from .state_evolution import CSProblem, se_trajectory
 
 __all__ = ["BTController", "bt_schedule_offline", "dp_allocate", "DPResult",
-           "rate_for_sigma_q2", "sigma_q2_for_rate"]
+           "rate_for_sigma_q2", "sigma_q2_for_rate", "stack_schedules"]
+
+
+def stack_schedules(schedules, n_iter: int) -> np.ndarray:
+    """Stack variable-length per-request delta schedules into (B, n_iter).
+
+    The serving layer buckets requests with different iteration counts into
+    one scan of length ``n_iter`` (the bucket's T_max); shorter schedules
+    are padded with +inf — lossless no-op bins that sit beyond the
+    request's ``t_active`` early-exit mask, so they are never acted on.
+    """
+    out = np.full((len(schedules), n_iter), np.inf, np.float32)
+    for i, sched in enumerate(schedules):
+        sched = np.asarray(sched, np.float32)
+        assert sched.ndim == 1 and len(sched) <= n_iter, \
+            f"schedule {i}: {sched.shape} exceeds bucket T_max={n_iter}"
+        out[i, :len(sched)] = sched
+    return out
 
 
 # ---------------------------------------------------------------------------

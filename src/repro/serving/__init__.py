@@ -1,0 +1,13 @@
+"""Serving front for the unified AMP engine (DESIGN.md §5).
+
+Heterogeneous CS solve requests -> shape buckets -> vmapped batched engine
+calls -> per-request results with realized-rate accounting.
+"""
+from .batcher import Batcher
+from .buckets import BucketKey, BucketPolicy, bucket_for, pad_batch_size
+from .service import SolveRequest, SolveResult, SolveService
+
+__all__ = [
+    "Batcher", "BucketKey", "BucketPolicy", "bucket_for", "pad_batch_size",
+    "SolveRequest", "SolveResult", "SolveService",
+]

@@ -1,0 +1,43 @@
+"""Continuous batching: group submitted requests by bucket, dispatch full
+batches eagerly, flush stragglers on demand (DESIGN.md §5).
+
+The batcher owns no compute — it only decides *which* requests form the
+next ``solve_het`` call. A group dispatches as soon as it reaches
+``policy.max_batch`` (so a steady stream of same-bucket requests runs at
+the full batch width without waiting for a flush), and ``drain`` hands
+back whatever is left, largest groups first (they amortize best).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+from .buckets import BucketKey, BucketPolicy
+
+__all__ = ["Batcher"]
+
+
+class Batcher:
+    def __init__(self, policy: BucketPolicy):
+        self.policy = policy
+        # insertion-ordered so flush keeps request arrival order stable
+        # within a bucket
+        self._groups: "OrderedDict[BucketKey, list]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return sum(len(g) for g in self._groups.values())
+
+    def add(self, key: BucketKey, req):
+        """Queue one request; returns (key, batch) if its group is now full,
+        else None."""
+        group = self._groups.setdefault(key, [])
+        group.append(req)
+        if len(group) >= self.policy.max_batch:
+            del self._groups[key]
+            return key, group
+        return None
+
+    def drain(self):
+        """Yield all remaining (key, batch) groups, largest first."""
+        groups = sorted(self._groups.items(), key=lambda kv: -len(kv[1]))
+        self._groups.clear()
+        yield from groups

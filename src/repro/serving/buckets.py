@@ -1,0 +1,96 @@
+"""Shape bucketing for the AMP solve service (DESIGN.md §5).
+
+Heterogeneous solve requests arrive with arbitrary (N, M, P, T). XLA
+compiles one program per shape, so the service pads every request up to a
+small set of canonical shapes — the *buckets* — and reuses one compiled
+``AmpEngine.solve_het`` per bucket. The bucket key is exactly the set of
+*structural* parameters (things that change array shapes or the traced
+program); everything else (prior, SNR, schedule, BT tables, iteration
+count) rides as vmapped per-instance operands inside the batch.
+
+Padding semantics (must preserve single-solve results bit-near-exactly):
+
+  * columns: N -> n_pad with zero columns of A; the engine masks the
+    denoiser/Onsager to the real columns, so padded entries stay 0.
+  * rows: padded *per processor shard* (each processor keeps exactly its
+    unpadded rows plus zeros), so the row->processor partition — and with
+    it each f^p message and its quantization error — matches the unpadded
+    solve. Zero rows keep z = 0 forever and sigma2_hat normalizes by the
+    real M.
+  * iterations: T -> t_max with masked early-exit (t_active per instance).
+  * batch: B -> next power of two (recompile amortization); the batcher
+    fills the pad slots by repeating real requests and drops the copies.
+
+For block-quantized transports, ``n_quantum`` must divide the transport
+block size: then ceil(n_pad/block) == ceil(n/block) and the per-block
+scales (hence the injected-noise accounting) match the unpadded solve.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["BucketPolicy", "BucketKey", "bucket_for", "pad_batch_size",
+           "TRANSPORT_BLOCK"]
+
+# scale-block length of the block-quantized transports (QuantConfig.block
+# as instantiated by serving/service.py); "ecsq" has no block structure
+TRANSPORT_BLOCK = {"block8": 512, "block4": 512}
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """Rounding quanta that trade padding waste against compile-cache size."""
+
+    n_quantum: int = 256     # signal length padded to a multiple
+    mp_quantum: int = 16     # per-processor measurement rows padded to a multiple
+    t_quantum: int = 4       # scan length padded to a multiple
+    max_batch: int = 128     # dispatch threshold for continuous batching
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketKey:
+    """Structural shape of one compiled solve (the compile-cache key)."""
+
+    n_pad: int               # padded signal length
+    mp_pad: int              # padded rows per processor (M_pad = P * mp_pad)
+    n_proc: int              # processor count (partition structure)
+    t_max: int               # scan length
+    transport: str           # "ecsq" | "block8" | "block4"
+
+    @property
+    def m_pad(self) -> int:
+        return self.n_proc * self.mp_pad
+
+
+def _round_up(v: int, q: int) -> int:
+    return -(-v // q) * q
+
+
+def bucket_for(n: int, m: int, n_proc: int, n_iter: int, transport: str,
+               policy: BucketPolicy) -> BucketKey:
+    """Map a request's structural parameters to its bucket."""
+    assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
+    block = TRANSPORT_BLOCK.get(transport)
+    if block is not None:
+        # otherwise column padding can add scale blocks the unpadded solve
+        # does not have, silently skewing quant_noise_var (module docstring)
+        assert block % policy.n_quantum == 0, \
+            f"n_quantum={policy.n_quantum} must divide the {transport} " \
+            f"scale block ({block}) to keep noise accounting pad-invariant"
+    return BucketKey(
+        n_pad=_round_up(n, policy.n_quantum),
+        mp_pad=_round_up(m // n_proc, policy.mp_quantum),
+        n_proc=n_proc,
+        t_max=_round_up(n_iter, policy.t_quantum),
+        transport=transport,
+    )
+
+
+def pad_batch_size(b: int, policy: BucketPolicy) -> int:
+    """Next power of two >= b (capped at max_batch), so the vmapped solve
+    compiles for O(log max_batch) distinct batch sizes per bucket."""
+    assert 1 <= b <= policy.max_batch
+    p = 1
+    while p < b:
+        p <<= 1
+    return min(p, policy.max_batch)

@@ -1,0 +1,355 @@
+"""AMP solve service: heterogeneous requests -> bucketed batched engine
+calls -> per-request results with realized-rate accounting (DESIGN.md §5).
+
+One ``SolveService`` owns a compile cache of ``AmpEngine``s (one per
+``BucketKey``), a table cache of per-operating-point BT controllers, and a
+``Batcher``. Requests may differ in *everything* the paper varies — shape
+(N, M), processor count P, prior sparsity, SNR, iteration budget T, and
+rate policy (lossless / fixed schedule / offline DP / online BT) — and the
+service still executes them as a handful of vmapped ``solve_het`` calls:
+structural parameters select the bucket, everything else rides as
+per-instance operands (``HetParams``).
+
+Usage::
+
+    svc = SolveService()
+    results = svc.solve([SolveRequest(y=y, a=a, prior=prior, policy="bt"),
+                         SolveRequest(y=y2, a=a2, n_iter=6, policy="fixed",
+                                      deltas=np.full(6, 0.05)), ...])
+
+or streaming (continuous batching)::
+
+    for res in svc.stream(request_iter):
+        ...  # results arrive per request as each bucket batch completes
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core.denoisers import BernoulliGauss
+from ..core.engine import (AmpEngine, BlockQuantTransport, BTRateControl,
+                           BTTables, EcsqTransport, EngineConfig, HetParams,
+                           pad_bt_tables, stack_bt_tables)
+from ..core.quantize import ecsq_entropy, message_mixture
+from ..core.rate_alloc import dp_allocate, stack_schedules
+from ..core.rate_distortion import RDModel
+from ..core.state_evolution import CSProblem
+from .batcher import Batcher
+from .buckets import BucketKey, BucketPolicy, bucket_for, pad_batch_size
+
+__all__ = ["SolveRequest", "SolveResult", "SolveService"]
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    """One CS recovery request: y = A s0 + e, recover s0.
+
+    ``policy`` selects the rate control:
+      * ``"lossless"`` — exact fusion (the paper's 32-bit baseline),
+      * ``"fixed"``    — caller-provided per-iteration bin sizes ``deltas``,
+      * ``"dp"``       — offline-optimal DP allocation for ``dp_total_bits``
+                         (paper Sec. 3.4); ``deltas`` may be pre-computed,
+                         otherwise the service runs ``dp_allocate`` (the
+                         RD model table is disk-cached per prior),
+      * ``"bt"``       — online back-tracking (paper Sec. 3.3); in-graph
+                         tables are built once per operating point
+                         (prior, SNR, kappa, P, T) and cached.
+    """
+
+    y: np.ndarray
+    a: np.ndarray
+    prior: BernoulliGauss = dataclasses.field(default_factory=BernoulliGauss)
+    snr_db: float = 20.0
+    n_proc: int = 10
+    n_iter: int = 8
+    policy: str = "lossless"
+    deltas: np.ndarray | None = None      # fixed / precomputed dp
+    dp_total_bits: float | None = None    # dp (default 2.0 * n_iter)
+    bt_c_ratio: float = 1.005
+    bt_r_max: float = 6.0
+    transport: str = "ecsq"               # "ecsq" | "block8" | "block4"
+    request_id: int = -1                  # assigned at submit
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[1]
+
+    @property
+    def m(self) -> int:
+        return self.a.shape[0]
+
+    def problem(self) -> CSProblem:
+        return CSProblem(n=self.n, m=self.m, prior=self.prior,
+                         snr_db=self.snr_db)
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Per-request output, unpadded back to the request's own (N, T).
+
+    ``rates`` is bits/element/processor per iteration: the BT controller's
+    in-graph decision for ``policy="bt"``, the analytic ECSQ entropy H_Q of
+    the model message mixture for finite fixed/DP bins, the fixed wire
+    width (bits + amortized bf16 scale) for block transports, and +inf for
+    lossless-fusion iterations (untracked, excluded from ``total_bits`` —
+    same convention as ``MPAMPResult``).
+    """
+
+    request_id: int
+    x: np.ndarray             # (N,) final estimate
+    sigma2_hat: np.ndarray    # (T,) plug-in variances, post-LC
+    deltas: np.ndarray        # (T,) realized bin sizes (inf = lossless)
+    extra_var: np.ndarray     # (T,) transport-injected variance P*sigma_Q^2
+    rates: np.ndarray         # (T,) bits/element/processor
+    total_bits: float         # sum of finite per-iteration rates
+    bucket: BucketKey         # where this request was executed
+    batch_size: int           # real requests in the executed batch
+
+    def mse(self, s0: np.ndarray) -> float:
+        return float(np.mean((self.x - np.asarray(s0)) ** 2))
+
+
+_TRANSPORTS = {
+    "ecsq": EcsqTransport,
+    "block8": lambda: BlockQuantTransport(bits=8, block=512),
+    "block4": lambda: BlockQuantTransport(bits=4, block=512),
+}
+
+
+class SolveService:
+    """Shape-bucketed continuous batching over ``AmpEngine.solve_het``."""
+
+    def __init__(self, policy: BucketPolicy | None = None,
+                 collect_xs: bool = False, rate_accounting: bool = True,
+                 use_kernel: bool | None = None,
+                 kernel_interpret: bool = False):
+        self.policy = policy or BucketPolicy()
+        self.collect_xs = collect_xs
+        self.rate_accounting = rate_accounting
+        self.use_kernel = use_kernel
+        self.kernel_interpret = kernel_interpret
+        self._batcher = Batcher(self.policy)
+        self._engines: dict[BucketKey, AmpEngine] = {}
+        self._bt_cache: dict = {}
+        self._rd_cache: dict = {}
+        self._completed: list[SolveResult] = []
+        self._next_id = 0
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, req: SolveRequest) -> int:
+        """Queue one request; a full bucket group dispatches immediately
+        (results buffered until ``flush``/``stream`` hands them out)."""
+        req = self._prepare(req)
+        full = self._batcher.add(self._key_for(req), req)
+        if full is not None:
+            self._completed.extend(self._run_bucket(*full))
+        return req.request_id
+
+    def flush(self) -> list[SolveResult]:
+        """Dispatch all pending groups; return every buffered result."""
+        for key, group in self._batcher.drain():
+            self._completed.extend(self._run_bucket(key, group))
+        out, self._completed = self._completed, []
+        return out
+
+    def solve(self, reqs) -> list[SolveResult]:
+        """Submit + flush; results in submission order. Results belonging
+        to earlier ``submit`` calls that this flush happened to complete
+        stay buffered for their own ``flush``/``stream`` consumer."""
+        ids = [self.submit(r) for r in reqs]
+        own = set(ids)
+        by_id = {}
+        for r in self.flush():
+            if r.request_id in own:
+                by_id[r.request_id] = r
+            else:
+                self._completed.append(r)
+        return [by_id[i] for i in ids]
+
+    def stream(self, reqs):
+        """Continuous batching: yield results per request as each bucket
+        batch completes; stragglers flush when the input is exhausted.
+        Like ``solve``, results belonging to other consumers' earlier
+        ``submit`` calls stay buffered for them."""
+        own = set()
+
+        def take_own():
+            keep = []
+            for r in self._completed:
+                if r.request_id in own:
+                    yield r
+                else:
+                    keep.append(r)
+            self._completed = keep
+
+        for r in reqs:
+            own.add(self.submit(r))
+            if self._completed:
+                yield from take_own()
+        for key, group in self._batcher.drain():
+            self._completed.extend(self._run_bucket(key, group))
+        yield from take_own()
+
+    # -- internals -----------------------------------------------------------
+
+    def _prepare(self, req: SolveRequest) -> SolveRequest:
+        if req.request_id >= 0:
+            # template reuse: resubmitting an already-served request object
+            # must not alias two queue entries onto one id (cold path)
+            req = dataclasses.replace(req)
+        # id assignment mutates in place: dataclasses.replace would copy the
+        # request row on the hot path for no benefit
+        req.request_id = self._next_id
+        self._next_id += 1
+        assert req.policy in ("lossless", "fixed", "dp", "bt"), req.policy
+        assert req.transport in _TRANSPORTS, req.transport
+        if req.transport != "ecsq":
+            # block transports fix the rate by wire width and ignore the
+            # controller's bin size — an ECSQ rate policy would be silently
+            # unenforced (and its rate accounting fiction)
+            assert req.policy == "lossless", \
+                f"policy={req.policy!r} has no effect under " \
+                f"transport={req.transport!r}; use policy='lossless'"
+        assert req.m % req.n_proc == 0, \
+            f"M={req.m} not divisible by P={req.n_proc}"
+        if req.policy == "fixed":
+            assert req.deltas is not None, "fixed policy needs deltas"
+            assert len(req.deltas) == req.n_iter
+        if req.policy == "dp" and req.deltas is None:
+            req = dataclasses.replace(req, deltas=self._dp_deltas(req))
+        return req
+
+    def _key_for(self, req: SolveRequest) -> BucketKey:
+        return bucket_for(req.n, req.m, req.n_proc, req.n_iter,
+                          req.transport, self.policy)
+
+    def _engine(self, key: BucketKey) -> AmpEngine:
+        eng = self._engines.get(key)
+        if eng is None:
+            cfg = EngineConfig(
+                n_proc=key.n_proc, n_iter=key.t_max,
+                use_kernel=self.use_kernel,
+                kernel_interpret=self.kernel_interpret,
+                collect_symbols=False, collect_xs=self.collect_xs)
+            eng = AmpEngine(BernoulliGauss(), cfg,
+                            _TRANSPORTS[key.transport]())
+            self._engines[key] = eng
+        return eng
+
+    def _dp_deltas(self, req: SolveRequest) -> np.ndarray:
+        """Offline DP allocation realized as ECSQ bin sizes (DPSchedule)."""
+        from ..core.engine import DPSchedule
+        prob = req.problem()
+        rd = self._rd_cache.get(req.prior)
+        if rd is None:
+            rd = self._rd_cache[req.prior] = RDModel(req.prior)
+        r_total = (req.dp_total_bits if req.dp_total_bits is not None
+                   else 2.0 * req.n_iter)
+        dp = dp_allocate(prob, req.n_proc, req.n_iter, r_total, rd=rd)
+        return DPSchedule(dp, rd, req.n_proc).deltas
+
+    def _bt_tables(self, req: SolveRequest, t_max: int) -> BTTables:
+        """Padded in-graph tables for one operating point, memoized per
+        (operating point, t_max) so repeated/pad-slot requests share one
+        object — which keeps ``stack_bt_tables``'s zero-copy fast path."""
+        key = (req.prior, round(req.snr_db, 6), req.n, req.m, req.n_proc,
+               req.n_iter, req.bt_c_ratio, req.bt_r_max)
+        padded = self._bt_cache.get((key, t_max))
+        if padded is None:
+            ctrl = self._bt_cache.get(key)
+            if ctrl is None:
+                ctrl = BTRateControl(req.problem(), req.n_proc, req.n_iter,
+                                     req.bt_c_ratio, req.bt_r_max, "ecsq")
+                self._bt_cache[key] = ctrl
+            padded = pad_bt_tables(ctrl.tables, t_max)
+            self._bt_cache[(key, t_max)] = padded
+        return padded
+
+    def _run_bucket(self, key: BucketKey, reqs: list) -> list[SolveResult]:
+        b_real = len(reqs)
+        b_pad = pad_batch_size(b_real, self.policy)
+        # fill pad slots by repeating real requests (their results are
+        # dropped); keeps every instance numerically benign
+        batch = [reqs[i % b_real] for i in range(b_pad)]
+
+        p, mp_pad, n_pad, t_max = (key.n_proc, key.mp_pad, key.n_pad,
+                                   key.t_max)
+        a_b = np.zeros((b_pad, p, mp_pad, n_pad), np.float32)
+        y_b = np.zeros((b_pad, p, mp_pad), np.float32)
+        scheds, tacts, mreals, nreals = [], [], [], []
+        eps, mus, sss, use_bt, tables = [], [], [], [], []
+        for i, r in enumerate(batch):
+            mp = r.m // p
+            a_b[i, :, :mp, :r.n] = np.asarray(r.a, np.float32).reshape(
+                p, mp, r.n)
+            y_b[i, :, :mp] = np.asarray(r.y, np.float32).reshape(p, mp)
+            if r.policy in ("fixed", "dp"):
+                scheds.append(np.asarray(r.deltas, np.float32))
+            else:  # lossless / bt: schedule operand unused or all-lossless
+                scheds.append(np.full(r.n_iter, np.inf, np.float32))
+            tacts.append(r.n_iter)
+            mreals.append(r.m)
+            nreals.append(r.n)
+            eps.append(r.prior.eps)
+            mus.append(r.prior.mu_s)
+            sss.append(r.prior.sigma_s)
+            if r.policy == "bt":
+                use_bt.append(True)
+                tables.append(self._bt_tables(r, t_max))
+            else:
+                use_bt.append(False)
+                tables.append(BTTables.dummy(t_max))
+
+        has_bt = any(use_bt)
+        params = HetParams(
+            sched=stack_schedules(scheds, t_max),
+            t_active=np.asarray(tacts, np.int32),
+            m_real=np.asarray(mreals, np.float32),
+            n_real=np.asarray(nreals, np.int32),
+            eps=np.asarray(eps, np.float32),
+            mu_s=np.asarray(mus, np.float32),
+            sigma_s=np.asarray(sss, np.float32),
+            use_bt=np.asarray(use_bt),
+            bt=stack_bt_tables(tables),
+        )
+        trace = self._engine(key).solve_het(a_b, y_b, params, has_bt=has_bt)
+
+        out = []
+        for i, r in enumerate(reqs):
+            t = r.n_iter
+            s2 = trace.sigma2_hat[i, :t]
+            deltas = trace.deltas[i, :t]
+            rates = self._rates(r, s2, deltas, trace.rates[i, :t])
+            finite = np.isfinite(rates)
+            out.append(SolveResult(
+                request_id=r.request_id,
+                x=trace.x[i, :r.n].copy(),
+                sigma2_hat=s2.copy(), deltas=deltas.copy(),
+                extra_var=trace.extra_var[i, :t].copy(), rates=rates,
+                total_bits=float(rates[finite].sum()),
+                bucket=key, batch_size=b_real,
+            ))
+        return out
+
+    def _rates(self, req: SolveRequest, s2, deltas, bt_rates) -> np.ndarray:
+        """Realized-rate accounting for one request (see SolveResult)."""
+        if req.policy == "bt":
+            return np.asarray(bt_rates, np.float64)
+        if req.transport != "ecsq":
+            # block transports spend a fixed wire rate every iteration:
+            # `bits` per element plus a bf16 scale per block
+            tp = _TRANSPORTS[req.transport]()
+            return np.full(req.n_iter, tp.bits + 16.0 / tp.block)
+        rates = np.full(req.n_iter, np.inf)
+        if not self.rate_accounting:
+            return rates
+        for t in range(req.n_iter):
+            d = float(deltas[t])
+            if math.isfinite(d):
+                mix = message_mixture(req.prior, float(s2[t]), req.n_proc)
+                rates[t] = float(ecsq_entropy(d, mix)[0])
+        return rates

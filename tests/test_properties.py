@@ -107,6 +107,50 @@ print('ok')
 
 
 # ---------------------------------------------------------------------------
+# int4/int8 block-quantization round-trip properties (the serving/collective
+# wire format: core/compression.py)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([4, 8]), block=st.sampled_from([128, 512]),
+       n=st.integers(1, 1500), seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-3, 1e3))
+def test_block_quantize_roundtrip_properties(bits, block, n, seed, scale):
+    """pack/unpack identity, |dequant error| <= Delta_b/2, and the
+    quant_noise_var accounting upper-bounds the realized MSE."""
+    from repro.core.compression import (QuantConfig, dequantize_blocks,
+                                        pack_int4, quant_noise_var,
+                                        quantize_blocks, unpack_int4)
+    qc = QuantConfig(bits=bits, block=block)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=(2, n)) * scale).astype(np.float32))
+    q, s = quantize_blocks(x, qc)
+
+    # (a) symbols bounded by the wire width (no silent overflow)
+    assert int(jnp.abs(q).max()) <= qc.qmax
+
+    # (b) int4 wire format: pack/unpack is the identity on symbols
+    if bits == 4:
+        assert (unpack_int4(pack_int4(q)) == q).all()
+
+    # (c) per-element reconstruction error <= Delta_b/2: the bf16 scale
+    # nudge guarantees the max element never clips
+    deq = np.asarray(dequantize_blocks(q, s, qc, orig_len=n))
+    err = np.abs(deq - np.asarray(x))
+    d_elem = np.repeat(np.asarray(s, np.float32), qc.block, axis=-1)[:, :n]
+    assert (err <= d_elem / 2 + 1e-6 * float(scale)).all()
+
+    # (d) quant_noise_var = mean(Delta_b^2)/12 upper-bounds the realized
+    # MSE up to the uniform-error worst case factor 3 (Delta^2/4 vs /12);
+    # measured over the padded layout (q keeps the block padding)
+    deq_pad = np.asarray(dequantize_blocks(q, s, qc))
+    x_pad = np.zeros_like(deq_pad)
+    x_pad[:, :n] = np.asarray(x)
+    mse = float(np.mean((deq_pad - x_pad) ** 2))
+    assert mse <= 3.0 * float(quant_noise_var(s, qc)) + 1e-12 * scale**2
+
+
+# ---------------------------------------------------------------------------
 # quantized SE monotonicity in the rate (more bits never hurt)
 # ---------------------------------------------------------------------------
 
