@@ -1,21 +1,30 @@
-"""Serving-layer benchmark: batched SolveService vs sequential solves.
+"""Serving-layer benchmark: batching and mesh-placement throughput.
 
-For each batch width B, solves the same B CS requests two ways:
+Three measurements (DESIGN.md §5-§6):
 
-  * sequential — one ``AmpEngine.solve`` per request (the pre-serving code
-    path: compiled scan, no per-iteration host sync, but one dispatch per
-    request), and
-  * service    — one ``SolveService`` call, i.e. a single vmapped
-    ``solve_het`` dispatch over the whole bucket.
+  * batched vs sequential — the same B CS requests solved one
+    ``AmpEngine.solve`` at a time vs one ``SolveService`` dispatch
+    (ISSUE 2 acceptance: >=5x at B=32 on CPU), and
+  * data-parallel placement — the same bucket load through a service
+    whose batch axis is sharded across ``--devices`` mesh devices
+    (compare req/s against a ``--devices 1`` run; ISSUE 3 acceptance:
+    >=3x at 8 devices on a multi-core host), and
+  * processor-sharded placement — one large single request whose P maps
+    onto the mesh axis, exact wire vs int8 compressed wire.
 
-Reports requests/s and the batched/sequential speedup (ISSUE 2 acceptance:
->=5x at B=32 on CPU).
+Results print as a table and are written machine-readable to
+``BENCH_serve.json`` (req/s, per-placement timings, compiled-bucket
+count) so CI can archive the perf trajectory.
 
-  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke]
+  PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--devices 8]
+
+``--devices K`` forces K host-platform devices (set XLA_FLAGS before the
+first jax import; run once with K=1 and once with K=8 to compare).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -23,18 +32,15 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
-import jax
-import numpy as np
-
-from repro.core.amp import sample_problem
-from repro.core.denoisers import BernoulliGauss
-from repro.core.engine import (AmpEngine, EcsqTransport, EngineConfig,
-                               FixedSchedule)
-from repro.core.state_evolution import CSProblem
-from repro.serving import BucketPolicy, SolveRequest, SolveService
-
 
 def make_load(n: int, m: int, p: int, t: int, b: int, eps: float = 0.1):
+    import jax
+    import numpy as np
+    from repro.core.amp import sample_problem
+    from repro.core.denoisers import BernoulliGauss
+    from repro.core.state_evolution import CSProblem
+    from repro.serving import SolveRequest
+
     prior = BernoulliGauss(eps=eps)
     prob = CSProblem(n=n, m=m, prior=prior, snr_db=20.0)
     deltas = np.full(t, 0.05, np.float32)
@@ -49,7 +55,24 @@ def make_load(n: int, m: int, p: int, t: int, b: int, eps: float = 0.1):
     return prior, deltas, reqs, s0s
 
 
+def best_of(fn, reps: int):
+    # min over reps: robust to noisy-neighbor jitter on shared hosts
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.time()
+        res = fn()
+        best = min(best, time.time() - t0)
+        out = res
+    return best, out
+
+
 def bench_width(n: int, m: int, p: int, t: int, b: int, reps: int):
+    """Batched service vs one-solve-at-a-time, single device."""
+    import numpy as np
+    from repro.core.engine import (AmpEngine, EcsqTransport, EngineConfig,
+                                   FixedSchedule)
+    from repro.serving import BucketPolicy, SolveService
+
     prior, deltas, reqs, s0s = make_load(n, m, p, t, b)
 
     # sequential baseline: one engine (compile shared across requests),
@@ -63,17 +86,7 @@ def bench_width(n: int, m: int, p: int, t: int, b: int, reps: int):
     def run_seq():
         return [eng.solve(r.y, r.a) for r in reqs]
 
-    def best_of(fn):
-        # min over reps: robust to noisy-neighbor jitter on shared hosts
-        best, out = float("inf"), None
-        for _ in range(reps):
-            t0 = time.time()
-            res = fn()
-            best = min(best, time.time() - t0)
-            out = res
-        return best, out
-
-    dt_seq, seq_res = best_of(run_seq)
+    dt_seq, seq_res = best_of(run_seq, reps)
 
     # batched service: everything lands in one bucket -> one solve_het call
     # (quanta sized to the load so the bucket pads nothing; the default
@@ -82,7 +95,7 @@ def bench_width(n: int, m: int, p: int, t: int, b: int, reps: int):
                                            n_quantum=64, mp_quantum=8),
                        rate_accounting=False)
     svc.solve(reqs)  # warmup/compile
-    dt_svc, svc_res = best_of(lambda: svc.solve(reqs))
+    dt_svc, svc_res = best_of(lambda: svc.solve(reqs), reps)
 
     # correctness spot check: batched == sequential estimates
     max_mse_diff = max(
@@ -91,12 +104,86 @@ def bench_width(n: int, m: int, p: int, t: int, b: int, reps: int):
     return dt_seq, dt_svc, max_mse_diff
 
 
+def bench_data_parallel(n: int, m: int, p: int, t: int, b: int, reps: int,
+                        devices: int):
+    """One bucket of B small requests through the placement dispatcher:
+    batch axis sharded over the mesh when devices > 1, local otherwise."""
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serving import BucketPolicy, SolveService
+    from repro.serving.buckets import round_up
+
+    _, _, reqs, _ = make_load(n, m, p, t, b)
+    # pin the mesh to the requested device count even if the host exposes
+    # more (a pre-set XLA_FLAGS would otherwise mislabel the measurement);
+    # max_batch must be a device multiple for data-parallel dispatch
+    mesh = make_serve_mesh(devices) if devices > 1 else None
+    svc = SolveService(policy=BucketPolicy(max_batch=round_up(max(b, devices),
+                                                              devices),
+                                           n_quantum=64, mp_quantum=8),
+                       rate_accounting=False, mesh=mesh)
+    res = svc.solve(reqs)  # warmup/compile
+    placement = res[0].bucket.placement
+    dt, _ = best_of(lambda: svc.solve(reqs), reps)
+    return dt, placement, len(svc._engines)
+
+
+def bench_proc_sharded(n: int, m: int, p: int, t: int, reps: int,
+                       devices: int):
+    """One large single request: processor-sharded over the mesh (exact
+    and int8-compressed wire) when devices > 1, local otherwise."""
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serving import BucketPolicy, SolveService
+    from repro.serving.buckets import round_up
+
+    _, _, reqs, _ = make_load(n, m, p, t, 1)
+    req = reqs[0]
+    mesh = make_serve_mesh(devices) if devices > 1 else None
+    max_batch = round_up(128, devices)
+    out = {}
+    for transport in ("ecsq", "block8"):
+        svc = SolveService(policy=BucketPolicy(shard_elems=1,
+                                               max_batch=max_batch),
+                           rate_accounting=False, mesh=mesh)
+        r = dataclass_replace(req, transport=transport,
+                              policy="lossless", deltas=None)
+        res, = svc.solve([r])  # warmup/compile
+        dt, _ = best_of(lambda: svc.solve([r]), reps)
+        out[transport] = {"seconds": dt, "placement": res.bucket.placement}
+    return out
+
+
+def dataclass_replace(req, **kw):
+    import dataclasses
+    return dataclasses.replace(req, request_id=-1, **kw)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="smaller problem + widths, 1 rep (CI sanity)")
+                    help="smaller problem + widths, fewer reps (CI sanity)")
     ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="force this many host-platform devices (mesh "
+                         "placements activate above 1)")
+    ap.add_argument("--json", default="BENCH_serve.json",
+                    help="machine-readable output path ('' disables)")
     args = ap.parse_args()
+
+    if args.devices > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{args.devices}").strip()
+
+    import jax  # first jax import happens after XLA_FLAGS is set
+
+    assert jax.device_count() >= args.devices, \
+        (jax.device_count(), args.devices)
+
+    report = {"devices": args.devices, "smoke": bool(args.smoke),
+              "backend": jax.default_backend(), "batched": [],
+              "data_parallel": {}, "proc_sharded": {}}
 
     # the serving regime: many small per-user recoveries, where a single
     # solve is per-dispatch/per-op overhead-bound and batching amortizes it
@@ -110,7 +197,6 @@ def main():
           f"{jax.default_backend() == 'cpu'})")
     print(f"{'B':>4s} {'seq req/s':>10s} {'svc req/s':>10s} "
           f"{'speedup':>8s} {'max mse diff':>13s}")
-    rows = []
     speedups = {}
     for b in widths:
         dt_seq, dt_svc, dmse = bench_width(n, m, p, t, b, reps)
@@ -118,12 +204,39 @@ def main():
         speedups[b] = sp
         print(f"{b:4d} {b / dt_seq:10.1f} {b / dt_svc:10.1f} "
               f"{sp:7.2f}x {dmse:13.2e}")
-        rows.append(f"serve_b{b},{dt_svc / b * 1e6:.0f},"
-                    f"speedup_vs_seq={sp:.2f}x;max_mse_diff={dmse:.2e}")
+        report["batched"].append({
+            "batch": b, "seq_req_s": b / dt_seq, "svc_req_s": b / dt_svc,
+            "speedup": sp, "max_mse_diff": dmse})
 
-    print("\nname,us_per_request,derived")
-    for r in rows:
-        print(r)
+    # data-parallel placement: a compute-bound bucket where sharding the
+    # batch across devices pays (the tiny dispatch-bound load above would
+    # only measure collective overhead)
+    ndp, mdp, bdp = (512, 128, 8) if args.smoke else (2048, 512, 32)
+    dt_dp, placement, n_buckets = bench_data_parallel(
+        ndp, mdp, p, t, bdp, max(2, reps // 2), args.devices)
+    print(f"\ndata-parallel bucket: N={ndp} M={mdp} B={bdp} "
+          f"placement={placement} devices={args.devices}: "
+          f"{bdp / dt_dp:.1f} req/s")
+    report["data_parallel"] = {
+        "n": ndp, "m": mdp, "batch": bdp, "placement": placement,
+        "req_s": bdp / dt_dp, "seconds": dt_dp,
+        "compiled_buckets": n_buckets}
+
+    # processor-sharded placement: one large request, the mesh axis as the
+    # paper's P, exact vs compressed wire
+    nps, mps, pps = (2048, 512, 8) if args.smoke else (8192, 2048, 8)
+    proc = bench_proc_sharded(nps, mps, pps, t, max(2, reps // 2),
+                              args.devices)
+    for tr, row in proc.items():
+        print(f"proc-sharded single:  N={nps} M={mps} P={pps} wire={tr} "
+              f"placement={row['placement']}: {row['seconds']*1e3:.1f} ms")
+    report["proc_sharded"] = {"n": nps, "m": mps, "p": pps, **proc}
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nwrote {args.json}")
+
     if 32 in speedups and speedups[32] < 5.0:
         print(f"WARNING: B=32 speedup {speedups[32]:.2f}x below the 5x "
               f"acceptance target")

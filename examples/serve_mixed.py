@@ -54,7 +54,7 @@ def main():
         eps, snr, n, m, p, t, policy = spec
         final_sdr = 10 * np.log10(prob.prior.second_moment
                                   / max(res.mse(s0), 1e-30))
-        bits = f"{res.total_bits:10.2f}" if res.total_bits else "  lossless"
+        bits = f"{res.total_bits:10.2f}" if res.tracked else "  lossless"
         bk = (f"({res.bucket.n_pad},{res.bucket.m_pad},"
               f"{res.bucket.n_proc},{res.bucket.t_max})")
         print(f"{policy:>9s} {eps:5.2f} {snr:5.1f} {n:5d} {p:3d} {t:3d} "

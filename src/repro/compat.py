@@ -16,7 +16,23 @@ try:  # jax >= 0.5 explicit-sharding API
 except ImportError:  # pragma: no cover - older jax
     AxisType = None
 
-__all__ = ["AxisType", "axis_size", "make_mesh", "shard_map"]
+__all__ = ["AxisType", "axis_size", "make_mesh", "shard_map",
+           "supports_partial_manual"]
+
+
+def supports_partial_manual() -> bool:
+    """Whether shard_map with *partial* manual axes (manual: some, auto:
+    the rest) is usable on the installed jax.
+
+    jax 0.4.x exposes the pattern via the experimental ``auto=`` argument,
+    but the XLA SPMD partitioner it ships trips an ``IsManualSubgroup``
+    CHECK (a process abort, so this cannot be probed at runtime) on the
+    compressed pod-axis fusion pattern; the capability arrived with the
+    jax >= 0.5 explicit AxisType machinery. Fully-manual shard_map — all
+    of the solver paths, ``compressed_psum``, ``AmpEngine.solve_sharded``
+    — works on both lines and needs no gate.
+    """
+    return AxisType is not None
 
 
 def axis_size(axis_name):

@@ -18,6 +18,14 @@ pre-engine ``mp_amp.py`` host loop). A ``vmap``-batched ``solve_many``
 solves many CS instances at once (the serving scenario), and the local
 computation routes through the ``kernels/amp_fused`` Pallas kernel on TPU.
 
+The mesh is an engine axis, not a separate code path (DESIGN.md §6):
+``solve_sharded`` runs the *same* scan body inside ``shard_map`` over a
+mesh axis, with the per-processor (A, y) shards as sharded operands and
+schedules / BT tables riding replicated. Device-collective transports
+(``PsumFusion``, ``CompressedPsumTransport``) make the paper's fusion
+``f_t = sum_p Q(f_t^p)`` an actual (optionally lossy-compressed) collective
+on the device links, with straggler ``drop`` rescaling folded in.
+
 ``core/amp.py`` (centralized), ``core/mp_amp.py`` (emulated multi-processor)
 and ``launch/solver.py`` (mesh-distributed) are thin frontends over this
 module; arbitrary Python rate-controller callables are still supported via
@@ -33,10 +41,13 @@ from typing import NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec
 
+from ..compat import axis_size, shard_map
 from ..kernels.amp_fused.ops import amp_local_step
-from .compression import (QuantConfig, dequantize_blocks, quant_noise_var,
-                          quantize_blocks)
+from .compression import (QuantConfig, compressed_psum, dequantize_blocks,
+                          quant_noise_var, quantize_blocks)
 from .denoisers import BernoulliGauss, eta, eta_bg
 from .quantize import dequantize_midtread, message_mixture, quantize_midtread
 from .rate_alloc import BTController, rate_for_sigma_q2
@@ -46,6 +57,7 @@ from .state_evolution import CSProblem
 __all__ = [
     "AmpEngine", "EngineConfig", "EngineTrace",
     "Transport", "ExactFusion", "EcsqTransport", "BlockQuantTransport",
+    "PsumFusion", "CompressedPsumTransport",
     "RateController", "FixedSchedule", "DPSchedule", "BTRateControl",
     "BTTables", "HetParams", "bt_delta_for", "stack_bt_tables",
     "pad_bt_tables", "amp_gc_step", "split_problem",
@@ -144,6 +156,74 @@ class BlockQuantTransport:
         f = jnp.sum(deq, axis=0)
         extra = quant_noise_var(scale, qc) * n_proc
         return f, extra, q[..., :n].astype(jnp.float32)
+
+
+# -- device-collective transports (run inside shard_map; DESIGN.md §6) ------
+
+def _drop_rescale(f_local, drop, axis: str):
+    """Straggler mitigation as a transport option: zero this shard when
+    ``drop`` is set and rescale the survivors so the fusion stays an
+    unbiased estimate of the full sum (the modified SE absorbs the extra
+    variance exactly like quantization noise). Returns ``(rescaled, keep,
+    scale)`` so callers can apply the matching factors to their own noise
+    accounting."""
+    keep = 1.0 - drop
+    n_dev = axis_size(axis)
+    scale = n_dev / jnp.maximum(lax.psum(keep, axis), 1.0)
+    return f_local * keep * scale, keep, scale
+
+
+@dataclasses.dataclass(frozen=True)
+class PsumFusion:
+    """Exact-wire fusion over a mesh axis: per-device messages are summed
+    locally (optionally through an emulated per-processor ``local``
+    transport, e.g. ``EcsqTransport`` for the paper's quantize-at-each-
+    processor scenario) and psum'd across ``axis``.
+
+    ``fuse`` takes the extra ``drop`` operand (per-iteration straggler flag
+    for this shard); device transports always receive it — the engine's
+    sharded scan threads it as a sharded scan operand.
+    """
+
+    axis: str = "data"
+    local: Transport = dataclasses.field(default_factory=ExactFusion)
+
+    def fuse(self, f_p, delta, drop):
+        f_loc, extra_loc, _ = self.local.fuse(f_p, delta)
+        f_loc, keep, scale = _drop_rescale(f_loc, drop, self.axis)
+        f = lax.psum(f_loc, self.axis)
+        # local fuse saw only this device's emulated processors: psum turns
+        # p_local * sigma_Q^2 into the paper's global P * sigma_Q^2. Under
+        # straggler rescale the survivors' embedded quantization noise is
+        # amplified by scale^2 (dropped shards contribute none), so the
+        # accounting follows the same keep/scale as the messages.
+        extra = lax.psum(extra_loc * keep, self.axis) * scale**2
+        return f, extra, jnp.zeros(())
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedPsumTransport:
+    """Lossy-compressed wire fusion: the device sum itself runs as the
+    two-phase int8/int4 ``compressed_psum`` collective over ``axis``
+    (DESIGN.md §2) — wire bytes drop 4x/8x versus a bf16 ring all-reduce,
+    visible as s8/u8 collective operands in the lowered HLO."""
+
+    axis: str = "data"
+    bits: int = 8
+    block: int = 512
+
+    @property
+    def qc(self) -> QuantConfig:
+        return QuantConfig(bits=self.bits, block=self.block)
+
+    def fuse(self, f_p, delta, drop):
+        f_loc, _, _ = _drop_rescale(jnp.sum(f_p, axis=0), drop, self.axis)
+        # quantization happens after the rescale, so compressed_psum's
+        # realized-scale noise measurement already includes its effect
+        f, noise = compressed_psum(f_loc, self.axis, self.qc)
+        # each device computed the noise from its own send-side scales;
+        # pmean makes the reported accounting a well-defined replicated value
+        return f, lax.pmean(noise, self.axis), jnp.zeros(())
 
 
 # ---------------------------------------------------------------------------
@@ -541,12 +621,14 @@ class AmpEngine:
 
     # -- shared iteration body ----------------------------------------------
 
-    def _local(self, x, z_p, onsager, a_p, y_p, m_eff=None):
+    def _local(self, x, z_p, onsager, a_p, y_p, m_eff=None, axis=None):
         """LC: per-processor residual + message via the fused kernel path.
 
         ``m_eff`` overrides the sigma2_hat normalizer (the heterogeneous
         path passes the *real* measurement count; padded rows are zero and
-        contribute nothing to the sum).
+        contribute nothing to the sum). ``axis`` (sharded mode) makes the
+        plug-in estimate a psum over the mesh axis — the same global
+        sigma_hat_{t,D}^2 the emulated path computes.
         """
         cfg = self.cfg
         m = a_p.shape[0] * a_p.shape[1] if m_eff is None else m_eff
@@ -555,27 +637,46 @@ class AmpEngine:
                 ap, x, yp, zp, onsager, cfg.n_proc,
                 use_pallas=cfg.use_kernel,
                 interpret=cfg.kernel_interpret))(a_p, y_p, z_p)
-        sigma2_hat = jnp.sum(z_new * z_new) / m
+        ss = jnp.sum(z_new * z_new)
+        if axis is not None:
+            ss = lax.psum(ss, axis)
+        sigma2_hat = ss / m
         return z_new, f_p, sigma2_hat
 
-    def _gc(self, f_p, sigma2_hat, delta, kappa):
+    def _fuse(self, f_p, delta, drop=None):
+        """Transport dispatch: device-collective transports take the extra
+        sharded ``drop`` operand, emulated transports do not."""
+        if drop is None:
+            assert not hasattr(self.transport, "axis"), \
+                f"{type(self.transport).__name__} is a device-collective " \
+                "transport: solve via solve_sharded/solve_sharded_het, " \
+                "not the emulated entry points"
+            return self.transport.fuse(f_p, delta)
+        return self.transport.fuse(f_p, delta, drop)
+
+    def _gc(self, f_p, sigma2_hat, delta, kappa, drop=None):
         """GC: compress + fuse + denoise. Returns (x, onsager, extra, syms)."""
-        f, extra, syms = self.transport.fuse(f_p, delta)
+        f, extra, syms = self._fuse(f_p, delta, drop)
         x_new, onsager_new = amp_gc_step(f, sigma2_hat + extra, self.prior,
                                          kappa)
         return x_new, onsager_new, extra, syms
 
-    def _body(self, carry, xs_t, a_p, y_p, kappa):
-        t, sched_delta = xs_t
+    def _body(self, carry, xs_t, a_p, y_p, kappa, axis=None, m_eff=None):
+        if axis is None:
+            (t, sched_delta), drop = xs_t, None
+        else:
+            t, sched_delta, drop = xs_t
         x, z_p, onsager = carry
-        z_p, f_p, s2 = self._local(x, z_p, onsager, a_p, y_p)
+        z_p, f_p, s2 = self._local(x, z_p, onsager, a_p, y_p, m_eff=m_eff,
+                                   axis=axis)
         if isinstance(self.controller, FixedSchedule):
             # fixed schedules arrive as a scan operand, so one compiled
             # solve serves every schedule of the same length
             delta, rate = sched_delta, jnp.float32(jnp.inf)
         else:
             delta, rate = self.controller.delta_for(t, s2)
-        x_new, onsager_new, extra, syms = self._gc(f_p, s2, delta, kappa)
+        x_new, onsager_new, extra, syms = self._gc(f_p, s2, delta, kappa,
+                                                   drop=drop)
         cfg = self.cfg
         out = (s2, delta, extra, rate,
                x_new if cfg.collect_xs else jnp.zeros(()),
@@ -680,7 +781,7 @@ class AmpEngine:
     # -- heterogeneous batches (the serving path) -----------------------------
 
     def _body_het(self, carry, xs_t, a_p, y_p, hp: HetParams, n_mask,
-                  has_bt: bool):
+                  has_bt: bool, axis=None):
         """One masked iteration with per-instance (traced) problem params.
 
         Same LC/GC split as ``_body``; differences: sigma2_hat normalizes by
@@ -691,11 +792,16 @@ class AmpEngine:
         early-exit: short requests return their own T-iteration fixpoint
         regardless of the bucket's T_max). ``has_bt`` is static: batches
         with no BT request compile without the in-graph controller.
+        ``axis`` runs the body processor-sharded (the same shard_map mode as
+        ``_body``; HetParams ride replicated).
         """
-        t, sched_delta = xs_t
+        if axis is None:
+            (t, sched_delta), drop = xs_t, None
+        else:
+            t, sched_delta, drop = xs_t
         x, z_p, onsager = carry
         z_new, f_p, s2 = self._local(x, z_p, onsager, a_p, y_p,
-                                     m_eff=hp.m_real)
+                                     m_eff=hp.m_real, axis=axis)
 
         if has_bt:
             bt_delta, bt_rate = bt_delta_for(hp.bt, t, s2)
@@ -704,7 +810,7 @@ class AmpEngine:
         else:
             delta, rate = sched_delta, jnp.float32(jnp.inf)
 
-        f, extra, syms = self.transport.fuse(f_p, delta)
+        f, extra, syms = self._fuse(f_p, delta, drop)
         v = s2 + extra
         eta_fn = lambda g: eta_bg(g, v, hp.eps, hp.mu_s, hp.sigma_s**2)
         x_new = eta_fn(f) * n_mask
@@ -743,6 +849,30 @@ class AmpEngine:
             self._jit_cache[key] = jax.jit(jax.vmap(solve_one))
         return self._jit_cache[key]
 
+    def dispatch_het(self, a_b, y_b, params: HetParams,
+                     has_bt: bool | None = None):
+        """Launch the compiled het solve, returning raw ``(x, outs)`` device
+        arrays without materializing them on host. jax dispatch is async, so
+        a caller (the serving dispatcher) can prepare the next batch while
+        this one computes; build the trace later with ``trace_of``.
+
+        When the operands arrive batch-sharded over a mesh (leading-axis
+        ``NamedSharding``), jit partitions the same vmapped program across
+        the devices — the serving layer's data-parallel placement.
+        """
+        a_b = jnp.asarray(a_b, jnp.float32)
+        y_b = jnp.asarray(y_b, jnp.float32)
+        b, p, mp_, n = a_b.shape
+        assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
+        assert y_b.shape == (b, p, mp_)
+        if has_bt is None:
+            has_bt = bool(np.any(np.asarray(params.use_bt)))
+        return self._scan_fn_het(mp_, n, has_bt)(a_b, y_b, params)
+
+    def trace_of(self, x_outs) -> EngineTrace:
+        """Materialize a ``dispatch_het``/``dispatch_sharded`` result."""
+        return self._trace(*x_outs)
+
     def solve_het(self, a_b, y_b, params: HetParams,
                   has_bt: bool | None = None) -> EngineTrace:
         """Solve a heterogeneous batch of B padded CS instances.
@@ -757,15 +887,124 @@ class AmpEngine:
         callers that know no instance uses BT; None derives it from
         ``params.use_bt``.
         """
-        a_b = jnp.asarray(a_b, jnp.float32)
-        y_b = jnp.asarray(y_b, jnp.float32)
-        b, p, mp_, n = a_b.shape
+        return self._trace(*self.dispatch_het(a_b, y_b, params, has_bt))
+
+    # -- device-sharded solves (the mesh as an engine axis, DESIGN.md §6) ----
+
+    def _sharded_axis(self, mesh):
+        axis = getattr(self.transport, "axis", None)
+        assert axis is not None, \
+            "solve_sharded needs a device-collective transport " \
+            "(PsumFusion / CompressedPsumTransport), got " \
+            f"{type(self.transport).__name__}"
+        assert not self.cfg.collect_symbols, \
+            "symbols are per-device in sharded mode; build the engine with " \
+            "collect_symbols=False"
+        n_dev = mesh.shape[axis]
+        assert self.cfg.n_proc % n_dev == 0, \
+            f"P={self.cfg.n_proc} must be a multiple of the mesh " \
+            f"'{axis}' axis ({n_dev})"
+        return axis, n_dev
+
+    def _sharded_fn(self, m: int, n: int, mesh, axis: str):
+        """Jitted full-solve scan under shard_map: the same iteration body
+        as ``_scan_fn``, with (A, y) row-sharded over ``axis`` (each device
+        carries P/D emulated processors) and the schedule replicated."""
+        key = ("sharded", m, n, mesh, axis)
+        if key not in self._jit_cache:
+            cfg, kappa = self.cfg, m / n
+
+            def solve_fn(a_p, y_p, sched, drops):
+                # local: a_p (P/D, M/P, N), y_p (P/D, M/P), drops (T, 1)
+                init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
+                        jnp.zeros(()))
+                body = lambda c, xs: self._body(c, xs, a_p, y_p, kappa,
+                                                axis=axis,
+                                                m_eff=jnp.float32(m))
+                (x, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), sched, drops[:, 0]))
+                return x, outs
+
+            fn = shard_map(
+                solve_fn, mesh=mesh,
+                in_specs=(PartitionSpec(axis, None, None),
+                          PartitionSpec(axis, None), PartitionSpec(),
+                          PartitionSpec(None, axis)),
+                out_specs=PartitionSpec(), axis_names={axis}, check=False)
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+    def solve_sharded(self, y, a_mat, mesh, drop_sched=None) -> EngineTrace:
+        """Device-sharded solve: row-partitioned (A, y) across the mesh axis
+        of the engine's device-collective transport, fusion on the wire.
+
+        The iteration body, controller, and trace semantics are identical to
+        ``solve`` — only the fusion sum (and the sigma2_hat reduction) cross
+        device links. ``drop_sched`` (T, n_dev) optionally marks straggler
+        shards per iteration; the transport rescales the survivors
+        unbiasedly instead of stalling the solve.
+        """
+        axis, n_dev = self._sharded_axis(mesh)
+        a_p, y_p = self._split(y, a_mat)
+        m, n = a_p.shape[0] * a_p.shape[1], a_p.shape[2]
+        if drop_sched is None:
+            drop_sched = np.zeros((self.cfg.n_iter, n_dev), np.float32)
+        drop_sched = np.asarray(drop_sched, np.float32)
+        assert drop_sched.shape == (self.cfg.n_iter, n_dev), drop_sched.shape
+        x, outs = self._sharded_fn(m, n, mesh, axis)(
+            a_p, y_p, self._sched_operand(), jnp.asarray(drop_sched))
+        return self._trace(x, outs)
+
+    def _sharded_het_fn(self, mp_: int, n: int, has_bt: bool, mesh,
+                        axis: str):
+        key = ("sharded_het", mp_, n, has_bt, mesh, axis)
+        if key not in self._jit_cache:
+            cfg = self.cfg
+
+            def solve_one(a_p, y_p, hp: HetParams):
+                n_mask = (jnp.arange(n) < hp.n_real).astype(jnp.float32)
+                init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
+                        jnp.zeros(()))
+                drops = jnp.zeros(cfg.n_iter, jnp.float32)
+                body = lambda c, xs: self._body_het(c, xs, a_p, y_p, hp,
+                                                    n_mask, has_bt,
+                                                    axis=axis)
+                (x, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), hp.sched, drops))
+                return x, outs
+
+            fn = shard_map(
+                solve_one, mesh=mesh,
+                in_specs=(PartitionSpec(axis, None, None),
+                          PartitionSpec(axis, None), PartitionSpec()),
+                out_specs=PartitionSpec(), axis_names={axis}, check=False)
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+    def dispatch_sharded(self, a_p, y_p, params: HetParams, mesh,
+                         has_bt: bool | None = None):
+        """Processor-sharded het solve of ONE padded instance (no batch
+        axis): a_p (P, M_pad/P, N_pad), y_p (P, M_pad/P), ``params`` the
+        per-instance operands *without* a leading batch axis (replicated
+        into the shard_map). This is the serving layer's placement for
+        large single requests: the mesh axis is the paper's P, the fusion a
+        (possibly compressed) collective. Returns raw (x, outs); see
+        ``dispatch_het`` for the async rationale."""
+        axis, _ = self._sharded_axis(mesh)
+        a_p = jnp.asarray(a_p, jnp.float32)
+        y_p = jnp.asarray(y_p, jnp.float32)
+        p, mp_, n = a_p.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
-        assert y_b.shape == (b, p, mp_)
+        assert y_p.shape == (p, mp_)
         if has_bt is None:
             has_bt = bool(np.any(np.asarray(params.use_bt)))
-        x, outs = self._scan_fn_het(mp_, n, has_bt)(a_b, y_b, params)
-        return self._trace(x, outs)
+        return self._sharded_het_fn(mp_, n, has_bt, mesh, axis)(
+            a_p, y_p, params)
+
+    def solve_sharded_het(self, a_p, y_p, params: HetParams, mesh,
+                          has_bt: bool | None = None) -> EngineTrace:
+        return self._trace(*self.dispatch_sharded(a_p, y_p, params, mesh,
+                                                  has_bt))
 
     def solve_host_loop(self, y, a_mat, host_schedule=None) -> EngineTrace:
         """Per-iteration host loop over the same jitted body.

@@ -8,6 +8,10 @@ per-request quality/rate plus end-to-end throughput.
   PYTHONPATH=src python -m repro.launch.amp_serve --smoke
   PYTHONPATH=src python -m repro.launch.amp_serve --requests 256 \\
       --max-batch 64 --policies fixed,bt,lossless
+
+``--mesh`` serves over all visible devices through the placement
+dispatcher (DESIGN.md §6): the bucket column then shows where each
+request ran (data-parallel vs processor-sharded).
 """
 from __future__ import annotations
 
@@ -56,6 +60,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="16 requests, small batches, no rate accounting")
+    ap.add_argument("--mesh", action="store_true",
+                    help="serve over all visible devices (placement "
+                         "dispatcher; forced-host devices need XLA_FLAGS "
+                         "set before launch)")
     args = ap.parse_args()
 
     n_req = 16 if args.smoke else args.requests
@@ -63,22 +71,32 @@ def main():
     rng = np.random.default_rng(args.seed)
     pairs = [make_request(rng, i, policies) for i in range(n_req)]
 
-    svc = SolveService(policy=BucketPolicy(max_batch=args.max_batch),
-                       rate_accounting=not args.smoke)
+    mesh = None
+    max_batch = args.max_batch
+    if args.mesh:
+        from ..serving.buckets import round_up
+        from .mesh import make_serve_mesh
+        mesh = make_serve_mesh()
+        # data-parallel dispatch needs a device-multiple batch cap
+        max_batch = round_up(max_batch, mesh.shape["data"])
+    svc = SolveService(policy=BucketPolicy(max_batch=max_batch),
+                       rate_accounting=not args.smoke, mesh=mesh)
     t0 = time.time()
     results = list(svc.stream(r for r, _ in pairs))
     dt = time.time() - t0
 
     # request ids are assigned in submission order, i.e. pairs[rid]
-    print(f"{'id':>4s} {'policy':>9s} {'T':>3s} {'bucket':>18s} {'B':>4s} "
+    print(f"{'id':>4s} {'policy':>9s} {'T':>3s} {'bucket':>20s} {'B':>4s} "
           f"{'mse':>10s} {'bits':>7s}")
     for r in sorted(results, key=lambda res: res.request_id):
         req, s0 = pairs[r.request_id]
         bk = f"({r.bucket.n_pad},{r.bucket.m_pad},{r.bucket.n_proc}," \
-             f"{r.bucket.t_max})"
-        bits = f"{r.total_bits:7.2f}" if r.total_bits else "      -"
+             f"{r.bucket.t_max}){r.bucket.placement[0]}"
+        # untracked (no finite per-iteration rate) shows "-"; a genuine
+        # 0.00-bit total from finite rates still prints as a number
+        bits = f"{r.total_bits:7.2f}" if r.tracked else "      -"
         print(f"{r.request_id:4d} {req.policy:>9s} {req.n_iter:3d} "
-              f"{bk:>18s} {r.batch_size:4d} {r.mse(s0):10.3e} {bits}")
+              f"{bk:>20s} {r.batch_size:4d} {r.mse(s0):10.3e} {bits}")
     print(f"\n{n_req} requests in {dt:.2f}s  "
           f"({n_req / dt:.1f} req/s, {len(svc._engines)} compiled buckets)")
 

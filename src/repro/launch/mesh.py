@@ -9,7 +9,7 @@ import jax
 
 from ..compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_serve_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,3 +23,16 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     n = jax.device_count()
     data = data or (n // model)
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_serve_mesh(n_devices: int | None = None):
+    """1-D 'data' mesh for the solve service's placement dispatcher.
+
+    Both serving placements run over this one axis: data-parallel buckets
+    shard the request batch across it, processor-sharded solves map the
+    paper's P onto it (DESIGN.md §6). Defaults to every visible device;
+    pass ``n_devices`` to serve from a subset (e.g. to leave devices for a
+    co-located training job).
+    """
+    n = n_devices or jax.device_count()
+    return make_mesh((n,), ("data",))

@@ -7,34 +7,28 @@ is a ``compressed_psum`` over 'data' — int8 wire transport standing in for
 the paper's ECSQ+entropy-coded stream (DESIGN.md §2; H_Q is reported so the
 entropy-coded rate is visible even though XLA lanes are fixed-width).
 
-This is the distributed frontend of the unified ``core/engine.py`` solver:
-the per-shard LC step is the same ``kernels/amp_fused`` op the engine scans
-over, and the denoise/Onsager tail is the engine's shared ``amp_gc_step`` —
-only the fusion differs (collective over 'data' instead of a sum over the
-emulated leading axis).
+This is a thin frontend over ``AmpEngine.solve_sharded`` (DESIGN.md §6):
+the engine runs its one scan-compiled iteration body inside shard_map, with
+``CompressedPsumTransport`` (int8/int4 wire) or ``PsumFusion`` (exact) as
+the device-collective fusion. There is no per-iteration Python loop here —
+the last pre-engine survivor of the solver triplication is gone.
 
 Straggler mitigation (beyond-paper, enabled by the paper's own analysis):
-``drop_mask`` simulates P' < P responsive processors. The fusion then
-rescales: f = (P/P') * sum_{responsive} f^p is an unbiased estimate of the
-full fusion whose extra noise the modified SE absorbs exactly like
-quantization noise — the solver keeps iterating through stragglers instead
-of stalling on the slowest shard.
+``drop_rate`` simulates P' < P responsive processors per iteration. The
+transport rescales: f = (P/P') * sum_{responsive} f^p is an unbiased
+estimate of the full fusion whose extra noise the modified SE absorbs
+exactly like quantization noise — the solver keeps iterating through
+stragglers instead of stalling on the slowest shard.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from ..compat import axis_size, shard_map
-from ..core.compression import QuantConfig, compressed_psum
 from ..core.denoisers import BernoulliGauss
-from ..core.engine import amp_gc_step
-from ..kernels.amp_fused.ops import amp_local_step
+from ..core.engine import (AmpEngine, CompressedPsumTransport, EngineConfig,
+                           PsumFusion)
 
 __all__ = ["DistributedMPAMP", "SolverConfig"]
 
@@ -56,70 +50,30 @@ class DistributedMPAMP:
         self.prior = prior
         self.cfg = cfg
         self.n_proc = mesh.shape["data"]
-
-    def _iteration(self, a_p, y_p, x, z_p, onsager, drop, kappa):
-        """One iteration; runs per-processor under shard_map (manual 'data')."""
-        cfg, prior = self.cfg, self.prior
-        p = axis_size("data")
-
-        z_new, f_p = amp_local_step(a_p, x, y_p, z_p, onsager, p,
-                                    use_pallas=cfg.use_kernel)
-
-        sigma2_hat = lax.psum(jnp.sum(z_new * z_new), "data") / (
-            lax.psum(jnp.asarray(z_new.shape[0], jnp.float32), "data"))
-
-        # straggler simulation: responsive shards only, unbiased rescale
-        keep = 1.0 - drop
-        n_keep = lax.psum(keep, "data")
-        f_p = f_p * keep * (p / jnp.maximum(n_keep, 1.0))
-
         if cfg.bits is not None:
-            f, noise = compressed_psum(
-                f_p, "data", QuantConfig(bits=cfg.bits, block=cfg.block))
+            transport = CompressedPsumTransport(axis="data", bits=cfg.bits,
+                                                block=cfg.block)
         else:
-            f = lax.psum(f_p, "data")
-            noise = jnp.zeros(())
+            transport = PsumFusion(axis="data")
+        self._engine = AmpEngine(
+            prior,
+            EngineConfig(n_proc=self.n_proc, n_iter=cfg.n_iter,
+                         use_kernel=cfg.use_kernel,
+                         collect_symbols=False, collect_xs=False),
+            transport)
 
-        x_new, onsager_new = amp_gc_step(f, sigma2_hat + noise, prior, kappa)
-        return x_new, z_new, onsager_new, sigma2_hat, noise
+    def _drop_sched(self, key) -> np.ndarray:
+        p = self.n_proc
+        drop = np.zeros((self.cfg.n_iter, p), np.float32)
+        if self.cfg.drop_rate > 0:
+            rng = np.random.default_rng(0 if key is None else key)
+            drop = (rng.random((self.cfg.n_iter, p))
+                    < self.cfg.drop_rate).astype(np.float32)
+            drop[:, 0] = 0.0  # shard 0 always responsive
+        return drop
 
     def solve(self, a_mat: np.ndarray, y: np.ndarray, key=None):
         """Run n_iter iterations. Returns (x, per-iter sigma2_hat, noise)."""
-        m, n = a_mat.shape
-        kappa = m / n
-        mesh = self.mesh
-        p = self.n_proc
-        assert m % p == 0
-
-        a = jnp.asarray(a_mat, jnp.float32)
-        yj = jnp.asarray(y, jnp.float32)
-
-        drop_sched = np.zeros((self.cfg.n_iter, p), np.float32)
-        if self.cfg.drop_rate > 0:
-            rng = np.random.default_rng(0 if key is None else key)
-            drop_sched = (rng.random((self.cfg.n_iter, p))
-                          < self.cfg.drop_rate).astype(np.float32)
-            drop_sched[:, 0] = 0.0  # shard 0 always responsive
-
-        def body(a_p, y_p, drops):
-            # a_p (M/P, N), y_p (M/P,), drops (n_iter, 1) per shard
-            x = jnp.zeros(n, jnp.float32)
-            z_p = jnp.zeros_like(y_p)
-            onsager = jnp.zeros(())
-
-            def step(carry, drop_t):
-                x, z_p, onsager = carry
-                x, z_p, onsager, s2, nv = self._iteration(
-                    a_p, y_p, x, z_p, onsager, drop_t[0], kappa)
-                return (x, z_p, onsager), (s2, nv)
-
-            (x, _, _), (s2s, nvs) = lax.scan(step, (x, z_p, onsager), drops)
-            return x, s2s, nvs
-
-        fn = shard_map(
-            body, mesh=mesh,
-            in_specs=(P("data", None), P("data"), P(None, "data")),
-            out_specs=(P(), P(), P()),
-            axis_names={"data"}, check=False)
-        x, s2s, nvs = jax.jit(fn)(a, yj, jnp.asarray(drop_sched))
-        return np.asarray(x), np.asarray(s2s), np.asarray(nvs)
+        tr = self._engine.solve_sharded(y, a_mat, self.mesh,
+                                        drop_sched=self._drop_sched(key))
+        return tr.x, tr.sigma2_hat, tr.extra_var

@@ -4,10 +4,11 @@ Heterogeneous CS solve requests -> shape buckets -> vmapped batched engine
 calls -> per-request results with realized-rate accounting.
 """
 from .batcher import Batcher
-from .buckets import BucketKey, BucketPolicy, bucket_for, pad_batch_size
+from .buckets import (BucketKey, BucketPolicy, bucket_for, pad_batch_size,
+                      placement_for)
 from .service import SolveRequest, SolveResult, SolveService
 
 __all__ = [
     "Batcher", "BucketKey", "BucketPolicy", "bucket_for", "pad_batch_size",
-    "SolveRequest", "SolveResult", "SolveService",
+    "placement_for", "SolveRequest", "SolveResult", "SolveService",
 ]

@@ -24,13 +24,21 @@ Padding semantics (must preserve single-solve results bit-near-exactly):
 For block-quantized transports, ``n_quantum`` must divide the transport
 block size: then ceil(n_pad/block) == ceil(n/block) and the per-block
 scales (hence the injected-noise accounting) match the unpadded solve.
+
+Placement (DESIGN.md §6): on a multi-device mesh the bucket additionally
+records *where* it runs — ``"local"`` (single device), ``"data"``
+(batch axis sharded across devices, processors emulated per-device) or
+``"proc"`` (mesh axis = the paper's P, compressed fusion on the wire).
+``placement_for`` chooses by a simple size threshold: requests whose
+sensing matrix reaches ``policy.shard_elems`` elements are worth paying
+collective latency per iteration; everything smaller batches better.
 """
 from __future__ import annotations
 
 import dataclasses
 
 __all__ = ["BucketPolicy", "BucketKey", "bucket_for", "pad_batch_size",
-           "TRANSPORT_BLOCK"]
+           "placement_for", "round_up", "TRANSPORT_BLOCK"]
 
 # scale-block length of the block-quantized transports (QuantConfig.block
 # as instantiated by serving/service.py); "ecsq" has no block structure
@@ -45,6 +53,8 @@ class BucketPolicy:
     mp_quantum: int = 16     # per-processor measurement rows padded to a multiple
     t_quantum: int = 4       # scan length padded to a multiple
     max_batch: int = 128     # dispatch threshold for continuous batching
+    shard_elems: int = 1 << 21  # A size (M*N) at which a single request
+    #                             runs processor-sharded instead of batching
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,18 +66,20 @@ class BucketKey:
     n_proc: int              # processor count (partition structure)
     t_max: int               # scan length
     transport: str           # "ecsq" | "block8" | "block4"
+    placement: str = "local"  # "local" | "data" | "proc" (DESIGN.md §6)
 
     @property
     def m_pad(self) -> int:
         return self.n_proc * self.mp_pad
 
 
-def _round_up(v: int, q: int) -> int:
+def round_up(v: int, q: int) -> int:
+    """Smallest multiple of ``q`` >= ``v`` (shape/batch padding quantum)."""
     return -(-v // q) * q
 
 
 def bucket_for(n: int, m: int, n_proc: int, n_iter: int, transport: str,
-               policy: BucketPolicy) -> BucketKey:
+               policy: BucketPolicy, placement: str = "local") -> BucketKey:
     """Map a request's structural parameters to its bucket."""
     assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
     block = TRANSPORT_BLOCK.get(transport)
@@ -78,12 +90,30 @@ def bucket_for(n: int, m: int, n_proc: int, n_iter: int, transport: str,
             f"n_quantum={policy.n_quantum} must divide the {transport} " \
             f"scale block ({block}) to keep noise accounting pad-invariant"
     return BucketKey(
-        n_pad=_round_up(n, policy.n_quantum),
-        mp_pad=_round_up(m // n_proc, policy.mp_quantum),
+        n_pad=round_up(n, policy.n_quantum),
+        mp_pad=round_up(m // n_proc, policy.mp_quantum),
         n_proc=n_proc,
-        t_max=_round_up(n_iter, policy.t_quantum),
+        t_max=round_up(n_iter, policy.t_quantum),
         transport=transport,
+        placement=placement,
     )
+
+
+def placement_for(n: int, m: int, n_proc: int, n_devices: int,
+                  policy: BucketPolicy) -> str:
+    """Size-threshold placement: large single solves shard the processors
+    across the mesh; everything else batches data-parallel.
+
+    Processor sharding additionally needs P to split evenly over the
+    devices (each device emulates P/D processors, keeping the paper's
+    partition — and the noise accounting — independent of the mesh size);
+    requests that don't satisfy it fall back to data-parallel.
+    """
+    if n_devices <= 1:
+        return "local"
+    if n * m >= policy.shard_elems and n_proc % n_devices == 0:
+        return "proc"
+    return "data"
 
 
 def pad_batch_size(b: int, policy: BucketPolicy) -> int:

@@ -10,6 +10,16 @@ service still executes them as a handful of vmapped ``solve_het`` calls:
 structural parameters select the bucket, everything else rides as
 per-instance operands (``HetParams``).
 
+On a multi-device mesh (pass ``mesh=make_serve_mesh()``) the service places
+buckets across the devices (DESIGN.md §6): small-request buckets run
+*data-parallel* (batch axis sharded over the mesh, processors emulated
+per-device), large single requests run *processor-sharded* (the mesh axis
+is the paper's P; fusion is a compressed collective on the wire) and
+dispatch immediately instead of queuing behind a batch. Dispatch is
+ahead-of-results: engine calls launch asynchronously and materialize only
+when a consumer pulls, so host-side padding/prep of the next batch overlaps
+device compute.
+
 Usage::
 
     svc = SolveService()
@@ -26,19 +36,24 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Callable
 
+import jax
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from ..core.denoisers import BernoulliGauss
 from ..core.engine import (AmpEngine, BlockQuantTransport, BTRateControl,
-                           BTTables, EcsqTransport, EngineConfig, HetParams,
+                           BTTables, CompressedPsumTransport, EcsqTransport,
+                           EngineConfig, HetParams, PsumFusion,
                            pad_bt_tables, stack_bt_tables)
 from ..core.quantize import ecsq_entropy, message_mixture
 from ..core.rate_alloc import dp_allocate, stack_schedules
 from ..core.rate_distortion import RDModel
 from ..core.state_evolution import CSProblem
 from .batcher import Batcher
-from .buckets import BucketKey, BucketPolicy, bucket_for, pad_batch_size
+from .buckets import (BucketKey, BucketPolicy, bucket_for, pad_batch_size,
+                      placement_for, round_up)
 
 __all__ = ["SolveRequest", "SolveResult", "SolveService"]
 
@@ -111,6 +126,13 @@ class SolveResult:
     def mse(self, s0: np.ndarray) -> float:
         return float(np.mean((self.x - np.asarray(s0)) ** 2))
 
+    @property
+    def tracked(self) -> bool:
+        """Whether ``total_bits`` is a real measurement: False when no
+        iteration reported a finite rate (all-lossless fusion), in which
+        case the 0.0 total means "untracked", not "zero bits"."""
+        return bool(np.isfinite(self.rates).any())
+
 
 _TRANSPORTS = {
     "ecsq": EcsqTransport,
@@ -118,41 +140,84 @@ _TRANSPORTS = {
     "block4": lambda: BlockQuantTransport(bits=4, block=512),
 }
 
+# processor-sharded engines fuse on the device links instead: the same wire
+# format, executed as a collective (DESIGN.md §6)
+_SHARDED_TRANSPORTS = {
+    "ecsq": lambda axis: PsumFusion(axis=axis, local=EcsqTransport()),
+    "block8": lambda axis: CompressedPsumTransport(axis=axis, bits=8,
+                                                   block=512),
+    "block4": lambda axis: CompressedPsumTransport(axis=axis, bits=4,
+                                                   block=512),
+}
+
+
+# a dispatched-but-unmaterialized engine call (dispatch-ahead): calling it
+# materializes the device results into SolveResults
+_Pending = Callable[[], "list[SolveResult]"]
+
 
 class SolveService:
-    """Shape-bucketed continuous batching over ``AmpEngine.solve_het``."""
+    """Shape-bucketed continuous batching over ``AmpEngine.solve_het``,
+    with mesh-aware bucket placement when a device mesh is provided."""
 
     def __init__(self, policy: BucketPolicy | None = None,
                  collect_xs: bool = False, rate_accounting: bool = True,
                  use_kernel: bool | None = None,
-                 kernel_interpret: bool = False):
+                 kernel_interpret: bool = False,
+                 mesh=None, mesh_axis: str = "data"):
         self.policy = policy or BucketPolicy()
         self.collect_xs = collect_xs
         self.rate_accounting = rate_accounting
         self.use_kernel = use_kernel
         self.kernel_interpret = kernel_interpret
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.n_devices = 1 if mesh is None else mesh.shape[mesh_axis]
+        if self.n_devices > 1:
+            # data-parallel dispatch pads batches to a device multiple, so
+            # max_batch must be one too or the documented compile-width cap
+            # would be silently exceeded
+            assert self.policy.max_batch % self.n_devices == 0, \
+                f"max_batch={self.policy.max_batch} must be a multiple of " \
+                f"the mesh device count ({self.n_devices})"
         self._batcher = Batcher(self.policy)
         self._engines: dict[BucketKey, AmpEngine] = {}
         self._bt_cache: dict = {}
         self._rd_cache: dict = {}
         self._completed: list[SolveResult] = []
+        self._pending: list[_Pending] = []
         self._next_id = 0
 
     # -- request intake ------------------------------------------------------
 
     def submit(self, req: SolveRequest) -> int:
         """Queue one request; a full bucket group dispatches immediately
-        (results buffered until ``flush``/``stream`` hands them out)."""
+        (results buffered until ``flush``/``stream`` hands them out).
+        Processor-sharded requests dispatch at once — they consume the
+        whole mesh, so queuing them behind a batch buys nothing."""
         req = self._prepare(req)
-        full = self._batcher.add(self._key_for(req), req)
+        key = self._key_for(req)
+        if key.placement == "proc":
+            self._pending.append(self._dispatch_bucket(key, [req]))
+            return req.request_id
+        full = self._batcher.add(key, req)
         if full is not None:
-            self._completed.extend(self._run_bucket(*full))
+            self._pending.append(self._dispatch_bucket(*full))
         return req.request_id
+
+    def _collect_pending(self):
+        """Materialize every dispatched batch into ``_completed`` (FIFO)."""
+        pending, self._pending = self._pending, []
+        for finalize in pending:
+            self._completed.extend(finalize())
 
     def flush(self) -> list[SolveResult]:
         """Dispatch all pending groups; return every buffered result."""
+        # dispatch everything first, then materialize: the engine calls
+        # overlap on device while the host pads the next group's operands
         for key, group in self._batcher.drain():
-            self._completed.extend(self._run_bucket(key, group))
+            self._pending.append(self._dispatch_bucket(key, group))
+        self._collect_pending()
         out, self._completed = self._completed, []
         return out
 
@@ -188,10 +253,15 @@ class SolveService:
 
         for r in reqs:
             own.add(self.submit(r))
+            # materialize whatever submit dispatched: stream's contract is
+            # per-batch yield timing, so collection here is blocking (the
+            # dispatch itself already ran async during submit)
+            self._collect_pending()
             if self._completed:
                 yield from take_own()
         for key, group in self._batcher.drain():
-            self._completed.extend(self._run_bucket(key, group))
+            self._pending.append(self._dispatch_bucket(key, group))
+        self._collect_pending()
         yield from take_own()
 
     # -- internals -----------------------------------------------------------
@@ -224,20 +294,29 @@ class SolveService:
         return req
 
     def _key_for(self, req: SolveRequest) -> BucketKey:
+        placement = placement_for(req.n, req.m, req.n_proc, self.n_devices,
+                                  self.policy)
         return bucket_for(req.n, req.m, req.n_proc, req.n_iter,
-                          req.transport, self.policy)
+                          req.transport, self.policy, placement)
 
     def _engine(self, key: BucketKey) -> AmpEngine:
-        eng = self._engines.get(key)
+        # data-parallel buckets reuse the local engine object: the sharding
+        # lives on the operands, and jit re-specializes the same callable
+        ekey = (key if key.placement == "proc"
+                else dataclasses.replace(key, placement="local"))
+        eng = self._engines.get(ekey)
         if eng is None:
             cfg = EngineConfig(
                 n_proc=key.n_proc, n_iter=key.t_max,
                 use_kernel=self.use_kernel,
                 kernel_interpret=self.kernel_interpret,
                 collect_symbols=False, collect_xs=self.collect_xs)
-            eng = AmpEngine(BernoulliGauss(), cfg,
-                            _TRANSPORTS[key.transport]())
-            self._engines[key] = eng
+            if ekey.placement == "proc":
+                transport = _SHARDED_TRANSPORTS[key.transport](self.mesh_axis)
+            else:
+                transport = _TRANSPORTS[key.transport]()
+            eng = AmpEngine(BernoulliGauss(), cfg, transport)
+            self._engines[ekey] = eng
         return eng
 
     def _dp_deltas(self, req: SolveRequest) -> np.ndarray:
@@ -269,17 +348,13 @@ class SolveService:
             self._bt_cache[(key, t_max)] = padded
         return padded
 
-    def _run_bucket(self, key: BucketKey, reqs: list) -> list[SolveResult]:
-        b_real = len(reqs)
-        b_pad = pad_batch_size(b_real, self.policy)
-        # fill pad slots by repeating real requests (their results are
-        # dropped); keeps every instance numerically benign
-        batch = [reqs[i % b_real] for i in range(b_pad)]
-
+    def _het_operands(self, key: BucketKey, batch: list):
+        """Pad one request group into the engine's het operands."""
         p, mp_pad, n_pad, t_max = (key.n_proc, key.mp_pad, key.n_pad,
                                    key.t_max)
-        a_b = np.zeros((b_pad, p, mp_pad, n_pad), np.float32)
-        y_b = np.zeros((b_pad, p, mp_pad), np.float32)
+        b = len(batch)
+        a_b = np.zeros((b, p, mp_pad, n_pad), np.float32)
+        y_b = np.zeros((b, p, mp_pad), np.float32)
         scheds, tacts, mreals, nreals = [], [], [], []
         eps, mus, sss, use_bt, tables = [], [], [], [], []
         for i, r in enumerate(batch):
@@ -304,7 +379,6 @@ class SolveService:
                 use_bt.append(False)
                 tables.append(BTTables.dummy(t_max))
 
-        has_bt = any(use_bt)
         params = HetParams(
             sched=stack_schedules(scheds, t_max),
             t_active=np.asarray(tacts, np.int32),
@@ -316,24 +390,73 @@ class SolveService:
             use_bt=np.asarray(use_bt),
             bt=stack_bt_tables(tables),
         )
-        trace = self._engine(key).solve_het(a_b, y_b, params, has_bt=has_bt)
+        return a_b, y_b, params, any(use_bt)
 
-        out = []
-        for i, r in enumerate(reqs):
-            t = r.n_iter
-            s2 = trace.sigma2_hat[i, :t]
-            deltas = trace.deltas[i, :t]
-            rates = self._rates(r, s2, deltas, trace.rates[i, :t])
-            finite = np.isfinite(rates)
-            out.append(SolveResult(
-                request_id=r.request_id,
-                x=trace.x[i, :r.n].copy(),
-                sigma2_hat=s2.copy(), deltas=deltas.copy(),
-                extra_var=trace.extra_var[i, :t].copy(), rates=rates,
-                total_bits=float(rates[finite].sum()),
-                bucket=key, batch_size=b_real,
-            ))
-        return out
+    def _dispatch_bucket(self, key: BucketKey, reqs: list) -> _Pending:
+        """Launch one bucket group on its placement; materialization is
+        deferred to the returned ``_Pending.finalize``."""
+        if key.placement == "proc":
+            return self._dispatch_proc(key, reqs)
+
+        b_real = len(reqs)
+        b_pad = pad_batch_size(b_real, self.policy)
+        if key.placement == "data":
+            # the batch axis shards over the mesh: pad to a device multiple
+            b_pad = round_up(b_pad, self.n_devices)
+        # fill pad slots by repeating real requests (their results are
+        # dropped); keeps every instance numerically benign
+        batch = [reqs[i % b_real] for i in range(b_pad)]
+        a_b, y_b, params, has_bt = self._het_operands(key, batch)
+        if key.placement == "data":
+            shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
+            a_b, y_b, params = jax.device_put((a_b, y_b, params), shard)
+        eng = self._engine(key)
+        x_outs = eng.dispatch_het(a_b, y_b, params, has_bt=has_bt)
+
+        def finalize() -> list[SolveResult]:
+            trace = eng.trace_of(x_outs)
+            return [self._result_one(key, r, trace, i, b_real)
+                    for i, r in enumerate(reqs)]
+
+        return finalize
+
+    def _dispatch_proc(self, key: BucketKey, reqs: list) -> _Pending:
+        """Processor-sharded placement: each request owns the whole mesh for
+        one ``dispatch_sharded`` call (still padded to the bucket shape, so
+        the compile cache stays bounded)."""
+        eng = self._engine(key)
+        dispatched = []
+        for r in reqs:
+            a_b, y_b, params, has_bt = self._het_operands(key, [r])
+            hp = jax.tree.map(lambda v: np.asarray(v)[0], params)
+            dispatched.append(eng.dispatch_sharded(
+                a_b[0], y_b[0], hp, self.mesh, has_bt=has_bt))
+
+        def finalize() -> list[SolveResult]:
+            return [self._result_one(key, r, eng.trace_of(x_outs), None, 1)
+                    for r, x_outs in zip(reqs, dispatched)]
+
+        return finalize
+
+    def _result_one(self, key: BucketKey, r: SolveRequest, trace,
+                    i: int | None, batch_size: int) -> SolveResult:
+        """Unpad one request's slice of a trace (``i=None``: unbatched
+        processor-sharded trace)."""
+        t = r.n_iter
+        sel = (lambda a: a[:t]) if i is None else (lambda a: a[i, :t])
+        x = trace.x[:r.n] if i is None else trace.x[i, :r.n]
+        s2 = sel(trace.sigma2_hat)
+        deltas = sel(trace.deltas)
+        rates = self._rates(r, s2, deltas, sel(trace.rates))
+        finite = np.isfinite(rates)
+        return SolveResult(
+            request_id=r.request_id,
+            x=x.copy(),
+            sigma2_hat=s2.copy(), deltas=deltas.copy(),
+            extra_var=sel(trace.extra_var).copy(), rates=rates,
+            total_bits=float(rates[finite].sum()),
+            bucket=key, batch_size=batch_size,
+        )
 
     def _rates(self, req: SolveRequest, s2, deltas, bt_rates) -> np.ndarray:
         """Realized-rate accounting for one request (see SolveResult)."""

@@ -80,3 +80,65 @@ int8_coll = [l for l in coll if 's8[' in l or 'u8[' in l]
 assert int8_coll, coll[:5]
 print('ok')
 """)
+
+
+@pytest.mark.parametrize("orig_len", [4095, 4093])
+def test_int4_odd_length_pad_roundtrip(orig_len):
+    """int4 wire encode with an odd (non-block-multiple) length: the block
+    padding plus nibble packing must round-trip back to |err| <= Delta/2 on
+    exactly the original elements (DESIGN.md §2)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(1, orig_len)).astype(np.float32))
+    qc = QuantConfig(bits=4, block=256)
+    q, s = quantize_blocks(x, qc)
+    # the padded symbol stream is what travels: pack -> unpack -> dequantize
+    q_wire = unpack_int4(pack_int4(q))
+    assert (q_wire == q).all()
+    xr = dequantize_blocks(q_wire, s, qc, orig_len=orig_len)
+    assert xr.shape == (1, orig_len)
+    err = np.abs(np.asarray(xr) - np.asarray(x))
+    bound = np.asarray(s, np.float32).repeat(256, -1)[:, :orig_len] * 0.5
+    assert (err <= bound + 1e-12).all()
+
+
+def test_compressed_psum_int4_wire_visible(multidev):
+    """DESIGN.md §2 claims s8/u8 collective operands for the *int4* wire
+    too (nibbles packed into uint8); lower at an odd per-chunk length so
+    the pack/pad path is the one being compiled."""
+    multidev("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core.compression import compressed_psum, QuantConfig
+mesh = jax.make_mesh((8,), ('d',))
+qc = QuantConfig(bits=4, block=256)
+fn = jax.jit(shard_map(
+    lambda v: compressed_psum(v[0], 'd', qc)[0][None],
+    mesh=mesh, in_specs=P('d', None), out_specs=P('d', None),
+    axis_names={'d'}, check=False))
+n = 2999  # odd, not a multiple of the 8*256*2 chunking quantum
+txt = fn.lower(jnp.zeros((8, n), jnp.float32)).compile().as_text()
+coll = [l for l in txt.splitlines() if 'all-to-all' in l or 'all-gather' in l]
+int8_coll = [l for l in coll if 's8[' in l or 'u8[' in l]
+assert int8_coll, coll[:5]
+# the only non-integer collectives are the per-block scale side channels
+# (<= chunk/block elements each; XLA CPU widens their bf16 to f32) — no
+# full-chunk-width float payload may appear on the wire
+import re
+for l in coll:
+    if not (' all-to-all(' in l or ' all-gather(' in l):
+        continue  # a fusion consuming a collective result, not wire
+    for dt, dims in re.findall(r'(f32|bf16)\\[([0-9,]+)\\]', l):
+        size = 1
+        for d in dims.split(','):
+            size *= int(d)
+        assert size <= 8 * 8 * 2, (size, l)  # devices^2 x scale blocks
+# and the lowered program still sums correctly (quantization error only)
+rng = np.random.default_rng(3)
+x = jnp.asarray(rng.normal(size=(8, n)).astype(np.float32))
+y = np.asarray(fn(x))
+ref = np.asarray(x).sum(0)
+rel = np.abs(y[0] - ref).max() / np.abs(ref).max()
+assert rel < 0.25, rel
+print('ok')
+""")

@@ -1,0 +1,178 @@
+"""Sharded-vs-emulated engine parity (8 fake devices, subprocess).
+
+ISSUE 3 acceptance: ``AmpEngine.solve_sharded`` pins to ``solve`` — the
+exact transport bitwise-close (<=1e-12 MSE difference), quantized
+transports within the documented ulp-reassociation envelope (a 1-ulp
+matmul difference can flip a round-half-even symbol, so those compare
+behaviorally, exactly like ``solve_many``'s documented contract) — and the
+processor-sharded het path pins to ``solve_het``.
+"""
+
+
+def test_solve_sharded_matches_solve_exact(multidev):
+    """Exact transport: the sharded scan is the emulated scan to float ulp
+    (same LC op, same GC tail, psum instead of a leading-axis sum)."""
+    multidev("""
+import jax, numpy as np
+from repro.compat import make_mesh
+from repro.core.amp import sample_problem
+from repro.core.denoisers import BernoulliGauss
+from repro.core.engine import (AmpEngine, EngineConfig, ExactFusion,
+                               PsumFusion)
+from repro.core.state_evolution import CSProblem
+
+prior = BernoulliGauss(eps=0.1)
+prob = CSProblem(n=2000, m=600, prior=prior)
+s0, a, y = sample_problem(jax.random.PRNGKey(1), prob.n, prob.m, prior,
+                          prob.sigma_e2)
+mesh = make_mesh((8,), ('data',))
+
+# P = 8 (one processor per device) and P = 24 (3 emulated per device)
+for p in (8, 24):
+    cfg = EngineConfig(n_proc=p, n_iter=10, collect_symbols=False)
+    em = AmpEngine(prior, cfg, ExactFusion()).solve(y, a)
+    sh = AmpEngine(prior, cfg, PsumFusion(axis='data')).solve_sharded(
+        y, a, mesh)
+    d = float(np.mean((em.x - sh.x) ** 2))
+    assert d <= 1e-12, (p, d)
+    np.testing.assert_allclose(sh.sigma2_hat, em.sigma2_hat, rtol=1e-6)
+print('ok')
+""", 8, timeout=900)
+
+
+def test_solve_sharded_quantized_envelope(multidev):
+    """Quantized transports: per-processor ECSQ across devices tracks the
+    emulated solve within the ulp-reassociation envelope, and the
+    compressed-wire transport stays near-exact in quality."""
+    multidev("""
+import jax, numpy as np
+from repro.compat import make_mesh
+from repro.core.amp import sample_problem
+from repro.core.denoisers import BernoulliGauss
+from repro.core.engine import (AmpEngine, CompressedPsumTransport,
+                               EcsqTransport, EngineConfig, ExactFusion,
+                               FixedSchedule, PsumFusion)
+from repro.core.state_evolution import CSProblem
+
+prior = BernoulliGauss(eps=0.1)
+prob = CSProblem(n=2000, m=600, prior=prior)
+s0, a, y = sample_problem(jax.random.PRNGKey(1), prob.n, prob.m, prior,
+                          prob.sigma_e2)
+mesh = make_mesh((8,), ('data',))
+t = 10
+deltas = np.full(t, 0.05, np.float32)
+deltas[0] = np.inf
+cfg = EngineConfig(n_proc=24, n_iter=t, collect_symbols=False)
+
+em = AmpEngine(prior, cfg, EcsqTransport(), FixedSchedule(deltas)).solve(y, a)
+sh = AmpEngine(prior, cfg, PsumFusion(axis='data', local=EcsqTransport()),
+               FixedSchedule(deltas)).solve_sharded(y, a, mesh)
+# same quantizers, different summation order: trajectory-level agreement
+np.testing.assert_allclose(sh.sigma2_hat, em.sigma2_hat, rtol=0.02)
+np.testing.assert_allclose(sh.extra_var, em.extra_var, rtol=1e-6)
+mse_em = float(em.mse(s0)[-1])
+mse_sh = float(np.mean((sh.x - s0) ** 2))
+assert abs(mse_sh - mse_em) <= 0.05 * mse_em + 1e-8, (mse_sh, mse_em)
+
+# straggler rescale amplifies the survivors' embedded quantization noise:
+# with k of D shards dropped the accounting must report D/(D-k) times the
+# no-drop P*delta^2/12 (survivor noise scaled by (D/n_keep)^2)
+drop = np.zeros((t, 8), np.float32)
+drop[3, :2] = 1.0  # 2 of 8 shards out at iteration 3
+shd = AmpEngine(prior, cfg, PsumFusion(axis='data', local=EcsqTransport()),
+                FixedSchedule(deltas)).solve_sharded(y, a, mesh,
+                                                     drop_sched=drop)
+np.testing.assert_allclose(shd.extra_var[3], sh.extra_var[3] * 8.0 / 6.0,
+                           rtol=1e-5)
+np.testing.assert_allclose(shd.extra_var[4], sh.extra_var[4], rtol=0.5)
+
+# compressed wire: near-exact quality, noise accounting active
+ex = AmpEngine(prior, cfg, ExactFusion()).solve(y, a)
+cp = AmpEngine(prior, cfg,
+               CompressedPsumTransport(axis='data', bits=8,
+                                       block=256)).solve_sharded(y, a, mesh)
+mse_ex = float(ex.mse(s0)[-1])
+mse_cp = float(np.mean((cp.x - s0) ** 2))
+assert mse_cp < mse_ex * 1.25, (mse_cp, mse_ex)
+assert np.all(cp.extra_var > 0)
+print('ok')
+""", 8, timeout=900)
+
+
+def test_solve_sharded_het_matches_solve_het(multidev):
+    """Processor-sharded het solve (padded shards, masked columns, traced
+    prior, BT tables replicated) == the emulated solve_het instance."""
+    multidev("""
+import jax, numpy as np
+from repro.compat import make_mesh
+from repro.core.amp import sample_problem
+from repro.core.denoisers import BernoulliGauss
+from repro.core.engine import (AmpEngine, EcsqTransport, EngineConfig,
+                               PsumFusion)
+from repro.core.state_evolution import CSProblem
+from repro.serving import BucketPolicy, SolveRequest
+from repro.serving.service import SolveService
+
+prior = BernoulliGauss(eps=0.05)
+prob = CSProblem(n=1500, m=400, prior=prior, snr_db=20.0)
+s0, a, y = sample_problem(jax.random.PRNGKey(5), prob.n, prob.m, prior,
+                          prob.sigma_e2)
+mesh = make_mesh((8,), ('data',))
+
+# shard_elems=1 forces processor-sharded placement for this request
+svc_proc = SolveService(policy=BucketPolicy(shard_elems=1), mesh=mesh)
+svc_loc = SolveService(policy=BucketPolicy())
+req = lambda policy: SolveRequest(y=y, a=a, prior=prior, snr_db=20.0,
+                                  n_proc=8, n_iter=7, policy=policy)
+for policy in ('lossless', 'bt'):
+    rp, = svc_proc.solve([req(policy)])
+    rl, = svc_loc.solve([req(policy)])
+    assert rp.bucket.placement == 'proc' and rl.bucket.placement == 'local'
+    d = float(np.mean((rp.x - rl.x) ** 2))
+    if policy == 'lossless':
+        assert d <= 1e-12, d
+        np.testing.assert_allclose(rp.sigma2_hat, rl.sigma2_hat, rtol=1e-5)
+    else:
+        # BT's cap/bisection branch is discontinuous in sigma2_hat: a
+        # 1-ulp plug-in difference may flip one decision, so BT compares
+        # behaviorally (final quality), like the quantized transports
+        mse_p = float(np.mean((rp.x - s0) ** 2))
+        mse_l = float(np.mean((rl.x - s0) ** 2))
+        assert mse_p <= 1.3 * mse_l + 1e-8, (mse_p, mse_l)
+        assert np.isfinite(rp.total_bits)
+print('ok')
+""", 8, timeout=900)
+
+
+def test_service_data_parallel_matches_local(multidev):
+    """Data-parallel placement: batch-axis sharding must not change any
+    request's result (placement is an execution detail, not semantics)."""
+    multidev("""
+import jax, numpy as np
+from repro.core.amp import sample_problem
+from repro.core.denoisers import BernoulliGauss
+from repro.core.state_evolution import CSProblem
+from repro.launch.mesh import make_serve_mesh
+from repro.serving import BucketPolicy, SolveRequest, SolveService
+
+prior = BernoulliGauss(eps=0.1)
+prob = CSProblem(n=512, m=128, prior=prior)
+reqs = []
+for i in range(6):   # 6 real -> padded to 8 (device multiple)
+    s0, a, y = sample_problem(jax.random.PRNGKey(i), prob.n, prob.m, prior,
+                              prob.sigma_e2)
+    t = 4 + (i % 3)  # mixed iteration budgets in one bucket
+    reqs.append(SolveRequest(y=y, a=a, prior=prior, n_proc=4, n_iter=t,
+                             policy='lossless'))
+
+mesh = make_serve_mesh()
+svc_mesh = SolveService(policy=BucketPolicy(max_batch=8), mesh=mesh)
+svc_loc = SolveService(policy=BucketPolicy(max_batch=8))
+res_m = svc_mesh.solve(reqs)
+res_l = svc_loc.solve(reqs)
+assert all(r.bucket.placement == 'data' for r in res_m)
+for rm, rl in zip(res_m, res_l):
+    d = float(np.mean((rm.x - rl.x) ** 2))
+    assert d <= 1e-10, d
+print('ok')
+""", 8, timeout=900)

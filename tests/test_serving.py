@@ -13,7 +13,7 @@ from repro.core.rate_alloc import dp_allocate, stack_schedules
 from repro.core.rate_distortion import RDModel
 from repro.core.state_evolution import CSProblem
 from repro.serving import (Batcher, BucketPolicy, SolveRequest, SolveService,
-                           bucket_for, pad_batch_size)
+                           bucket_for, pad_batch_size, placement_for)
 
 
 # ---------------------------------------------------------------------------
@@ -40,6 +40,23 @@ def test_pad_batch_size():
     pol = BucketPolicy(max_batch=128)
     assert [pad_batch_size(b, pol) for b in (1, 2, 3, 8, 9, 128)] == \
         [1, 2, 4, 8, 16, 128]
+
+
+def test_placement_selection():
+    """Size-threshold placement (DESIGN.md §6): local off-mesh, data for
+    small requests, proc for large ones whose P splits over the devices."""
+    pol = BucketPolicy(shard_elems=1 << 20)
+    assert placement_for(512, 128, 4, 1, pol) == "local"
+    assert placement_for(512, 128, 4, 8, pol) == "data"
+    assert placement_for(4096, 1024, 8, 8, pol) == "proc"
+    # P not divisible by the device count: falls back to data-parallel
+    assert placement_for(4096, 1024, 6, 8, pol) == "data"
+    # placement is part of the compile-cache key
+    k_d = bucket_for(512, 128, 4, 8, "ecsq", pol, "data")
+    k_l = bucket_for(512, 128, 4, 8, "ecsq", pol, "local")
+    assert k_d != k_l and k_d.placement == "data"
+    # default stays "local" so single-device keys are unchanged
+    assert bucket_for(512, 128, 4, 8, "ecsq", pol).placement == "local"
 
 
 def test_batcher_dispatch_and_drain():

@@ -1,14 +1,18 @@
-"""Mesh-distributed MP-AMP solver tests (8 fake devices, subprocess)."""
+"""Mesh-distributed MP-AMP solver tests (8 fake devices, subprocess).
+
+All solver paths are *fully-manual* shard_map and run on every supported
+jax line; only the partial-manual train-step tests below carry a skip,
+gated on the capability probe in ``repro/compat.py``.
+"""
 import pytest
 
-from repro.compat import AxisType
+from repro.compat import supports_partial_manual
 
 # The compressed pod-axis gradient fusion uses *partial-manual* shard_map
-# (manual: pod; auto: data/model). jax 0.4.x's experimental `auto=` support
-# trips an XLA SPMD partitioner CHECK (IsManualSubgroup) on this pattern;
-# the fully-manual solver path below works on all supported versions.
+# (manual: pod; auto: data/model) — see compat.supports_partial_manual for
+# why jax 0.4.x cannot run (or even safely probe) that pattern.
 partial_manual = pytest.mark.skipif(
-    AxisType is None,
+    not supports_partial_manual(),
     reason="partial-manual shard_map needs jax >= 0.5 (explicit AxisType)")
 
 
@@ -17,6 +21,7 @@ def test_distributed_solver_matches_centralized(multidev):
 import jax, numpy as np
 from repro.compat import make_mesh
 from repro.core.denoisers import BernoulliGauss
+from repro.core.engine import AmpEngine, CompressedPsumTransport
 from repro.core.state_evolution import CSProblem
 from repro.core.amp import sample_problem, amp_solve
 from repro.launch.solver import DistributedMPAMP, SolverConfig
@@ -37,6 +42,12 @@ x8, _, nv = sv8.solve(a, y)
 mse8 = np.mean((x8 - s0)**2)
 assert mse8 < ref.mse[-1] * 1.25, (mse8, ref.mse[-1])
 assert np.all(nv > 0)   # noise accounting active
+
+# the solver is a frontend over the engine's sharded scan: one engine,
+# one compiled solve_sharded program, no per-iteration Python loop
+assert isinstance(sv8._engine, AmpEngine)
+assert isinstance(sv8._engine.transport, CompressedPsumTransport)
+assert [k[0] for k in sv8._engine._jit_cache] == ['sharded']
 
 # straggler mode still converges to a usable solution
 svd = DistributedMPAMP(mesh, prior, SolverConfig(n_iter=12, bits=8, drop_rate=0.15))
