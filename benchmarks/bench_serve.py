@@ -33,7 +33,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
 
-def make_load(n: int, m: int, p: int, t: int, b: int, eps: float = 0.1):
+def make_load(n: int, m: int, p: int, t: int, b: int, eps: float = 0.1,
+              layout: str | None = "row"):
     import jax
     import numpy as np
     from repro.core.amp import sample_problem
@@ -50,7 +51,8 @@ def make_load(n: int, m: int, p: int, t: int, b: int, eps: float = 0.1):
         s0, a, y = sample_problem(jax.random.PRNGKey(i), n, m, prior,
                                   prob.sigma_e2)
         reqs.append(SolveRequest(y=y, a=a, prior=prior, n_proc=p, n_iter=t,
-                                 policy="fixed", deltas=deltas))
+                                 policy="fixed", deltas=deltas,
+                                 layout=layout))
         s0s.append(s0)
     return prior, deltas, reqs, s0s
 
@@ -152,6 +154,29 @@ def bench_proc_sharded(n: int, m: int, p: int, t: int, reps: int,
     return out
 
 
+def bench_col_bucket(n: int, m: int, p: int, t: int, b: int, reps: int,
+                     devices: int):
+    """A tall-N bucket (auto-routed to the C-MP-AMP column layout,
+    DESIGN.md §7) through the same dispatcher: layout routing must not
+    cost throughput relative to a row bucket of the same element count."""
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serving import BucketPolicy, SolveService
+    from repro.serving.buckets import round_up
+
+    _, _, reqs, s0s = make_load(n, m, p, t, b, eps=0.02, layout=None)
+    mesh = make_serve_mesh(devices) if devices > 1 else None
+    svc = SolveService(policy=BucketPolicy(max_batch=round_up(max(b, devices),
+                                                              devices),
+                                           n_quantum=64, mp_quantum=8),
+                       rate_accounting=False, mesh=mesh)
+    res = svc.solve(reqs)  # warmup/compile
+    assert res[0].bucket.layout == "col", res[0].bucket
+    import numpy as np
+    mse = float(np.mean([r.mse(s) for r, s in zip(res, s0s)]))
+    dt, _ = best_of(lambda: svc.solve(reqs), reps)
+    return dt, res[0].bucket.placement, mse
+
+
 def dataclass_replace(req, **kw):
     import dataclasses
     return dataclasses.replace(req, request_id=-1, **kw)
@@ -168,6 +193,16 @@ def main():
     ap.add_argument("--json", default="BENCH_serve.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args()
+
+    # forcing more host devices than cores measures thread contention, not
+    # data-parallel scaling (ROADMAP open item): clamp and say so, so
+    # BENCH_serve.json numbers are always from a real-parallelism config
+    cores = os.cpu_count() or 1
+    if args.devices > cores:
+        print(f"WARNING: --devices {args.devices} exceeds the "
+              f"{cores} available cores; clamping to {cores} so the "
+              f"benchmark measures scaling, not oversubscription")
+        args.devices = cores
 
     if args.devices > 1:
         flags = os.environ.get("XLA_FLAGS", "")
@@ -231,6 +266,18 @@ def main():
         print(f"proc-sharded single:  N={nps} M={mps} P={pps} wire={tr} "
               f"placement={row['placement']}: {row['seconds']*1e3:.1f} ms")
     report["proc_sharded"] = {"n": nps, "m": mps, "p": pps, **proc}
+
+    # column-layout bucket: tall-N requests auto-routed to C-MP-AMP
+    # (DESIGN.md §7) through the same dispatcher
+    ncb, mcb, bcb = (1024, 128, 8) if args.smoke else (4096, 512, 16)
+    dt_cb, placement_cb, mse_cb = bench_col_bucket(
+        ncb, mcb, p, t, bcb, max(2, reps // 2), args.devices)
+    print(f"column bucket:        N={ncb} M={mcb} B={bcb} "
+          f"placement={placement_cb} layout=col: {bcb / dt_cb:.1f} req/s "
+          f"(mse {mse_cb:.2e})")
+    report["col_bucket"] = {
+        "n": ncb, "m": mcb, "batch": bcb, "placement": placement_cb,
+        "req_s": bcb / dt_cb, "seconds": dt_cb, "mse": mse_cb}
 
     if args.json:
         with open(args.json, "w") as f:

@@ -18,14 +18,16 @@ from repro.core.denoisers import BernoulliGauss
 from repro.core.state_evolution import CSProblem
 from repro.serving import BucketPolicy, SolveRequest, SolveService
 
-# Mixed traffic: (eps, snr_db, N, M, P, T, policy) — four different
-# operating points, three different rate policies, two different shapes.
+# Mixed traffic: (eps, snr_db, N, M, P, T, policy) — different operating
+# points, three rate policies, and both partition layouts: wide shapes
+# (N/M ~ 3.2) route row-wise, tall ones (N/M >= 4) route to C-MP-AMP
+# column buckets (DESIGN.md §7).
 SPECS = [
-    (0.10, 20.0, 1024, 256, 8, 8, "lossless"),
-    (0.10, 20.0, 1024, 256, 8, 8, "fixed"),
-    (0.05, 20.0, 1024, 256, 8, 10, "bt"),
-    (0.10, 15.0,  512, 128, 4, 8, "bt"),
-    (0.05, 25.0,  512, 128, 4, 6, "fixed"),
+    (0.10, 20.0, 1024, 320, 8, 8, "lossless"),
+    (0.10, 20.0, 1024, 320, 8, 8, "fixed"),
+    (0.02, 20.0, 2048, 256, 8, 10, "bt"),       # tall: column layout
+    (0.10, 15.0,  512, 160, 4, 8, "bt"),
+    (0.02, 25.0, 2048, 256, 8, 6, "fixed"),     # tall: column layout
 ]
 
 
@@ -49,16 +51,19 @@ def main():
     results = svc.solve(reqs)
 
     print(f"{'policy':>9s} {'eps':>5s} {'snr':>5s} {'N':>5s} {'P':>3s} "
-          f"{'T':>3s} {'SDR(dB)':>8s} {'bits/elem':>10s} {'bucket':>18s}")
+          f"{'T':>3s} {'SDR(dB)':>8s} {'bits/unit':>10s} {'bucket':>20s}")
     for (spec, res, (s0, prob)) in zip(SPECS, results, truths):
         eps, snr, n, m, p, t, policy = spec
         final_sdr = 10 * np.log10(prob.prior.second_moment
                                   / max(res.mse(s0), 1e-30))
+        # rate units differ per layout: bits/signal-element (row) vs
+        # bits/measurement (col) — the bucket's layout letter disambiguates
         bits = f"{res.total_bits:10.2f}" if res.tracked else "  lossless"
         bk = (f"({res.bucket.n_pad},{res.bucket.m_pad},"
-              f"{res.bucket.n_proc},{res.bucket.t_max})")
+              f"{res.bucket.n_proc},{res.bucket.t_max})"
+              f"{res.bucket.layout[0]}")
         print(f"{policy:>9s} {eps:5.2f} {snr:5.1f} {n:5d} {p:3d} {t:3d} "
-              f"{final_sdr:8.2f} {bits} {bk:>18s}")
+              f"{final_sdr:8.2f} {bits} {bk:>20s}")
     n_buckets = len({r.bucket for r in results})
     print(f"\n{len(reqs)} requests ran as {n_buckets} bucketed engine "
           f"calls; per-request results unpadded back to native shapes.")

@@ -26,6 +26,20 @@ schedules / BT tables riding replicated. Device-collective transports
 ``f_t = sum_p Q(f_t^p)`` an actual (optionally lossy-compressed) collective
 on the device links, with straggler ``drop`` rescaling folded in.
 
+The partition **layout** is a third engine axis (DESIGN.md §7): the paper's
+row-wise scheme (``RowPartition``, each processor owns M/P rows and the
+fusion sums denoiser messages) and the column-wise C-MP-AMP of
+arXiv:1701.02578 (``ColumnPartition``, each processor owns N/P signal
+columns and the fusion sums *residual contributions* ``r^p = A_p x_p``,
+length M — the natural layout for tall-N problems where N >> M). Both run
+the same scan/transport/controller machinery: a Transport fuses a (P, L)
+stack into (L,) either way, so ``ExactFusion``/``EcsqTransport``/
+``BlockQuantTransport`` and the device collectives apply to residual
+contributions unchanged. Column rate control gets its own in-graph tables
+(``ColumnBTRateControl``: the quantized payload is ~Gaussian, so the rate
+table is one-dimensional) driven by the column-wise two-stage state
+evolution (``state_evolution.se_trajectory_col``).
+
 ``core/amp.py`` (centralized), ``core/mp_amp.py`` (emulated multi-processor)
 and ``launch/solver.py`` (mesh-distributed) are thin frontends over this
 module; arbitrary Python rate-controller callables are still supported via
@@ -49,18 +63,21 @@ from ..kernels.amp_fused.ops import amp_local_step
 from .compression import (QuantConfig, compressed_psum, dequantize_blocks,
                           quant_noise_var, quantize_blocks)
 from .denoisers import BernoulliGauss, eta, eta_bg
-from .quantize import dequantize_midtread, message_mixture, quantize_midtread
+from .quantize import (GaussMixture, dequantize_midtread, ecsq_entropy,
+                       message_mixture, quantize_midtread)
 from .rate_alloc import BTController, rate_for_sigma_q2
 from .rate_distortion import RDModel
-from .state_evolution import CSProblem
+from .state_evolution import CSProblem, se_trajectory_col
 
 __all__ = [
     "AmpEngine", "EngineConfig", "EngineTrace",
+    "RowPartition", "ColumnPartition",
     "Transport", "ExactFusion", "EcsqTransport", "BlockQuantTransport",
     "PsumFusion", "CompressedPsumTransport",
     "RateController", "FixedSchedule", "DPSchedule", "BTRateControl",
+    "ColDPSchedule", "ColumnBTRateControl", "ColBTTables", "col_bt_delta_for",
     "BTTables", "HetParams", "bt_delta_for", "stack_bt_tables",
-    "pad_bt_tables", "amp_gc_step", "split_problem",
+    "pad_bt_tables", "amp_gc_step", "split_problem", "split_problem_cols",
 ]
 
 
@@ -74,6 +91,66 @@ def split_problem(a_mat: np.ndarray, y: np.ndarray, n_proc: int):
     assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
     mp = m // n_proc
     return a_mat.reshape(n_proc, mp, n), y.reshape(n_proc, mp)
+
+
+def split_problem_cols(a_mat: np.ndarray, n_proc: int) -> np.ndarray:
+    """Column-partition A across processors: (M, N) -> (P, M, N/P).
+
+    Processor p owns the contiguous column block ``A[:, p*N/P:(p+1)*N/P]``
+    and the matching slice of the signal (C-MP-AMP, DESIGN.md §7); y is
+    shared, not split — the measurements are common to every processor.
+    """
+    m, n = a_mat.shape
+    assert n % n_proc == 0, f"N={n} not divisible by P={n_proc}"
+    np_ = n // n_proc
+    return np.ascontiguousarray(
+        a_mat.reshape(m, n_proc, np_).transpose(1, 0, 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class RowPartition:
+    """The source paper's layout: each processor owns M/P measurement rows;
+    the fusion sums the per-processor denoiser messages f^p (length N)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnPartition:
+    """C-MP-AMP layout (arXiv:1701.02578): each processor owns N/P signal
+    columns; the fusion sums quantized residual contributions A_p x_p
+    (length M).  ``EngineConfig.n_iter`` counts *outer rounds* (one fusion
+    exchange each); every round runs ``n_inner`` local AMP iterations.
+
+    The Onsager memory must survive the fusion boundary — a bare restart
+    (``z <- g`` with no correction) measurably breaks the two-stage state
+    evolution (the SE-oracle tests would catch a ~20x drift).  Every
+    block jumps *simultaneously* at a fusion, so the joint correction is
+    the sum of every processor's final Onsager term: the next round's
+    residual starts from
+
+        g^{s+1} + sum_q c_q * z_q^{last},
+
+    where ``z_q^{last}`` is the residual that fed processor q's final
+    denoise and ``c_q = sum(eta')/M`` its coefficient (a per-processor
+    correction alone — each block treating the others as a frozen
+    observation — visibly under-corrects and stalls).  At ``n_inner == 1``
+    every ``z_q^{last}`` *is* the previous fused residual, the correction
+    collapses to the scalar ``(sum_q c_q) * g^s``, and C-MP-AMP becomes
+    *identical* to centralized AMP under exact fusion — which is what the
+    layout-parity tests pin; the engine then carries only that scalar
+    (one extra number per processor on the wire).  At ``n_inner > 1`` the
+    correction is a second length-M exchange riding with the residual
+    contributions (uncompressed: it is an Onsager correction, not a
+    payload — DESIGN.md §7 discusses the traffic accounting).
+    """
+
+    n_inner: int = 1
+
+    @property
+    def carry_fused(self) -> bool:
+        """Scalar-carry fast path: at one inner iteration per round the
+        joint boundary correction is a scalar times the previous fused
+        residual (docstring), so nothing vector-valued crosses rounds."""
+        return self.n_inner == 1
 
 
 def amp_gc_step(f, denoise_var, prior: BernoulliGauss, kappa):
@@ -552,17 +629,184 @@ class BTRateControl:
 
 
 # ---------------------------------------------------------------------------
+# column-layout rate control (C-MP-AMP, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+class ColBTTables(NamedTuple):
+    """In-graph state of the column-layout BT controller (pure pytree,
+    stackable/vmappable exactly like ``BTTables``).
+
+    The quantized payload is the residual contribution r^p = A_p x_p whose
+    entries are ~ N(0, v_r) (``quantize.residual_mixture``), so the rate
+    model collapses to a *one-dimensional* table: H_Q of a unit Gaussian
+    as a function of the normalized bin u = Delta / sd(r^p).
+    """
+
+    log_v: jnp.ndarray        # (400,) MMSE interp grid, log variance
+    log_m: jnp.ndarray        # (400,) log mmse values
+    targets: jnp.ndarray      # (S,) c_ratio * tau_C^{s} (lossless column SE)
+    log2u_grid: jnp.ndarray   # (n_u,) rate-table axis
+    hq_tab: jnp.ndarray       # (n_u,) H_Q(u) of the unit Gaussian
+    u_cap: jnp.ndarray        # () log2 u achieving rate r_max
+    sigma_e2: jnp.ndarray     # () problem scalars -------------------
+    inv_kappa: jnp.ndarray    # ()
+    n_proc: jnp.ndarray       # () float
+    eps: jnp.ndarray          # () prior
+    mu_s: jnp.ndarray         # ()
+    sigma_s2: jnp.ndarray     # ()
+    r_max: jnp.ndarray        # ()
+
+    _dummies = {}  # class-level memo for dummy tables (not a field)
+
+    @classmethod
+    def dummy(cls, n_iter: int, n_u: int = 256) -> "ColBTTables":
+        """Benign finite tables for non-BT instances of a mixed column
+        bucket (same contract as ``BTTables.dummy``)."""
+        key = (n_iter, n_u)
+        if key in cls._dummies:
+            return cls._dummies[key]
+        f = lambda v: jnp.asarray(v, jnp.float32)
+        lin = np.linspace(-20.0, 7.0, 400).astype(np.float32)
+        tb = cls(
+            log_v=jnp.asarray(lin), log_m=jnp.asarray(lin),
+            targets=jnp.ones(n_iter, jnp.float32),
+            log2u_grid=jnp.asarray(np.linspace(-12.0, 5.0, n_u), jnp.float32),
+            hq_tab=jnp.ones(n_u, jnp.float32),
+            u_cap=f(0.0), sigma_e2=f(1e-3), inv_kappa=f(1.0), n_proc=f(1.0),
+            eps=f(0.1), mu_s=f(0.0), sigma_s2=f(1.0), r_max=f(6.0),
+        )
+        cls._dummies[key] = tb
+        return tb
+
+
+def col_bt_delta_for(tb: ColBTTables, t, v_prev):
+    """One in-graph column-BT decision: (tables, round, v̂_{s-1}) -> (delta,
+    rate).  Pure jnp over the pytree, vmappable over stacked tables.
+
+    The rule mirrors the row-wise BT (paper Sec. 3.3) through the column
+    SE: from the previous round's fused-residual plug-in v̂ the predicted
+    block MSE is d = mmse(v̂); pick the largest admissible quantizer MSE
+    such that the predicted variance of this round's fused residual,
+
+        sigma_e^2 + d / kappa  +  P * sigma_Q^2,
+
+    stays within the target c * tau_C^{s}.  Quantization noise enters
+    *additively outside* the mmse map here (it lands on g itself), so the
+    admissible sigma_Q^2 is closed-form — no bisection.  The r_max cap
+    inverts the 1-D Gaussian H_Q table.  Round 0 is lossless for free
+    (the exchanged contributions are identically zero): delta = inf,
+    rate = 0.
+    """
+    v_prev = jnp.maximum(v_prev, 1e-30)
+    d = _bt_mmse(tb, v_prev)
+    sm = tb.eps * (tb.mu_s**2 + tb.sigma_s2)
+    v_r = jnp.maximum(sm - d, 1e-30) * tb.inv_kappa / tb.n_proc
+    sd_r = jnp.sqrt(v_r)
+
+    base = tb.sigma_e2 + d * tb.inv_kappa
+    target = tb.targets[t]
+    sq2_adm = jnp.maximum(target - base, 0.0) / tb.n_proc
+    sq2_cap = (jnp.exp2(tb.u_cap) * sd_r) ** 2 / 12.0
+    # the cap binds when the admissible bin is finer than r_max affords
+    sq2 = jnp.minimum(jnp.maximum(sq2_adm, sq2_cap), v_r)
+    lu = 0.5 * jnp.log2(12.0 * sq2 / v_r)
+    lu_c = jnp.clip(lu, tb.log2u_grid[0], tb.log2u_grid[-1])
+    rate = jnp.minimum(jnp.interp(lu_c, tb.log2u_grid, tb.hq_tab), tb.r_max)
+    first = t == 0
+    delta = jnp.where(first, jnp.float32(jnp.inf), jnp.sqrt(12.0 * sq2))
+    return delta, jnp.where(first, 0.0, rate)
+
+
+class ColumnBTRateControl:
+    """In-graph BT back-tracking for the column layout, scan/jit/vmap-safe.
+
+    Tables are built once at construction: the MMSE interp grid (same
+    400-point log-log grid as ``BTRateControl``), per-round targets from
+    the lossless column-wise SE reference (``se_trajectory_col``), and the
+    1-D unit-Gaussian ECSQ entropy table H_Q(u) with its r_max inversion.
+    Supports ``n_inner == 1`` (the serving default), where the measured
+    plug-in v̂_{s-1} determines the predicted block MSE exactly; multi-
+    inner-round schedules use offline allocation (``dp_allocate_col``)
+    instead.
+    """
+
+    def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
+                 c_ratio: float = 1.05, r_max: float = 6.0,
+                 n_inner: int = 1, mmse_fn=None, n_u_grid: int = 256):
+        assert n_inner == 1, \
+            "in-graph column BT tracks the measured plug-in, which pins " \
+            "the block MSE only at n_inner=1; use dp_allocate_col for " \
+            "multi-inner-round rate schedules"
+        from .denoisers import make_mmse_interp
+        self.prob = prob
+        self.n_proc = n_proc
+        self.n_iter = n_iter
+        self.n_inner = n_inner
+        self.c_ratio = c_ratio
+        self.r_max = r_max
+        self.mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
+
+        grid_v = np.geomspace(1e-9, 1e3, 400)
+        grid_m = np.maximum(np.asarray(self.mmse_fn(grid_v), np.float64),
+                            1e-300)
+
+        tau_c, _ = se_trajectory_col(prob, n_proc, n_iter, n_inner,
+                                     mmse_fn=self.mmse_fn)
+        targets = np.asarray(c_ratio * tau_c, np.float32)
+
+        log2u_grid = np.linspace(-12.0, 5.0, n_u_grid)
+        unit = GaussMixture(w=(1.0,), mu=(0.0,), var=(1.0,))
+        hq = ecsq_entropy(2.0 ** log2u_grid, unit)
+        # H_Q(u) is strictly decreasing: invert for the r_max bin
+        u_cap = float(np.interp(r_max, hq[::-1], log2u_grid[::-1]))
+
+        f32 = lambda v: jnp.asarray(v, jnp.float32)
+        self.tables = ColBTTables(
+            log_v=f32(np.log(grid_v)), log_m=f32(np.log(grid_m)),
+            targets=jnp.asarray(targets),
+            log2u_grid=f32(log2u_grid), hq_tab=f32(hq), u_cap=f32(u_cap),
+            sigma_e2=f32(prob.sigma_e2), inv_kappa=f32(1.0 / prob.kappa),
+            n_proc=f32(float(n_proc)), eps=f32(prob.prior.eps),
+            mu_s=f32(prob.prior.mu_s), sigma_s2=f32(prob.prior.sigma_s**2),
+            r_max=f32(r_max),
+        )
+
+    def delta_for(self, t, v_prev):
+        return col_bt_delta_for(self.tables, t, v_prev)
+
+
+class ColDPSchedule(FixedSchedule):
+    """``dp_allocate_col`` result realized as per-round ECSQ bin sizes for
+    the column layout (the column counterpart of ``DPSchedule``)."""
+
+    def __init__(self, dp_result, prob: CSProblem, n_proc: int,
+                 ecsq_gap: bool = True):
+        from .rate_alloc import col_sigma_q2_for_rate
+        sq2 = np.atleast_1d(col_sigma_q2_for_rate(
+            dp_result.rates[1:], dp_result.sigma2_d[1:-1], prob, n_proc,
+            ecsq_gap))
+        super().__init__(np.concatenate([[np.inf], np.sqrt(12.0 * sq2)]))
+        self.rates = np.asarray(dp_result.rates)
+        self.d_traj = np.asarray(dp_result.sigma2_d)
+
+
+# ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     n_proc: int = 30
-    n_iter: int = 10
+    n_iter: int = 10                  # iterations (row) / outer rounds (col)
     use_kernel: bool | None = None    # None = Pallas on TPU, jnp elsewhere
     kernel_interpret: bool = False    # Pallas interpret mode (CPU parity/CI)
-    collect_symbols: bool = True      # trace quantizer indices (T, P, N)
+    collect_symbols: bool = True      # trace quantizer indices (T, P, N|M)
     collect_xs: bool = True           # trace per-iteration estimates (T, N)
+    layout: RowPartition | ColumnPartition = RowPartition()
+
+    @property
+    def is_col(self) -> bool:
+        return isinstance(self.layout, ColumnPartition)
 
 
 class HetParams(NamedTuple):
@@ -692,6 +936,137 @@ class AmpEngine:
             return jnp.asarray(deltas, jnp.float32)
         return jnp.zeros(self.cfg.n_iter, jnp.float32)
 
+    # -- column-layout iteration body (C-MP-AMP, DESIGN.md §7) ---------------
+
+    def _check_col_controller(self):
+        assert isinstance(self.controller,
+                          (FixedSchedule, ColumnBTRateControl)), \
+            "the column layout takes a FixedSchedule/ColDPSchedule or a " \
+            "ColumnBTRateControl (row-wise controllers predict through " \
+            f"the wrong SE), got {type(self.controller).__name__}"
+
+    def _col_gather_x(self, x, axis):
+        """Local (P, N/P) signal slices -> the flat (N,) estimate; in
+        sharded mode the slices are gathered across the mesh axis first."""
+        if axis is not None:
+            x = lax.all_gather(x, axis)
+        return x.reshape(-1)
+
+    def _col_init(self, p_loc: int, np_: int, y, v0):
+        """Initial column scan carry ``(x, mem, coef, v_prev)``.
+
+        ``mem``/``coef`` are the Onsager boundary memory: the previous
+        fused residual (M,) + summed coefficients () in fused mode, the
+        per-processor residuals (P, M) + own coefficients (P,) in
+        per-processor mode (``ColumnPartition`` docstring)."""
+        x = jnp.zeros((p_loc, np_), jnp.float32)
+        if self.cfg.layout.carry_fused:
+            return (x, jnp.zeros_like(y), jnp.zeros(()), v0)
+        return (x, jnp.zeros((p_loc,) + y.shape, jnp.float32),
+                jnp.zeros(p_loc, jnp.float32), v0)
+
+    def _col_inner(self, x, g, z_p, a_cp, m_eff, eta_fn, n_mask=None):
+        """``layout.n_inner`` local AMP iterations at each processor on the
+        fused residual ``g`` (C-MP-AMP inner stage).
+
+        Per inner step at processor p (all pure per-processor math):
+            sigma_p^2 = ||z_p||^2 / M            (plug-in)
+            f_p = x_p + A_p^T z_p
+            x_p <- eta(f_p, sigma_p^2)
+            z_p <- g - A_p (x_p - x_p^0) + c_p z_p,  c_p = sum(eta') / M
+
+        ``z_p`` is the round's starting residual stack (P, M).  Returns
+        ``(x, c_p, z_last)`` with ``z_last`` the residual that *fed* the
+        final denoise — the quantity AMP's Onsager term multiplies, which
+        is what the per-processor boundary carry needs (the fused boundary
+        mode discards it).  ``n_inner`` is static, so the loop unrolls
+        into the round's scan body.
+        """
+        n_inner = self.cfg.layout.n_inner
+        x0 = x
+        for t in range(n_inner):
+            s2_p = jnp.sum(z_p * z_p, axis=-1, keepdims=True) / m_eff
+            fn = lambda v, s2=s2_p: eta_fn(v, s2)
+            f_p = x + jnp.einsum("pmn,pm->pn", a_cp, z_p)
+            if n_mask is None:
+                x_new = fn(f_p)
+                deriv = jax.grad(lambda v: jnp.sum(fn(v)))(f_p)
+            else:
+                x_new = fn(f_p) * n_mask
+                deriv = jax.grad(lambda v: jnp.sum(fn(v) * n_mask))(f_p)
+            c_p = jnp.sum(deriv, axis=-1) / m_eff
+            if t + 1 < n_inner:
+                z_p = (g[None, :]
+                       - jnp.einsum("pmn,pn->pm", a_cp, x_new - x0)
+                       + c_p[:, None] * z_p)
+            x = x_new
+        return x, c_p, z_p
+
+    def _col_round(self, x, mem, coef, delta, a_cp, y, m_eff, eta_fn,
+                   n_mask=None, drop=None, axis=None):
+        """Shared round computation: fuse, apply the boundary Onsager
+        memory, run the inner stage.  Returns the new carry pieces plus
+        the round's trace quantities ``(v_hat, extra, syms)``."""
+        r_p = jnp.einsum("pmn,pn->pm", a_cp, x)
+        r, extra, syms = self._fuse(r_p, delta, drop)
+        g = y - r
+        # boundary Onsager correction sum_q c_q z_q^last (ColumnPartition
+        # docstring); scalar * previous-g on the n_inner == 1 fast path
+        if self.cfg.layout.carry_fused:
+            g = g + coef * mem
+        else:
+            corr = jnp.einsum("p,pm->m", coef, mem)
+            if axis is not None:
+                corr = lax.psum(corr, axis)
+            g = g + corr
+        # g is replicated across shards post-fusion: no psum needed
+        v_hat = jnp.sum(g * g) / m_eff
+        z0 = jnp.broadcast_to(g, x.shape[:1] + g.shape)
+        x_new, c_p, z_last = self._col_inner(x, g, z0, a_cp, m_eff, eta_fn,
+                                             n_mask=n_mask)
+        if self.cfg.layout.carry_fused:
+            coef_new = jnp.sum(c_p)
+            if axis is not None:
+                coef_new = lax.psum(coef_new, axis)
+            mem_new = g
+        else:
+            mem_new, coef_new = z_last, c_p
+        return x_new, mem_new, coef_new, v_hat, extra, syms
+
+    def _col_body(self, carry, xs_t, a_cp, y, m_eff, axis=None):
+        """One C-MP-AMP outer round: fuse quantized residual contributions,
+        then run the inner stage.
+
+        The scan carry is ``(x, mem, coef, v_prev)``: the per-processor
+        signal slices, the Onsager boundary memory (``_col_init``), and
+        the previous round's plug-in ``||g||^2/M`` — the column controller
+        input (round 0 is lossless for free, so the controller always has
+        a measured variance to act on).
+        """
+        if axis is None:
+            (s, sched_delta), drop = xs_t, None
+        else:
+            s, sched_delta, drop = xs_t
+        x, mem, coef, v_prev = carry
+        if isinstance(self.controller, FixedSchedule):
+            delta, rate = sched_delta, jnp.float32(jnp.inf)
+        else:
+            delta, rate = self.controller.delta_for(s, v_prev)
+        prior = self.prior
+        x_new, mem_new, coef_new, v_hat, extra, syms = self._col_round(
+            x, mem, coef, delta, a_cp, y, m_eff,
+            lambda v, s2: eta(v, s2, prior, xp=jnp), drop=drop, axis=axis)
+        # round 0 quantizes all-zero contributions exactly: no noise
+        # actually enters g, whatever bin the schedule names — keep the
+        # trace's accounting truthful
+        extra = jnp.where(s == 0, 0.0, extra)
+        cfg = self.cfg
+        out = (v_hat, delta, extra, rate,
+               self._col_gather_x(x_new, axis) if cfg.collect_xs
+               else jnp.zeros(()),
+               syms if cfg.collect_symbols else jnp.zeros(()))
+        return (x_new, mem_new, coef_new, v_hat), out
+
     # -- compiled entry points ----------------------------------------------
 
     def _scan_fn(self, m: int, n: int):
@@ -729,6 +1104,60 @@ class AmpEngine:
                                  np.asarray(y, np.float32), self.cfg.n_proc)
         return jnp.asarray(a_p), jnp.asarray(y_p)
 
+    def _split_col(self, y, a_mat):
+        a_cp = split_problem_cols(np.asarray(a_mat, np.float32),
+                                  self.cfg.n_proc)
+        return jnp.asarray(a_cp), jnp.asarray(np.asarray(y, np.float32))
+
+    def _col_scan_fn(self, m: int, n: int):
+        """Build (once per shape) the jitted full-solve column scan."""
+        key = ("col", m, n)
+        if key not in self._jit_cache:
+            cfg = self.cfg
+            p = cfg.n_proc
+
+            def solve_fn(a_cp, y, sched):
+                np_ = a_cp.shape[2]
+                init = self._col_init(p, np_, y, jnp.sum(y * y) / m)
+                body = lambda c, xs: self._col_body(c, xs, a_cp, y,
+                                                    jnp.float32(m))
+                (x, _, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), sched))
+                return x.reshape(-1), outs
+
+            self._jit_cache[key] = jax.jit(solve_fn)
+        return self._jit_cache[key]
+
+    def _solve_col(self, y, a_mat) -> EngineTrace:
+        self._check_col_controller()
+        a_cp, yj = self._split_col(y, a_mat)
+        m, n = a_cp.shape[1], a_cp.shape[0] * a_cp.shape[2]
+        x, outs = self._col_scan_fn(m, n)(a_cp, yj, self._sched_operand())
+        return self._trace(x, outs)
+
+    def _solve_many_col(self, ys, a_mats) -> EngineTrace:
+        self._check_col_controller()
+        ys = np.asarray(ys, np.float32)
+        a_mats = np.asarray(a_mats, np.float32)
+        shared_a = a_mats.ndim == 2
+        b = ys.shape[0]
+        p = self.cfg.n_proc
+        m, n = a_mats.shape[-2:]
+        if shared_a:
+            a_b = jnp.asarray(split_problem_cols(a_mats, p))
+        else:
+            assert a_mats.shape[0] == b
+            a_b = jnp.asarray(np.stack(
+                [split_problem_cols(a_mats[i], p) for i in range(b)]))
+        y_b = jnp.asarray(ys)
+        key = ("col_vmap", m, n, shared_a)
+        if key not in self._jit_cache:
+            fn = self._col_scan_fn(m, n)
+            in_axes = (None, 0, None) if shared_a else (0, 0, None)
+            self._jit_cache[key] = jax.jit(jax.vmap(fn, in_axes=in_axes))
+        x, outs = self._jit_cache[key](a_b, y_b, self._sched_operand())
+        return self._trace(x, outs)
+
     def _trace(self, x, outs) -> EngineTrace:
         cfg = self.cfg
         s2, deltas, extra, rates, xs, syms = outs
@@ -743,7 +1172,12 @@ class AmpEngine:
         )
 
     def solve(self, y, a_mat) -> EngineTrace:
-        """Full T-iteration solve as one scan-compiled call (no host sync)."""
+        """Full T-iteration solve as one scan-compiled call (no host sync).
+
+        Under a ``ColumnPartition`` layout this is the full outer-round
+        C-MP-AMP solve (``cfg.n_iter`` fusion exchanges)."""
+        if self.cfg.is_col:
+            return self._solve_col(y, a_mat)
         a_p, y_p = self._split(y, a_mat)
         m = a_p.shape[0] * a_p.shape[1]
         x, outs = self._scan_fn(m, a_p.shape[2])(a_p, y_p,
@@ -756,6 +1190,8 @@ class AmpEngine:
         ys (B, M); a_mats (B, M, N) or a single shared (M, N) matrix.
         Symbol collection is typically disabled for batches (memory).
         """
+        if self.cfg.is_col:
+            return self._solve_many_col(ys, a_mats)
         ys = np.asarray(ys, np.float32)
         a_mats = np.asarray(a_mats, np.float32)
         shared_a = a_mats.ndim == 2
@@ -849,6 +1285,65 @@ class AmpEngine:
             self._jit_cache[key] = jax.jit(jax.vmap(solve_one))
         return self._jit_cache[key]
 
+    def _col_body_het(self, carry, xs_t, a_cp, y, hp: HetParams, n_mask,
+                      has_bt: bool, axis=None):
+        """One masked C-MP-AMP outer round with per-instance (traced)
+        problem params — the column counterpart of ``_body_het``.  Same
+        carry as ``_col_body`` plus the ``t_active`` freeze; ``hp.bt``
+        holds stacked ``ColBTTables`` for column buckets."""
+        if axis is None:
+            (s, sched_delta), drop = xs_t, None
+        else:
+            s, sched_delta, drop = xs_t
+        x, mem, coef, v_prev = carry
+        if has_bt:
+            bt_delta, bt_rate = col_bt_delta_for(hp.bt, s, v_prev)
+            delta = jnp.where(hp.use_bt, bt_delta, sched_delta)
+            rate = jnp.where(hp.use_bt, bt_rate, jnp.float32(jnp.inf))
+        else:
+            delta, rate = sched_delta, jnp.float32(jnp.inf)
+        x_new, mem_new, coef_new, v_hat, extra, syms = self._col_round(
+            x, mem, coef, delta, a_cp, y, hp.m_real,
+            lambda v, s2: eta_bg(v, s2, hp.eps, hp.mu_s, hp.sigma_s**2),
+            n_mask=n_mask, drop=drop, axis=axis)
+        extra = jnp.where(s == 0, 0.0, extra)   # zero round-0 payload
+        act = s < hp.t_active
+        x1 = jnp.where(act, x_new, x)
+        mem1 = jnp.where(act, mem_new, mem)
+        coef1 = jnp.where(act, coef_new, coef)
+        v1 = jnp.where(act, v_hat, v_prev)
+        cfg = self.cfg
+        out = (jnp.where(act, v_hat, 0.0), jnp.where(act, delta, 0.0),
+               jnp.where(act, extra, 0.0),
+               jnp.where(act, rate, jnp.float32(jnp.inf)),
+               self._col_gather_x(x1, axis) if cfg.collect_xs
+               else jnp.zeros(()),
+               syms if cfg.collect_symbols else jnp.zeros(()))
+        return (x1, mem1, coef1, v1), out
+
+    def _col_scan_fn_het(self, m_pad: int, np_pad: int, has_bt: bool):
+        """Jitted vmapped heterogeneous column-batch solve for one padded
+        shape: a (B, P, M_pad, Np_pad) column shards, y (B, M_pad)."""
+        key = ("col_het", m_pad, np_pad, has_bt)
+        if key not in self._jit_cache:
+            cfg = self.cfg
+            p = cfg.n_proc
+
+            def solve_one(a_cp, y, hp: HetParams):
+                # every processor owns n_real/P real columns of its slice
+                n_mask = (jnp.arange(np_pad) < hp.n_real // p
+                          ).astype(jnp.float32)[None, :]
+                init = self._col_init(p, np_pad, y,
+                                      jnp.sum(y * y) / hp.m_real)
+                body = lambda c, xs: self._col_body_het(c, xs, a_cp, y, hp,
+                                                        n_mask, has_bt)
+                (x, _, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), hp.sched))
+                return x.reshape(-1), outs
+
+            self._jit_cache[key] = jax.jit(jax.vmap(solve_one))
+        return self._jit_cache[key]
+
     def dispatch_het(self, a_b, y_b, params: HetParams,
                      has_bt: bool | None = None):
         """Launch the compiled het solve, returning raw ``(x, outs)`` device
@@ -862,11 +1357,19 @@ class AmpEngine:
         """
         a_b = jnp.asarray(a_b, jnp.float32)
         y_b = jnp.asarray(y_b, jnp.float32)
+        if has_bt is None:
+            has_bt = bool(np.any(np.asarray(params.use_bt)))
+        if self.cfg.is_col:
+            # column layout: a_b (B, P, M_pad, Np_pad), y_b (B, M_pad) —
+            # y is shared across processors, not row-split
+            b, p, m_pad, np_pad = a_b.shape
+            assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
+            assert y_b.shape == (b, m_pad), (y_b.shape, (b, m_pad))
+            return self._col_scan_fn_het(m_pad, np_pad, has_bt)(a_b, y_b,
+                                                                params)
         b, p, mp_, n = a_b.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
         assert y_b.shape == (b, p, mp_)
-        if has_bt is None:
-            has_bt = bool(np.any(np.asarray(params.use_bt)))
         return self._scan_fn_het(mp_, n, has_bt)(a_b, y_b, params)
 
     def trace_of(self, x_outs) -> EngineTrace:
@@ -934,6 +1437,44 @@ class AmpEngine:
             self._jit_cache[key] = jax.jit(fn)
         return self._jit_cache[key]
 
+    def _col_sharded_fn(self, m: int, n: int, mesh, axis: str):
+        """Jitted column-layout solve under shard_map: each device owns P/D
+        column blocks; the fusion psums residual contributions (length M)
+        and the boundary Onsager scalar across the mesh axis; y and the
+        fused residual are replicated."""
+        key = ("col_sharded", m, n, mesh, axis)
+        if key not in self._jit_cache:
+            cfg = self.cfg
+
+            def solve_fn(a_cp, y, sched):
+                # local: a_cp (P/D, M, N/P); y (M,) replicated
+                p_loc, _, np_ = a_cp.shape
+                init = self._col_init(p_loc, np_, y, jnp.sum(y * y) / m)
+                drops = jnp.zeros(cfg.n_iter, jnp.float32)
+                body = lambda c, xs: self._col_body(c, xs, a_cp, y,
+                                                    jnp.float32(m),
+                                                    axis=axis)
+                (x, _, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), sched, drops))
+                return self._col_gather_x(x, axis), outs
+
+            fn = shard_map(
+                solve_fn, mesh=mesh,
+                in_specs=(PartitionSpec(axis, None, None), PartitionSpec(),
+                          PartitionSpec()),
+                out_specs=PartitionSpec(), axis_names={axis}, check=False)
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+    def _solve_sharded_col(self, y, a_mat, mesh) -> EngineTrace:
+        axis, _ = self._sharded_axis(mesh)
+        self._check_col_controller()
+        a_cp, yj = self._split_col(y, a_mat)
+        m, n = a_cp.shape[1], a_cp.shape[0] * a_cp.shape[2]
+        x, outs = self._col_sharded_fn(m, n, mesh, axis)(
+            a_cp, yj, self._sched_operand())
+        return self._trace(x, outs)
+
     def solve_sharded(self, y, a_mat, mesh, drop_sched=None) -> EngineTrace:
         """Device-sharded solve: row-partitioned (A, y) across the mesh axis
         of the engine's device-collective transport, fusion on the wire.
@@ -943,7 +1484,17 @@ class AmpEngine:
         device links. ``drop_sched`` (T, n_dev) optionally marks straggler
         shards per iteration; the transport rescales the survivors
         unbiasedly instead of stalling the solve.
+
+        Under a ``ColumnPartition`` layout the mesh axis carries the column
+        blocks and the fusion psums residual contributions; straggler drop
+        does not apply (a dropped shard would remove its *signal block*
+        from the fusion — a bias, not zero-mean noise — so ``drop_sched``
+        must be None).
         """
+        if self.cfg.is_col:
+            assert drop_sched is None, \
+                "straggler drop_sched does not apply to the column layout"
+            return self._solve_sharded_col(y, a_mat, mesh)
         axis, n_dev = self._sharded_axis(mesh)
         a_p, y_p = self._split(y, a_mat)
         m, n = a_p.shape[0] * a_p.shape[1], a_p.shape[2]
@@ -981,6 +1532,35 @@ class AmpEngine:
             self._jit_cache[key] = jax.jit(fn)
         return self._jit_cache[key]
 
+    def _col_sharded_het_fn(self, m_pad: int, np_pad: int, has_bt: bool,
+                            mesh, axis: str):
+        key = ("col_sharded_het", m_pad, np_pad, has_bt, mesh, axis)
+        if key not in self._jit_cache:
+            cfg = self.cfg
+            p = cfg.n_proc
+
+            def solve_one(a_cp, y, hp: HetParams):
+                n_mask = (jnp.arange(np_pad) < hp.n_real // p
+                          ).astype(jnp.float32)[None, :]
+                p_loc = a_cp.shape[0]
+                init = self._col_init(p_loc, np_pad, y,
+                                      jnp.sum(y * y) / hp.m_real)
+                drops = jnp.zeros(cfg.n_iter, jnp.float32)
+                body = lambda c, xs: self._col_body_het(c, xs, a_cp, y, hp,
+                                                        n_mask, has_bt,
+                                                        axis=axis)
+                (x, _, _, _), outs = jax.lax.scan(
+                    body, init, (jnp.arange(cfg.n_iter), hp.sched, drops))
+                return self._col_gather_x(x, axis), outs
+
+            fn = shard_map(
+                solve_one, mesh=mesh,
+                in_specs=(PartitionSpec(axis, None, None), PartitionSpec(),
+                          PartitionSpec()),
+                out_specs=PartitionSpec(), axis_names={axis}, check=False)
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
     def dispatch_sharded(self, a_p, y_p, params: HetParams, mesh,
                          has_bt: bool | None = None):
         """Processor-sharded het solve of ONE padded instance (no batch
@@ -989,15 +1569,24 @@ class AmpEngine:
         into the shard_map). This is the serving layer's placement for
         large single requests: the mesh axis is the paper's P, the fusion a
         (possibly compressed) collective. Returns raw (x, outs); see
-        ``dispatch_het`` for the async rationale."""
+        ``dispatch_het`` for the async rationale.
+
+        Column layout: a_p (P, M_pad, Np_pad) column shards, y_p the
+        shared (M_pad,) measurements."""
         axis, _ = self._sharded_axis(mesh)
         a_p = jnp.asarray(a_p, jnp.float32)
         y_p = jnp.asarray(y_p, jnp.float32)
+        if has_bt is None:
+            has_bt = bool(np.any(np.asarray(params.use_bt)))
+        if self.cfg.is_col:
+            p, m_pad, np_pad = a_p.shape
+            assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
+            assert y_p.shape == (m_pad,), (y_p.shape, m_pad)
+            return self._col_sharded_het_fn(m_pad, np_pad, has_bt, mesh,
+                                            axis)(a_p, y_p, params)
         p, mp_, n = a_p.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
         assert y_p.shape == (p, mp_)
-        if has_bt is None:
-            has_bt = bool(np.any(np.asarray(params.use_bt)))
         return self._sharded_het_fn(mp_, n, has_bt, mesh, axis)(
             a_p, y_p, params)
 
@@ -1014,6 +1603,9 @@ class AmpEngine:
         is ``(t, sigma2_hat) -> delta``; defaults to the engine's
         controller evaluated on host.
         """
+        assert not self.cfg.is_col, \
+            "solve_host_loop is a row-layout entry point; column solves " \
+            "are scan-only (their controllers are in-graph by design)"
         cfg = self.cfg
         a_p, y_p = self._split(y, a_mat)
         m, n = a_p.shape[0] * a_p.shape[1], a_p.shape[2]

@@ -31,6 +31,7 @@ from .denoisers import BernoulliGauss
 __all__ = [
     "GaussMixture",
     "message_mixture",
+    "residual_mixture",
     "quantize_midtread",
     "dequantize_midtread",
     "ecsq_entropy",
@@ -81,6 +82,24 @@ def message_mixture(prior: BernoulliGauss, sigma_t2: float, n_proc: int) -> Gaus
         mu=(prior.mu_s / p, 0.0),
         var=((prior.sigma_s**2 + p * sigma_t2) / p**2, sigma_t2 / p),
     )
+
+
+def residual_mixture(prior: BernoulliGauss, block_mse: float, kappa: float,
+                     n_proc: int) -> GaussMixture:
+    """Distribution of one entry of the column-layout residual contribution
+    r^p = A_p x_p (C-MP-AMP fusion payload, DESIGN.md §7).
+
+    Each entry is a length-(N/P) inner product of i.i.d. N(0, 1/M) sensing
+    rows with the block estimate, hence ~ N(0, ||x_p||^2/M); with block MSE
+    ``d`` the estimator second moment is E[S0^2] - d (orthogonality), so
+
+        Var r^p = (N/P) * (E[S0^2] - d) / M = (E[S0^2] - d) / (kappa * P).
+
+    Returned as a (single-component) ``GaussMixture`` so the ECSQ entropy
+    and bin-inversion helpers apply unchanged.
+    """
+    v_r = max(prior.second_moment - block_mse, 1e-30) / (kappa * n_proc)
+    return GaussMixture(w=(1.0,), mu=(0.0,), var=(v_r,))
 
 
 def quantize_midtread(x, delta, xp=jnp):

@@ -29,7 +29,8 @@ from .quantize import (delta_for_rate_ecsq, delta_for_sigma_q2, ecsq_entropy,
 from .rate_distortion import RDModel
 from .state_evolution import CSProblem, se_trajectory
 
-__all__ = ["BTController", "bt_schedule_offline", "dp_allocate", "DPResult",
+__all__ = ["BTController", "bt_schedule_offline", "dp_allocate",
+           "dp_allocate_col", "col_sigma_q2_for_rate", "DPResult",
            "rate_for_sigma_q2", "sigma_q2_for_rate", "stack_schedules"]
 
 
@@ -230,4 +231,119 @@ def dp_allocate(prob: CSProblem, n_proc: int, n_iter: int, r_total: float,
         sigma2_d.append(prob.sigma_e2 + float(mmse_fn(eff)) / prob.kappa)
 
     return DPResult(rates=rates, sigma2_d=np.asarray(sigma2_d),
+                    sigma2_table=sigma_tab, r_grid=r_grid)
+
+
+# ---------------------------------------------------------------------------
+# DP-C-MP-AMP (column layout, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def col_sigma_q2_for_rate(rate, block_mse, prob: CSProblem, n_proc: int,
+                          ecsq_gap: bool = True):
+    """Quantizer MSE on one exchanged residual contribution at ``rate``
+    bits/entry (Gaussian model; vectorized over ``rate``/``block_mse``).
+
+    Column-layout residual entries are ~ N(0, v_r) (``residual_mixture``),
+    so the rate-distortion law is the Gaussian one, D = v_r 2^{-2R},
+    shifted by the high-rate ECSQ gap when the realized quantizer is a
+    midtread scalar one.  Capped at v_r: spending less than the gap cannot
+    do worse than sending nothing (the FC substitutes zero).
+    """
+    from .quantize import HIGH_RATE_ECSQ_GAP_BITS
+    gap = HIGH_RATE_ECSQ_GAP_BITS if ecsq_gap else 0.0
+    sm = prob.prior.second_moment
+    v_r = np.maximum(sm - np.asarray(block_mse, np.float64), 1e-30) \
+        / (prob.kappa * n_proc)
+    return v_r * np.minimum(1.0, 2.0 ** (-2.0 * (np.asarray(rate) - gap)))
+
+
+def _col_round_map(d_prev, sigma_q2, prob: CSProblem, n_proc: int,
+                   n_inner: int, mmse_fn):
+    """One outer-round map of the two-stage column SE, vectorized over a
+    (d_prev, sigma_q2) grid: returns the block MSE after the round."""
+    d_prev = np.asarray(d_prev, np.float64)
+    tau0 = prob.sigma_e2 + n_proc * sigma_q2 + d_prev / prob.kappa
+    e = d_prev
+    tau_t = tau0
+    for _ in range(n_inner):
+        e = mmse_fn(tau_t)
+        tau_t = tau0 + (e - d_prev) / (prob.kappa * n_proc)
+    return e
+
+
+def dp_allocate_col(prob: CSProblem, n_proc: int, n_outer: int,
+                    r_total: float, n_inner: int = 1, dr: float = 0.1,
+                    mmse_fn=None, ecsq_gap: bool = True) -> DPResult:
+    """Offline-optimal rate allocation across C-MP-AMP outer rounds.
+
+    Same DP recursion as ``dp_allocate`` (paper eqs. 10-12) with the
+    column-layout round map in place of the row-wise SE step: the state is
+    the block MSE d^s, a round at rate R injects P * sigma_Q^2(R, d) onto
+    the fused residual, and the inner recursion runs ``n_inner`` mmse
+    steps.  Round 0 is excluded from the allocation — its exchanged
+    contributions are identically zero, so it is lossless for free.
+
+    Returns a ``DPResult`` whose ``rates`` has length ``n_outer``
+    (``rates[0] = 0``) and whose ``sigma2_d`` is the predicted block-MSE
+    trajectory d^0..d^{n_outer} (length n_outer+1).
+    """
+    mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
+    s_count = int(round(r_total / dr)) + 1
+    r_grid = np.arange(s_count) * dr
+    n_alloc = n_outer - 1   # rounds 1..n_outer-1 spend the budget
+
+    def f1_matrix(d_prev: np.ndarray, rates: np.ndarray) -> np.ndarray:
+        """round_map(d_prev[r], rates[k]) for all (r, k): (S, S) array."""
+        dp_col = d_prev[:, None]
+        sq2 = col_sigma_q2_for_rate(rates[None, :], dp_col, prob, n_proc,
+                                    ecsq_gap)
+        return _col_round_map(dp_col, sq2, prob, n_proc, n_inner, mmse_fn)
+
+    # round 0: lossless, no budget spent
+    d0 = _col_round_map(np.asarray([prob.prior.second_moment]), 0.0, prob,
+                        n_proc, n_inner, mmse_fn)[0]
+
+    big = np.inf
+    if n_alloc == 0:
+        return DPResult(rates=np.zeros(n_outer),
+                        sigma2_d=np.asarray([prob.prior.second_moment, d0]),
+                        sigma2_table=np.full((s_count, 1), d0),
+                        r_grid=r_grid)
+
+    sigma_tab = np.full((s_count, n_alloc), big)
+    choice = np.zeros((s_count, n_alloc), dtype=np.int64)
+
+    v0 = np.full(s_count, d0)
+    sigma_tab[:, 0] = f1_matrix(v0[:1], r_grid)[0]
+    choice[:, 0] = np.arange(s_count)
+
+    for t in range(1, n_alloc):
+        d_prev = sigma_tab[:, t - 1]
+        m = f1_matrix(d_prev, r_grid)
+        r_idx = np.arange(s_count)[:, None]
+        s_idx = np.arange(s_count)[None, :]
+        k_idx = s_idx - r_idx
+        valid = k_idx >= 0
+        vals = np.where(valid, m[r_idx, np.clip(k_idx, 0, s_count - 1)], big)
+        best_r = np.argmin(vals, axis=0)
+        sigma_tab[:, t] = vals[best_r, np.arange(s_count)]
+        choice[:, t] = np.arange(s_count) - best_r
+
+    rates = np.zeros(n_outer)
+    s = s_count - 1
+    for t in range(n_alloc - 1, -1, -1):
+        k = choice[s, t]
+        rates[t + 1] = r_grid[k]
+        s = s - k
+
+    # predicted block-MSE trajectory under the optimal schedule
+    d_traj = [prob.prior.second_moment, d0]
+    for t in range(1, n_outer):
+        sq2 = float(col_sigma_q2_for_rate(rates[t], d_traj[-1], prob,
+                                          n_proc, ecsq_gap))
+        d_traj.append(float(_col_round_map(np.asarray([d_traj[-1]]), sq2,
+                                           prob, n_proc, n_inner,
+                                           mmse_fn)[0]))
+
+    return DPResult(rates=rates, sigma2_d=np.asarray(d_traj),
                     sigma2_table=sigma_tab, r_grid=r_grid)

@@ -8,6 +8,24 @@ Quantized SE (paper eq. 8): the fusion sum of P independently-quantized
 messages adds ~N(0, P*sigma_Q^2), so the denoiser sees effective variance
 sigma_t^2 + P*sigma_Q^2:
     sigma_{t+1}^2 = sigma_e^2 + (1/kappa) * mmse(sigma_t^2 + P*sigma_Q^2).
+
+Column-wise two-stage SE (C-MP-AMP, arXiv:1701.02578; DESIGN.md §7): each
+processor owns N/P signal columns and the fusion exchanges residual
+contributions r^p = A_p x_p (length M).  With d^s the per-entry block MSE
+after outer round s and sigma_q2[s] the per-processor quantization MSE on
+the exchanged residuals, the fused residual g^s has variance
+
+    tau^{s,0} = sigma_e^2 + P*sigma_q2[s] + (1/kappa) * d^{s-1}          (fusion stage)
+
+and the inner (per-processor) recursion freezes the other blocks' errors
+while the own-block term e updates:
+
+    tau^{s,t} = tau^{s,0} + (e_t - d^{s-1}) / (kappa * P)
+    e_{t+1}   = mmse(tau^{s,t}),   e_0 = d^{s-1},   d^s = e_{t_inner}.
+
+At n_inner = 1 the round map collapses to the centralized recursion with
+the quantization noise entering *additively on the fused residual*:
+tau^{s+1} = sigma_e^2 + P*sigma_q2[s+1] + mmse(tau^s)/kappa.
 """
 from __future__ import annotations
 
@@ -18,8 +36,9 @@ import numpy as np
 
 from .denoisers import BernoulliGauss, mmse
 
-__all__ = ["CSProblem", "se_trajectory", "se_trajectory_quantized", "sdr",
-           "steady_state_iters", "sigma_e2_for_snr", "PAPER_T"]
+__all__ = ["CSProblem", "se_trajectory", "se_trajectory_quantized",
+           "se_trajectory_col", "sdr", "steady_state_iters",
+           "sigma_e2_for_snr", "PAPER_T"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +105,42 @@ def se_trajectory_quantized(prob: CSProblem, sigma_q2: np.ndarray, n_proc: int,
         eff = out[-1] + n_proc * sigma_q2[t]
         out.append(prob.sigma_e2 + float(mmse_fn(np.asarray([eff]))[0]) / prob.kappa)
     return np.asarray(out)
+
+
+def se_trajectory_col(prob: CSProblem, n_proc: int, n_outer: int,
+                      n_inner: int = 1, sigma_q2=None, mmse_fn=None):
+    """Two-stage column-wise SE (module docstring). Returns ``(tau, d)``.
+
+    ``tau[s]`` is the start-of-round variance of the fused residual g^s
+    (``s = 0..n_outer-1``, quantization noise of round s included) —
+    the quantity the engine's plug-in ``||g^s||^2/M`` estimates.  ``d[s]``
+    is the per-entry block MSE entering round s (``d[0] = E[S0^2]``,
+    ``d[s+1]`` = MSE of the estimate after round s, length n_outer+1).
+
+    ``sigma_q2[s]`` is the per-processor quantizer MSE on the exchanged
+    residual contributions at round s (entry 0 is conventionally 0: the
+    round-0 contributions are identically zero, so their exchange is exact
+    at any bin size).  ``None`` means lossless fusion throughout.
+    """
+    if mmse_fn is None:
+        mmse_fn = lambda v: mmse(v, prob.prior)
+    if sigma_q2 is None:
+        sigma_q2 = np.zeros(n_outer)
+    sigma_q2 = np.asarray(sigma_q2, dtype=np.float64)
+    assert len(sigma_q2) == n_outer, (len(sigma_q2), n_outer)
+    kappa = prob.kappa
+    d = [prob.prior.second_moment]
+    tau = []
+    for s in range(n_outer):
+        tau_s0 = prob.sigma_e2 + n_proc * sigma_q2[s] + d[-1] / kappa
+        tau.append(tau_s0)
+        e = d[-1]
+        tau_t = tau_s0
+        for _ in range(n_inner):
+            e = float(mmse_fn(np.asarray([tau_t]))[0])
+            tau_t = tau_s0 + (e - d[-1]) / (kappa * n_proc)
+        d.append(e)
+    return np.asarray(tau), np.asarray(d)
 
 
 # Steady-state horizons as stated in the paper (Sec. 4, Fig. 1). Our SE with

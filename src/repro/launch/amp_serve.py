@@ -12,6 +12,13 @@ per-request quality/rate plus end-to-end throughput.
 ``--mesh`` serves over all visible devices through the placement
 dispatcher (DESIGN.md §6): the bucket column then shows where each
 request ran (data-parallel vs processor-sharded).
+
+The shape menu mixes wide (row-partitioned) and tall (column-partitioned
+C-MP-AMP, DESIGN.md §7) requests; the layout router batches each family
+into its own buckets and the summary reports rate totals *per layout* —
+row rates are bits per signal element per processor, column rates are
+bits per *measurement* per processor (length-M residual exchanges), so
+one aggregate line would add apples to oranges.
 """
 from __future__ import annotations
 
@@ -26,15 +33,19 @@ from ..core.denoisers import BernoulliGauss
 from ..core.state_evolution import CSProblem
 from ..serving import BucketPolicy, SolveRequest, SolveService
 
-# (N, M, P) menu — kappa fixed at the paper's 0.3; P divides every M
-SHAPES = [(512, 128, 4), (1024, 256, 8), (2048, 512, 8)]
+# (N, M, P) menu — wide shapes (N/M ~ 3.2) route row, tall ones (N/M >=
+# 4) route column; P divides every M and every N
+SHAPES = [(512, 160, 4), (1024, 320, 8), (2048, 512, 8), (4096, 512, 8)]
 EPS_MENU = (0.05, 0.1)
 SNR_MENU = (15.0, 20.0, 25.0)
 
 
 def make_request(rng: np.random.Generator, i: int, policies) -> tuple:
     n, m, p = SHAPES[rng.integers(len(SHAPES))]
-    prior = BernoulliGauss(eps=float(rng.choice(EPS_MENU)))
+    # tall shapes undersample harder (kappa = M/N down to 1/8): keep their
+    # signals sparse enough to sit inside the AMP recovery region
+    eps_menu = (0.02, 0.05) if n >= 4 * m else EPS_MENU
+    prior = BernoulliGauss(eps=float(rng.choice(eps_menu)))
     snr = float(rng.choice(SNR_MENU))
     t = int(rng.choice((6, 8, 10)))
     policy = str(rng.choice(policies))
@@ -86,17 +97,32 @@ def main():
     dt = time.time() - t0
 
     # request ids are assigned in submission order, i.e. pairs[rid]
-    print(f"{'id':>4s} {'policy':>9s} {'T':>3s} {'bucket':>20s} {'B':>4s} "
+    print(f"{'id':>4s} {'policy':>9s} {'T':>3s} {'bucket':>22s} {'B':>4s} "
           f"{'mse':>10s} {'bits':>7s}")
     for r in sorted(results, key=lambda res: res.request_id):
         req, s0 = pairs[r.request_id]
         bk = f"({r.bucket.n_pad},{r.bucket.m_pad},{r.bucket.n_proc}," \
-             f"{r.bucket.t_max}){r.bucket.placement[0]}"
+             f"{r.bucket.t_max}){r.bucket.placement[0]}" \
+             f"{r.bucket.layout[0]}"
         # untracked (no finite per-iteration rate) shows "-"; a genuine
         # 0.00-bit total from finite rates still prints as a number
         bits = f"{r.total_bits:7.2f}" if r.tracked else "      -"
         print(f"{r.request_id:4d} {req.policy:>9s} {req.n_iter:3d} "
-              f"{bk:>20s} {r.batch_size:4d} {r.mse(s0):10.3e} {bits}")
+              f"{bk:>22s} {r.batch_size:4d} {r.mse(s0):10.3e} {bits}")
+
+    # per-layout rate totals: row rates count bits/signal-element/proc,
+    # column rates bits/measurement/proc — never one aggregate number
+    unit = {"row": "bits/elem", "col": "bits/meas"}
+    for layout in ("row", "col"):
+        in_layout = [r for r in results if r.bucket.layout == layout]
+        if not in_layout:
+            continue
+        tracked = [r for r in in_layout if r.tracked]
+        tot = sum(r.total_bits for r in tracked)
+        print(f"{layout}: {len(in_layout)} requests, "
+              f"{len(tracked)} rate-tracked, "
+              f"{tot:.1f} {unit[layout]} total"
+              + (f" ({tot / len(tracked):.2f} avg)" if tracked else ""))
     print(f"\n{n_req} requests in {dt:.2f}s  "
           f"({n_req / dt:.1f} req/s, {len(svc._engines)} compiled buckets)")
 

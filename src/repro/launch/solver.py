@@ -27,29 +27,42 @@ import dataclasses
 import numpy as np
 
 from ..core.denoisers import BernoulliGauss
-from ..core.engine import (AmpEngine, CompressedPsumTransport, EngineConfig,
-                           PsumFusion)
+from ..core.engine import (AmpEngine, ColumnPartition, CompressedPsumTransport,
+                           EngineConfig, PsumFusion, RowPartition)
 
 __all__ = ["DistributedMPAMP", "SolverConfig"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
-    n_iter: int = 15
+    n_iter: int = 15              # iterations (row) / outer rounds (col)
     bits: int | None = 8          # None = exact (bf16/f32) fusion
     block: int = 512
     drop_rate: float = 0.0        # simulated straggler drop fraction
     use_kernel: bool | None = None  # None = Pallas LC on TPU
+    layout: str = "row"           # "row" | "col" (C-MP-AMP, DESIGN.md §7)
+    n_inner: int = 1              # col: local AMP iterations per fusion
 
 
 class DistributedMPAMP:
-    """Row-partitioned AMP over the mesh 'data' axis."""
+    """Partitioned AMP over the mesh 'data' axis: row-wise (the source
+    paper, fusion = compressed psum of denoiser messages) or column-wise
+    (C-MP-AMP, fusion = compressed psum of length-M residual
+    contributions — the tall-N regime's wire-efficient layout)."""
 
     def __init__(self, mesh, prior: BernoulliGauss, cfg: SolverConfig):
         self.mesh = mesh
         self.prior = prior
         self.cfg = cfg
         self.n_proc = mesh.shape["data"]
+        assert cfg.layout in ("row", "col"), cfg.layout
+        if cfg.layout == "col":
+            assert cfg.drop_rate == 0.0, \
+                "straggler drop does not apply to the column layout " \
+                "(a dropped shard removes its signal block, not noise)"
+            layout = ColumnPartition(n_inner=cfg.n_inner)
+        else:
+            layout = RowPartition()
         if cfg.bits is not None:
             transport = CompressedPsumTransport(axis="data", bits=cfg.bits,
                                                 block=cfg.block)
@@ -59,10 +72,13 @@ class DistributedMPAMP:
             prior,
             EngineConfig(n_proc=self.n_proc, n_iter=cfg.n_iter,
                          use_kernel=cfg.use_kernel,
-                         collect_symbols=False, collect_xs=False),
+                         collect_symbols=False, collect_xs=False,
+                         layout=layout),
             transport)
 
-    def _drop_sched(self, key) -> np.ndarray:
+    def _drop_sched(self, key) -> np.ndarray | None:
+        if self.cfg.layout == "col":
+            return None
         p = self.n_proc
         drop = np.zeros((self.cfg.n_iter, p), np.float32)
         if self.cfg.drop_rate > 0:

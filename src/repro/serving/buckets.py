@@ -32,6 +32,18 @@ records *where* it runs — ``"local"`` (single device), ``"data"``
 ``placement_for`` chooses by a simple size threshold: requests whose
 sensing matrix reaches ``policy.shard_elems`` elements are worth paying
 collective latency per iteration; everything smaller batches better.
+
+Layout (DESIGN.md §7): the bucket also records *how* the problem is
+partitioned — ``"row"`` (the paper's scheme) or ``"col"`` (C-MP-AMP,
+each processor owns N/P signal columns and the fusion exchanges length-M
+residual contributions).  ``placement_for`` routes tall requests whose
+aspect ratio N/M reaches ``policy.col_aspect`` to the column layout: in
+that regime the row scheme would put the full length-N denoiser messages
+on the wire while the column scheme exchanges only length-M residuals.
+Column padding mirrors the row semantics with the axes swapped: the
+quantized payload axis (M) takes ``n_quantum`` (keeping the transport
+scale-block layout pad-invariant) and the per-processor column slices
+take ``mp_quantum``.
 """
 from __future__ import annotations
 
@@ -55,22 +67,32 @@ class BucketPolicy:
     max_batch: int = 128     # dispatch threshold for continuous batching
     shard_elems: int = 1 << 21  # A size (M*N) at which a single request
     #                             runs processor-sharded instead of batching
+    col_aspect: float = 4.0  # N/M at which a request routes to the column
+    #                          layout (tall-N regime, DESIGN.md §7)
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketKey:
-    """Structural shape of one compiled solve (the compile-cache key)."""
+    """Structural shape of one compiled solve (the compile-cache key).
+
+    ``n_pad``/``mp_pad`` are layout-dependent: row buckets pad the signal
+    length and the per-processor measurement rows (M_pad = P * mp_pad);
+    column buckets pad the per-processor column slices (n_pad = P * the
+    padded slice) and ``mp_pad`` holds the padded *full* measurement
+    count (rows are shared, not split, in the column layout)."""
 
     n_pad: int               # padded signal length
-    mp_pad: int              # padded rows per processor (M_pad = P * mp_pad)
+    mp_pad: int              # padded rows per processor (row) / padded M (col)
     n_proc: int              # processor count (partition structure)
-    t_max: int               # scan length
+    t_max: int               # scan length (iterations / outer rounds)
     transport: str           # "ecsq" | "block8" | "block4"
     placement: str = "local"  # "local" | "data" | "proc" (DESIGN.md §6)
+    layout: str = "row"       # "row" | "col" (DESIGN.md §7)
 
     @property
     def m_pad(self) -> int:
-        return self.n_proc * self.mp_pad
+        return self.mp_pad if self.layout == "col" \
+            else self.n_proc * self.mp_pad
 
 
 def round_up(v: int, q: int) -> int:
@@ -79,16 +101,31 @@ def round_up(v: int, q: int) -> int:
 
 
 def bucket_for(n: int, m: int, n_proc: int, n_iter: int, transport: str,
-               policy: BucketPolicy, placement: str = "local") -> BucketKey:
+               policy: BucketPolicy, placement: str = "local",
+               layout: str = "row") -> BucketKey:
     """Map a request's structural parameters to its bucket."""
-    assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
     block = TRANSPORT_BLOCK.get(transport)
     if block is not None:
-        # otherwise column padding can add scale blocks the unpadded solve
-        # does not have, silently skewing quant_noise_var (module docstring)
+        # otherwise padding the quantized axis can add scale blocks the
+        # unpadded solve does not have, silently skewing quant_noise_var
+        # (module docstring); the quantized axis is N for row layouts
+        # (messages) and M for column layouts (residual contributions),
+        # and both take n_quantum
         assert block % policy.n_quantum == 0, \
             f"n_quantum={policy.n_quantum} must divide the {transport} " \
             f"scale block ({block}) to keep noise accounting pad-invariant"
+    if layout == "col":
+        assert n % n_proc == 0, f"N={n} not divisible by P={n_proc} (col)"
+        return BucketKey(
+            n_pad=n_proc * round_up(n // n_proc, policy.mp_quantum),
+            mp_pad=round_up(m, policy.n_quantum),
+            n_proc=n_proc,
+            t_max=round_up(n_iter, policy.t_quantum),
+            transport=transport,
+            placement=placement,
+            layout=layout,
+        )
+    assert m % n_proc == 0, f"M={m} not divisible by P={n_proc}"
     return BucketKey(
         n_pad=round_up(n, policy.n_quantum),
         mp_pad=round_up(m // n_proc, policy.mp_quantum),
@@ -96,24 +133,33 @@ def bucket_for(n: int, m: int, n_proc: int, n_iter: int, transport: str,
         t_max=round_up(n_iter, policy.t_quantum),
         transport=transport,
         placement=placement,
+        layout=layout,
     )
 
 
 def placement_for(n: int, m: int, n_proc: int, n_devices: int,
-                  policy: BucketPolicy) -> str:
-    """Size-threshold placement: large single solves shard the processors
-    across the mesh; everything else batches data-parallel.
+                  policy: BucketPolicy) -> tuple[str, str]:
+    """Placement *and* layout for a request: ``(placement, layout)``.
 
-    Processor sharding additionally needs P to split evenly over the
-    devices (each device emulates P/D processors, keeping the paper's
-    partition — and the noise accounting — independent of the mesh size);
-    requests that don't satisfy it fall back to data-parallel.
+    Size-threshold placement (DESIGN.md §6): large single solves shard
+    the processors across the mesh; everything else batches
+    data-parallel.  Processor sharding additionally needs P to split
+    evenly over the devices (each device emulates P/D processors, keeping
+    the partition — and the noise accounting — independent of the mesh
+    size); requests that don't satisfy it fall back to data-parallel.
+
+    Aspect-ratio layout (DESIGN.md §7): tall requests (N/M >=
+    ``policy.col_aspect``) whose N splits evenly over the processors run
+    column-partitioned — the fusion then exchanges length-M residual
+    contributions instead of length-N messages.
     """
+    layout = "col" if (n >= policy.col_aspect * m
+                       and n % n_proc == 0) else "row"
     if n_devices <= 1:
-        return "local"
+        return "local", layout
     if n * m >= policy.shard_elems and n_proc % n_devices == 0:
-        return "proc"
-    return "data"
+        return "proc", layout
+    return "data", layout
 
 
 def pad_batch_size(b: int, policy: BucketPolicy) -> int:

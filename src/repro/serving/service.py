@@ -44,11 +44,14 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from ..core.denoisers import BernoulliGauss
 from ..core.engine import (AmpEngine, BlockQuantTransport, BTRateControl,
-                           BTTables, CompressedPsumTransport, EcsqTransport,
+                           BTTables, ColBTTables, ColDPSchedule,
+                           ColumnBTRateControl, ColumnPartition,
+                           CompressedPsumTransport, EcsqTransport,
                            EngineConfig, HetParams, PsumFusion,
-                           pad_bt_tables, stack_bt_tables)
-from ..core.quantize import ecsq_entropy, message_mixture
-from ..core.rate_alloc import dp_allocate, stack_schedules
+                           RowPartition, pad_bt_tables, split_problem_cols,
+                           stack_bt_tables)
+from ..core.quantize import ecsq_entropy, message_mixture, residual_mixture
+from ..core.rate_alloc import dp_allocate, dp_allocate_col, stack_schedules
 from ..core.rate_distortion import RDModel
 from ..core.state_evolution import CSProblem
 from .batcher import Batcher
@@ -72,6 +75,13 @@ class SolveRequest:
       * ``"bt"``       — online back-tracking (paper Sec. 3.3); in-graph
                          tables are built once per operating point
                          (prior, SNR, kappa, P, T) and cached.
+
+    ``layout`` selects the partition scheme (DESIGN.md §7): ``None``
+    routes by aspect ratio (``placement_for``), ``"row"``/``"col"``
+    force one.  Column requests need N divisible by P (each processor
+    owns an equal signal slice); every policy above works in either
+    layout — the service builds the matching controller family
+    (``dp_allocate_col`` / ``ColumnBTRateControl`` for column buckets).
     """
 
     y: np.ndarray
@@ -86,6 +96,7 @@ class SolveRequest:
     bt_c_ratio: float = 1.005
     bt_r_max: float = 6.0
     transport: str = "ecsq"               # "ecsq" | "block8" | "block4"
+    layout: str | None = None             # None = auto | "row" | "col"
     request_id: int = -1                  # assigned at submit
 
     @property
@@ -105,20 +116,27 @@ class SolveRequest:
 class SolveResult:
     """Per-request output, unpadded back to the request's own (N, T).
 
-    ``rates`` is bits/element/processor per iteration: the BT controller's
-    in-graph decision for ``policy="bt"``, the analytic ECSQ entropy H_Q of
-    the model message mixture for finite fixed/DP bins, the fixed wire
-    width (bits + amortized bf16 scale) for block transports, and +inf for
+    ``rates`` is the per-iteration coding rate *per processor, in the
+    layout's own wire unit* — bits per signal element for row buckets
+    (the fusion exchanges length-N messages), bits per *measurement* for
+    column buckets (length-M residual contributions; ``bucket.layout``
+    disambiguates, and mixed-stream consumers must not sum across
+    layouts).  The value is the BT controller's in-graph decision for
+    ``policy="bt"``, the analytic ECSQ entropy H_Q of the model payload
+    distribution (message mixture row-wise, residual Gaussian
+    column-wise) for finite fixed/DP bins, the fixed wire width (bits +
+    amortized bf16 scale) for block transports, and +inf for
     lossless-fusion iterations (untracked, excluded from ``total_bits`` —
     same convention as ``MPAMPResult``).
     """
 
     request_id: int
     x: np.ndarray             # (N,) final estimate
-    sigma2_hat: np.ndarray    # (T,) plug-in variances, post-LC
+    sigma2_hat: np.ndarray    # (T,) plug-in variances: post-LC (row) /
+    #                           post-fusion ||g||^2/M incl. quant (col)
     deltas: np.ndarray        # (T,) realized bin sizes (inf = lossless)
     extra_var: np.ndarray     # (T,) transport-injected variance P*sigma_Q^2
-    rates: np.ndarray         # (T,) bits/element/processor
+    rates: np.ndarray         # (T,) bits/elem (row) | bits/meas (col), /proc
     total_bits: float         # sum of finite per-iteration rates
     bucket: BucketKey         # where this request was executed
     batch_size: int           # real requests in the executed batch
@@ -284,8 +302,22 @@ class SolveService:
             assert req.policy == "lossless", \
                 f"policy={req.policy!r} has no effect under " \
                 f"transport={req.transport!r}; use policy='lossless'"
-        assert req.m % req.n_proc == 0, \
-            f"M={req.m} not divisible by P={req.n_proc}"
+        assert req.layout in (None, "row", "col"), req.layout
+        if req.layout is None:
+            # pin the auto-routed layout on our copy so every later stage
+            # (bucket key, operands, rate accounting) agrees — via replace,
+            # not mutation: the caller's template must stay layout=None
+            # (another service with a different col_aspect may route it
+            # differently)
+            req = dataclasses.replace(
+                req, layout=placement_for(req.n, req.m, req.n_proc,
+                                          self.n_devices, self.policy)[1])
+        if req.layout == "col":
+            assert req.n % req.n_proc == 0, \
+                f"N={req.n} not divisible by P={req.n_proc} (column layout)"
+        else:
+            assert req.m % req.n_proc == 0, \
+                f"M={req.m} not divisible by P={req.n_proc}"
         if req.policy == "fixed":
             assert req.deltas is not None, "fixed policy needs deltas"
             assert len(req.deltas) == req.n_iter
@@ -294,10 +326,10 @@ class SolveService:
         return req
 
     def _key_for(self, req: SolveRequest) -> BucketKey:
-        placement = placement_for(req.n, req.m, req.n_proc, self.n_devices,
-                                  self.policy)
+        placement, _ = placement_for(req.n, req.m, req.n_proc,
+                                     self.n_devices, self.policy)
         return bucket_for(req.n, req.m, req.n_proc, req.n_iter,
-                          req.transport, self.policy, placement)
+                          req.transport, self.policy, placement, req.layout)
 
     def _engine(self, key: BucketKey) -> AmpEngine:
         # data-parallel buckets reuse the local engine object: the sharding
@@ -310,7 +342,9 @@ class SolveService:
                 n_proc=key.n_proc, n_iter=key.t_max,
                 use_kernel=self.use_kernel,
                 kernel_interpret=self.kernel_interpret,
-                collect_symbols=False, collect_xs=self.collect_xs)
+                collect_symbols=False, collect_xs=self.collect_xs,
+                layout=(ColumnPartition(n_inner=1) if key.layout == "col"
+                        else RowPartition()))
             if ekey.placement == "proc":
                 transport = _SHARDED_TRANSPORTS[key.transport](self.mesh_axis)
             else:
@@ -320,48 +354,76 @@ class SolveService:
         return eng
 
     def _dp_deltas(self, req: SolveRequest) -> np.ndarray:
-        """Offline DP allocation realized as ECSQ bin sizes (DPSchedule)."""
+        """Offline DP allocation realized as ECSQ bin sizes (DPSchedule /
+        ColDPSchedule for column requests)."""
         from ..core.engine import DPSchedule
         prob = req.problem()
+        r_total = (req.dp_total_bits if req.dp_total_bits is not None
+                   else 2.0 * req.n_iter)
+        if req.layout == "col":
+            dp = dp_allocate_col(prob, req.n_proc, req.n_iter, r_total)
+            return ColDPSchedule(dp, prob, req.n_proc).deltas
         rd = self._rd_cache.get(req.prior)
         if rd is None:
             rd = self._rd_cache[req.prior] = RDModel(req.prior)
-        r_total = (req.dp_total_bits if req.dp_total_bits is not None
-                   else 2.0 * req.n_iter)
         dp = dp_allocate(prob, req.n_proc, req.n_iter, r_total, rd=rd)
         return DPSchedule(dp, rd, req.n_proc).deltas
 
-    def _bt_tables(self, req: SolveRequest, t_max: int) -> BTTables:
+    def _bt_tables(self, req: SolveRequest, t_max: int):
         """Padded in-graph tables for one operating point, memoized per
         (operating point, t_max) so repeated/pad-slot requests share one
-        object — which keeps ``stack_bt_tables``'s zero-copy fast path."""
+        object — which keeps ``stack_bt_tables``'s zero-copy fast path.
+        Column requests get ``ColumnBTRateControl`` tables."""
         key = (req.prior, round(req.snr_db, 6), req.n, req.m, req.n_proc,
-               req.n_iter, req.bt_c_ratio, req.bt_r_max)
+               req.n_iter, req.bt_c_ratio, req.bt_r_max, req.layout)
         padded = self._bt_cache.get((key, t_max))
         if padded is None:
             ctrl = self._bt_cache.get(key)
             if ctrl is None:
-                ctrl = BTRateControl(req.problem(), req.n_proc, req.n_iter,
-                                     req.bt_c_ratio, req.bt_r_max, "ecsq")
+                if req.layout == "col":
+                    ctrl = ColumnBTRateControl(
+                        req.problem(), req.n_proc, req.n_iter,
+                        req.bt_c_ratio, req.bt_r_max)
+                else:
+                    ctrl = BTRateControl(req.problem(), req.n_proc,
+                                         req.n_iter, req.bt_c_ratio,
+                                         req.bt_r_max, "ecsq")
                 self._bt_cache[key] = ctrl
             padded = pad_bt_tables(ctrl.tables, t_max)
             self._bt_cache[(key, t_max)] = padded
         return padded
 
     def _het_operands(self, key: BucketKey, batch: list):
-        """Pad one request group into the engine's het operands."""
+        """Pad one request group into the engine's het operands.
+
+        Row buckets: a (B, P, mp_pad, n_pad) row shards + y (B, P, mp_pad).
+        Column buckets: a (B, P, m_pad, np_pad) column shards (each
+        processor's real columns padded within its own slice, mirroring
+        the row layout's per-shard row padding) + the shared y (B, m_pad).
+        """
         p, mp_pad, n_pad, t_max = (key.n_proc, key.mp_pad, key.n_pad,
                                    key.t_max)
         b = len(batch)
-        a_b = np.zeros((b, p, mp_pad, n_pad), np.float32)
-        y_b = np.zeros((b, p, mp_pad), np.float32)
+        is_col = key.layout == "col"
+        if is_col:
+            np_pad = n_pad // p
+            a_b = np.zeros((b, p, mp_pad, np_pad), np.float32)
+            y_b = np.zeros((b, mp_pad), np.float32)
+        else:
+            a_b = np.zeros((b, p, mp_pad, n_pad), np.float32)
+            y_b = np.zeros((b, p, mp_pad), np.float32)
         scheds, tacts, mreals, nreals = [], [], [], []
         eps, mus, sss, use_bt, tables = [], [], [], [], []
         for i, r in enumerate(batch):
-            mp = r.m // p
-            a_b[i, :, :mp, :r.n] = np.asarray(r.a, np.float32).reshape(
-                p, mp, r.n)
-            y_b[i, :, :mp] = np.asarray(r.y, np.float32).reshape(p, mp)
+            if is_col:
+                a_b[i, :, :r.m, :r.n // p] = split_problem_cols(
+                    np.asarray(r.a, np.float32), p)
+                y_b[i, :r.m] = np.asarray(r.y, np.float32)
+            else:
+                mp = r.m // p
+                a_b[i, :, :mp, :r.n] = np.asarray(r.a, np.float32).reshape(
+                    p, mp, r.n)
+                y_b[i, :, :mp] = np.asarray(r.y, np.float32).reshape(p, mp)
             if r.policy in ("fixed", "dp"):
                 scheds.append(np.asarray(r.deltas, np.float32))
             else:  # lossless / bt: schedule operand unused or all-lossless
@@ -377,7 +439,8 @@ class SolveService:
                 tables.append(self._bt_tables(r, t_max))
             else:
                 use_bt.append(False)
-                tables.append(BTTables.dummy(t_max))
+                tables.append(ColBTTables.dummy(t_max) if is_col
+                              else BTTables.dummy(t_max))
 
         params = HetParams(
             sched=stack_schedules(scheds, t_max),
@@ -444,10 +507,18 @@ class SolveService:
         processor-sharded trace)."""
         t = r.n_iter
         sel = (lambda a: a[:t]) if i is None else (lambda a: a[i, :t])
-        x = trace.x[:r.n] if i is None else trace.x[i, :r.n]
+        x_pad = trace.x if i is None else trace.x[i]
+        if key.layout == "col":
+            # per-slice column padding: real columns are the leading
+            # n/P entries of each processor's slice
+            p = key.n_proc
+            x = x_pad.reshape(p, key.n_pad // p)[:, :r.n // p].reshape(-1)
+        else:
+            x = x_pad[:r.n]
         s2 = sel(trace.sigma2_hat)
         deltas = sel(trace.deltas)
-        rates = self._rates(r, s2, deltas, sel(trace.rates))
+        rates = self._rates(r, s2, deltas, sel(trace.rates),
+                            sel(trace.extra_var))
         finite = np.isfinite(rates)
         return SolveResult(
             request_id=r.request_id,
@@ -458,21 +529,47 @@ class SolveService:
             bucket=key, batch_size=batch_size,
         )
 
-    def _rates(self, req: SolveRequest, s2, deltas, bt_rates) -> np.ndarray:
-        """Realized-rate accounting for one request (see SolveResult)."""
+    def _rates(self, req: SolveRequest, s2, deltas, bt_rates,
+               extra_var) -> np.ndarray:
+        """Realized-rate accounting for one request (see SolveResult).
+
+        Column requests model the quantized payload as the residual
+        contribution's Gaussian (``residual_mixture``): the payload of
+        round t is built from the estimate after round t-1, whose block
+        MSE reads off *this* round's plug-in,
+        d^{t-1} = kappa * (v̂_t - sigma_e^2 - P sigma_Q^2_t).  Round 0
+        exchanges all-zero contributions — 0 bits at any bin size — and
+        is counted as 0.0 whenever the request is rate-tracked at all
+        (a fully lossless request stays untracked, all-inf).
+        """
         if req.policy == "bt":
             return np.asarray(bt_rates, np.float64)
         if req.transport != "ecsq":
             # block transports spend a fixed wire rate every iteration:
             # `bits` per element plus a bf16 scale per block
             tp = _TRANSPORTS[req.transport]()
-            return np.full(req.n_iter, tp.bits + 16.0 / tp.block)
+            rates = np.full(req.n_iter, tp.bits + 16.0 / tp.block)
+            if req.layout == "col":
+                rates[0] = 0.0   # zero contributions: nothing on the wire
+            return rates
         rates = np.full(req.n_iter, np.inf)
         if not self.rate_accounting:
             return rates
-        for t in range(req.n_iter):
+        prob = req.problem() if req.layout == "col" else None
+        sm = req.prior.second_moment
+        for t in range(1 if req.layout == "col" else 0, req.n_iter):
             d = float(deltas[t])
-            if math.isfinite(d):
+            if not math.isfinite(d):
+                continue
+            if req.layout == "col":
+                d_blk = prob.kappa * (float(s2[t]) - prob.sigma_e2
+                                      - float(extra_var[t]))
+                mix = residual_mixture(req.prior,
+                                       min(max(d_blk, 1e-12), sm),
+                                       prob.kappa, req.n_proc)
+            else:
                 mix = message_mixture(req.prior, float(s2[t]), req.n_proc)
-                rates[t] = float(ecsq_entropy(d, mix)[0])
+            rates[t] = float(ecsq_entropy(d, mix)[0])
+        if req.layout == "col" and np.isfinite(rates[1:]).any():
+            rates[0] = 0.0
         return rates

@@ -44,19 +44,45 @@ def test_pad_batch_size():
 
 def test_placement_selection():
     """Size-threshold placement (DESIGN.md §6): local off-mesh, data for
-    small requests, proc for large ones whose P splits over the devices."""
+    small requests, proc for large ones whose P splits over the devices;
+    aspect-ratio layout routing (DESIGN.md §7) rides along."""
     pol = BucketPolicy(shard_elems=1 << 20)
-    assert placement_for(512, 128, 4, 1, pol) == "local"
-    assert placement_for(512, 128, 4, 8, pol) == "data"
-    assert placement_for(4096, 1024, 8, 8, pol) == "proc"
+    assert placement_for(512, 160, 4, 1, pol) == ("local", "row")
+    assert placement_for(512, 160, 4, 8, pol) == ("data", "row")
+    assert placement_for(4096, 1280, 8, 8, pol) == ("proc", "row")
     # P not divisible by the device count: falls back to data-parallel
-    assert placement_for(4096, 1024, 6, 8, pol) == "data"
+    assert placement_for(4096, 1280, 6, 8, pol) == ("data", "row")
     # placement is part of the compile-cache key
     k_d = bucket_for(512, 128, 4, 8, "ecsq", pol, "data")
     k_l = bucket_for(512, 128, 4, 8, "ecsq", pol, "local")
     assert k_d != k_l and k_d.placement == "data"
     # default stays "local" so single-device keys are unchanged
     assert bucket_for(512, 128, 4, 8, "ecsq", pol).placement == "local"
+
+
+def test_placement_routes_tall_n_to_column():
+    """Acceptance (ISSUE 4): a tall-N request (N/M >= col_aspect, N*M >=
+    shard_elems) routes to the column layout — processor-sharded on a
+    mesh, column-partitioned locally off-mesh."""
+    pol = BucketPolicy(shard_elems=1 << 20)
+    assert pol.col_aspect == 4.0
+    # N/M = 8 >= 4 and N*M = 2^21 >= shard_elems: proc placement, col layout
+    assert placement_for(4096, 512, 8, 8, pol) == ("proc", "col")
+    assert placement_for(4096, 512, 8, 1, pol) == ("local", "col")
+    # small tall requests batch data-parallel but stay column-partitioned
+    assert placement_for(1024, 128, 4, 8, pol) == ("data", "col")
+    # N not divisible by P: the column layout cannot slice evenly -> row
+    assert placement_for(4098, 512, 8, 1, pol)[1] == "row"
+    # just under the aspect threshold -> row
+    assert placement_for(2044, 512, 4, 1, pol)[1] == "row"
+    # layout is part of the compile-cache key; column m_pad is the padded
+    # full M (rows are shared, not split) and n_pad pads per-slice
+    k_c = bucket_for(4096, 500, 8, 8, "ecsq", pol, "local", "col")
+    assert k_c.layout == "col"
+    assert k_c.m_pad == 512 and k_c.mp_pad == 512   # round_up(500, 256)
+    assert k_c.n_pad == 4096                        # slices already padded
+    k_r = bucket_for(4096, 512, 8, 8, "ecsq", pol, "local", "row")
+    assert k_c != k_r and k_r.m_pad == 512
 
 
 def test_batcher_dispatch_and_drain():
@@ -96,7 +122,7 @@ def mixed_ctx():
         (0.05, 20.0, 768, 240, 5, 8, "lossless"),
         (0.10, 15.0, 500, 150, 5, 5, "bt"),
         (0.10, 20.0, 600, 180, 5, 6, "dp"),
-        (0.05, 20.0, 512, 128, 4, 8, "fixed"),
+        (0.05, 20.0, 512, 160, 4, 8, "fixed"),   # aspect 3.2: stays row
     ]
     reqs, refs = [], []
     for i, (eps, snr, n, m, p, t, policy) in enumerate(specs):
@@ -165,7 +191,11 @@ def test_bt_rate_accounting_matches_controller(mixed_ctx):
 
 def test_masked_early_exit_is_exact():
     """A short-T request inside a long-T bucket returns exactly its own
-    T-iteration solve (the masked scan freezes, not truncates)."""
+    T-iteration solve (the masked scan freezes, not truncates).
+
+    The 512/128 shape sits exactly at the aspect threshold, so this rides
+    the *column* bucket — and pins it against a row-layout reference
+    (both are exactly centralized AMP under lossless fusion)."""
     prior = BernoulliGauss(eps=0.1)
     prob = CSProblem(n=512, m=128, prior=prior)
     s0, a, y = sample_problem(jax.random.PRNGKey(9), prob.n, prob.m, prior,
