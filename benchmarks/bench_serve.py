@@ -216,8 +216,11 @@ def main():
     assert jax.device_count() >= args.devices, \
         (jax.device_count(), args.devices)
 
+    from roofline import git_commit  # benchmarks/ is the script dir
+
     report = {"devices": args.devices, "smoke": bool(args.smoke),
-              "backend": jax.default_backend(), "batched": [],
+              "backend": jax.default_backend(), "commit": git_commit(),
+              "jax_device_count": jax.device_count(), "batched": [],
               "data_parallel": {}, "proc_sharded": {}}
 
     # the serving regime: many small per-user recoveries, where a single

@@ -14,6 +14,7 @@ from __future__ import annotations
 import glob
 import json
 import os
+import subprocess
 
 from repro.configs import get_config, shape_for
 
@@ -21,6 +22,60 @@ PEAK_FLOPS = 197e12   # bf16 / chip
 HBM_BW = 819e9        # B/s / chip
 ICI_BW = 50e9         # B/s / link (conservative single-link)
 CHIPS = 256
+
+# Host-memory bandwidth estimate for CPU runs of the kernel benchmark
+# (benchmarks/bench_kernels.py): a single DDR4/DDR5 channel pair on a CI
+# box. Only used to contextualize achieved GB/s — override with --bw.
+HOST_BW = 25e9
+
+BW_BY_BACKEND = {"tpu": HBM_BW, "cpu": HOST_BW, "gpu": 2e12}
+
+
+def git_commit() -> str:
+    """Short HEAD hash for benchmark-JSON provenance, ``-dirty``-suffixed
+    when the working tree has uncommitted changes — local pre-commit runs
+    must stay distinguishable from CI post-commit runs in the archived
+    trajectory. The tracked benchmark JSONs themselves are ignored by the
+    dirtiness check (CI regenerates them in-place before uploading)."""
+    cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        head = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=cwd,
+        ).stdout.strip()
+        if not head:
+            return "unknown"
+        status = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, cwd=cwd,
+        ).stdout.splitlines()
+        dirty = [l for l in status
+                 if not l.split()[-1].startswith("BENCH_")]
+        return head + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
+
+
+def lc_bytes(m: int, n: int, batch: int = 1, a_bytes: int = 4,
+             vec_bytes: int = 4) -> float:
+    """HBM bytes moved by one fused AMP LC step (either layout).
+
+    The sensing operand dominates: both the row LC (z-pass + f-pass) and
+    the column per-round step (residual pass + message pass) read A
+    exactly twice — the information-theoretic minimum for the two
+    contraction orders (DESIGN.md §8). Vector traffic (y, z in; z', f
+    out; x in) is the small additive term. ``a_bytes=2`` models bf16
+    A-streaming (``EngineConfig.a_dtype``).
+    """
+    a_traffic = 2.0 * m * n * a_bytes
+    vec_traffic = (4.0 * m + 3.0 * n) * vec_bytes
+    return batch * (a_traffic + vec_traffic)
+
+
+def lc_roofline_seconds(m: int, n: int, batch: int = 1, a_bytes: int = 4,
+                        bw: float = HBM_BW) -> float:
+    """Memory-bound time floor for one LC step at bandwidth ``bw``."""
+    return lc_bytes(m, n, batch, a_bytes) / bw
 
 
 def model_flops_per_device(arch: str, shape_name: str) -> float:

@@ -33,6 +33,7 @@ __all__ = [
     "BernoulliGauss",
     "eta",
     "eta_bg",
+    "eta_bg_and_deriv",
     "eta_and_deriv",
     "mmse",
     "make_mmse_interp",
@@ -80,6 +81,33 @@ def eta_bg(f, sigma2, eps, mu_s, sigma_s2, xp=jnp):
     pi = _sigmoid(xp, logit_eps + log_g1 - log_g0)
     cond_mean = (mu_s * sigma2 + f * sigma_s2) / (sigma_s2 + sigma2)
     return pi * cond_mean
+
+
+def eta_bg_and_deriv(f, sigma2, eps, mu_s, sigma_s2, xp=jnp):
+    """Closed-form ``(eta_bg(f), eta_bg'(f))`` — no autodiff.
+
+    The derivative of the conditional mean ``eta = pi(f) * cm(f)``:
+
+        cm  = (mu_s sigma2 + f sigma_s2) / (sigma_s2 + sigma2)
+        L   = logit(eps) + log N(f; mu_s, sigma_s2+sigma2) - log N(f; 0, sigma2)
+        eta'= pi (1-pi) L'(f) cm + pi sigma_s2/(sigma_s2+sigma2),
+        L'  = f/sigma2 - (f - mu_s)/(sigma_s2 + sigma2).
+
+    Exists because the Pallas column kernels evaluate the denoiser
+    *inside* the kernel (``kernels/amp_fused/col.py``), where ``jax.grad``
+    is unavailable; pinned elementwise against ``jax.grad`` of ``eta_bg``
+    in tests/test_kernels_col.py. Parameters may be traced scalars.
+    """
+    v1 = sigma_s2 + sigma2
+    log_g1 = _log_norm_pdf(xp, f, mu_s, v1)
+    log_g0 = _log_norm_pdf(xp, f, 0.0, sigma2)
+    lo = xp.log(eps) - xp.log1p(-eps) + log_g1 - log_g0
+    pi = _sigmoid(xp, lo)
+    cm = (mu_s * sigma2 + f * sigma_s2) / v1
+    d_lo = f / sigma2 - (f - mu_s) / v1
+    val = pi * cm
+    deriv = pi * (1.0 - pi) * d_lo * cm + pi * (sigma_s2 / v1)
+    return val, deriv
 
 
 def eta(f, sigma2, prior: BernoulliGauss, xp=jnp):

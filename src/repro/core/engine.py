@@ -16,7 +16,11 @@ fixed-count in-graph bisection against precomputed MMSE/rate tables — so
 there is no per-iteration host round-trip (the ``float(s2)`` syncs of the
 pre-engine ``mp_amp.py`` host loop). A ``vmap``-batched ``solve_many``
 solves many CS instances at once (the serving scenario), and the local
-computation routes through the ``kernels/amp_fused`` Pallas kernel on TPU.
+computation routes through the ``kernels/amp_fused`` suite (DESIGN.md §8)
+on TPU: batched Pallas grids covering the whole (batch, P) stack in one
+launch with the sigma2_hat reduction fused, fused column-layout kernels,
+tile padding hoisted to solve entry, and optional bf16 A-streaming
+(``EngineConfig.a_dtype``) with f32 accumulation.
 
 The mesh is an engine axis, not a separate code path (DESIGN.md §6):
 ``solve_sharded`` runs the *same* scan body inside ``shard_map`` over a
@@ -59,7 +63,9 @@ from jax import lax
 from jax.sharding import PartitionSpec
 
 from ..compat import axis_size, shard_map
-from ..kernels.amp_fused.ops import amp_local_step
+from ..kernels.amp_fused.ops import (amp_local_grid, col_inner_step,
+                                     col_residual, pad_col_shards,
+                                     pad_row_shards)
 from .compression import (QuantConfig, compressed_psum, dequantize_blocks,
                           quant_noise_var, quantize_blocks)
 from .denoisers import BernoulliGauss, eta, eta_bg
@@ -803,10 +809,27 @@ class EngineConfig:
     collect_symbols: bool = True      # trace quantizer indices (T, P, N|M)
     collect_xs: bool = True           # trace per-iteration estimates (T, N)
     layout: RowPartition | ColumnPartition = RowPartition()
+    a_dtype: str = "float32"          # A storage/streaming dtype (DESIGN §8):
+                                      # "bfloat16" halves HBM traffic on the
+                                      # dominant operand, accumulation stays
+                                      # f32 (MXU preferred_element_type)
 
     @property
     def is_col(self) -> bool:
         return isinstance(self.layout, ColumnPartition)
+
+    @property
+    def a_jdtype(self):
+        assert self.a_dtype in ("float32", "bfloat16"), self.a_dtype
+        return jnp.bfloat16 if self.a_dtype == "bfloat16" else jnp.float32
+
+    @property
+    def kernel_on(self) -> bool:
+        """Whether the LC step routes through the Pallas kernel suite
+        (compiled on TPU, interpret mode anywhere when asked)."""
+        if self.use_kernel is None:
+            return jax.default_backend() == "tpu"
+        return self.use_kernel
 
 
 class HetParams(NamedTuple):
@@ -866,22 +889,28 @@ class AmpEngine:
     # -- shared iteration body ----------------------------------------------
 
     def _local(self, x, z_p, onsager, a_p, y_p, m_eff=None, axis=None):
-        """LC: per-processor residual + message via the fused kernel path.
+        """LC: the whole processor stack through one batched-grid fused op.
 
-        ``m_eff`` overrides the sigma2_hat normalizer (the heterogeneous
-        path passes the *real* measurement count; padded rows are zero and
-        contribute nothing to the sum). ``axis`` (sharded mode) makes the
-        plug-in estimate a psum over the mesh axis — the same global
-        sigma_hat_{t,D}^2 the emulated path computes.
+        ``a_p`` may be tile-padded (kernel path; ``pad_row_shards`` at
+        solve entry) and/or stored in ``cfg.a_dtype``: the carry ``x``
+        stays at the true N, so the body pads only the (N,) message vector
+        (never the (M, N) operand) and slices ``f_p`` back — padded rows/
+        columns are exactly zero end-to-end, so the fused sum-of-squares
+        is the true sigma2_hat numerator. ``m_eff`` overrides the
+        normalizer (the heterogeneous path passes the *real* measurement
+        count); ``axis`` (sharded mode) makes the plug-in a psum over the
+        mesh axis — one kernel launch per device covers its P/D emulated
+        processors.
         """
         cfg = self.cfg
         m = a_p.shape[0] * a_p.shape[1] if m_eff is None else m_eff
-        z_new, f_p = jax.vmap(
-            lambda ap, yp, zp: amp_local_step(
-                ap, x, yp, zp, onsager, cfg.n_proc,
-                use_pallas=cfg.use_kernel,
-                interpret=cfg.kernel_interpret))(a_p, y_p, z_p)
-        ss = jnp.sum(z_new * z_new)
+        n, n_pad = x.shape[0], a_p.shape[2]
+        x_in = jnp.pad(x, (0, n_pad - n)) if n_pad != n else x
+        z_new, f_p, ss = amp_local_grid(
+            a_p, x_in, y_p, z_p, onsager, cfg.n_proc,
+            use_pallas=cfg.kernel_on, interpret=cfg.kernel_interpret)
+        if n_pad != n:
+            f_p = f_p[:, :n]
         if axis is not None:
             ss = lax.psum(ss, axis)
         sigma2_hat = ss / m
@@ -965,6 +994,39 @@ class AmpEngine:
         return (x, jnp.zeros((p_loc,) + y.shape, jnp.float32),
                 jnp.zeros(p_loc, jnp.float32), v0)
 
+    def _col_prior_params(self, hp: HetParams | None = None):
+        """(eps, mu_s, sigma_s^2) as traced/array scalars for the fused
+        column kernels — from ``HetParams`` when given, else the engine's
+        static prior."""
+        if hp is not None:
+            return hp.eps, hp.mu_s, hp.sigma_s**2
+        pr = self.prior
+        # the fused kernel evaluates the BG conditional mean in closed
+        # form in-kernel — it cannot honor an arbitrary denoiser, so make
+        # the coupling explicit rather than silently diverging from the
+        # eta_fn the jnp path would have used
+        assert isinstance(pr, BernoulliGauss), \
+            f"column kernel path requires a BernoulliGauss prior, got " \
+            f"{type(pr).__name__}; solve with use_kernel=False"
+        return (jnp.float32(pr.eps), jnp.float32(pr.mu_s),
+                jnp.float32(pr.sigma_s**2))
+
+    def _col_inner_kernels(self, x, g, z_p, a_cp, m_eff, pp, n_mask):
+        """Kernel-path counterpart of ``_col_inner``: ``layout.n_inner``
+        fused ``col_inner_step`` launches (message + in-kernel denoise +
+        residual update; DESIGN.md §8). ``pp`` is ``_col_prior_params``;
+        ``n_mask`` a (Np,) real-column mask (all-ones when unpadded)."""
+        cfg = self.cfg
+        n_inner = cfg.layout.n_inner
+        x0 = x
+        c_p = None
+        for t in range(n_inner):
+            x, c_p, z_p = col_inner_step(
+                a_cp, x, x0, z_p, g, n_mask, m_eff, *pp,
+                update_z=t + 1 < n_inner, use_pallas=cfg.kernel_on,
+                interpret=cfg.kernel_interpret)
+        return x, c_p, z_p
+
     def _col_inner(self, x, g, z_p, a_cp, m_eff, eta_fn, n_mask=None):
         """``layout.n_inner`` local AMP iterations at each processor on the
         fused residual ``g`` (C-MP-AMP inner stage).
@@ -1003,11 +1065,25 @@ class AmpEngine:
         return x, c_p, z_p
 
     def _col_round(self, x, mem, coef, delta, a_cp, y, m_eff, eta_fn,
-                   n_mask=None, drop=None, axis=None):
+                   n_mask=None, drop=None, axis=None, pp=None):
         """Shared round computation: fuse, apply the boundary Onsager
         memory, run the inner stage.  Returns the new carry pieces plus
-        the round's trace quantities ``(v_hat, extra, syms)``."""
-        r_p = jnp.einsum("pmn,pn->pm", a_cp, x)
+        the round's trace quantities ``(v_hat, extra, syms)``.
+
+        On the kernel path (``cfg.kernel_on``) the residual contributions
+        and the inner stage run as fused Pallas launches (``col_residual``
+        / ``col_inner_step``); ``pp`` carries the prior scalars the
+        in-kernel denoiser needs and ``n_mask`` must then be a (Np,)
+        real-column mask. M may be tile-padded: padded rows of A/y are
+        zero, so every padded entry of r/g/z is exactly zero and the
+        transports (0 -> 0) and the v_hat sum are unaffected.
+        """
+        kern = self.cfg.kernel_on
+        if kern:
+            r_p = col_residual(a_cp, x, use_pallas=True,
+                               interpret=self.cfg.kernel_interpret)
+        else:
+            r_p = jnp.einsum("pmn,pn->pm", a_cp.astype(jnp.float32), x)
         r, extra, syms = self._fuse(r_p, delta, drop)
         g = y - r
         # boundary Onsager correction sum_q c_q z_q^last (ColumnPartition
@@ -1022,8 +1098,15 @@ class AmpEngine:
         # g is replicated across shards post-fusion: no psum needed
         v_hat = jnp.sum(g * g) / m_eff
         z0 = jnp.broadcast_to(g, x.shape[:1] + g.shape)
-        x_new, c_p, z_last = self._col_inner(x, g, z0, a_cp, m_eff, eta_fn,
-                                             n_mask=n_mask)
+        if kern:
+            km = (jnp.ones(a_cp.shape[2], jnp.float32) if n_mask is None
+                  else n_mask.reshape(-1))
+            x_new, c_p, z_last = self._col_inner_kernels(
+                x, g, z0, a_cp, m_eff,
+                self._col_prior_params() if pp is None else pp, km)
+        else:
+            x_new, c_p, z_last = self._col_inner(x, g, z0, a_cp, m_eff,
+                                                 eta_fn, n_mask=n_mask)
         if self.cfg.layout.carry_fused:
             coef_new = jnp.sum(c_p)
             if axis is not None:
@@ -1070,7 +1153,8 @@ class AmpEngine:
     # -- compiled entry points ----------------------------------------------
 
     def _scan_fn(self, m: int, n: int):
-        """Build (once per shape) the jitted full-solve scan."""
+        """Build (once per shape) the jitted full-solve scan. ``m``/``n``
+        are the *true* problem dims; operands may arrive tile-padded."""
         key = ("scan", m, n)
         if key not in self._jit_cache:
             cfg, kappa = self.cfg, m / n
@@ -1078,7 +1162,8 @@ class AmpEngine:
             def solve_fn(a_p, y_p, sched):
                 init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
                         jnp.zeros(()))
-                body = lambda c, xs: self._body(c, xs, a_p, y_p, kappa)
+                body = lambda c, xs: self._body(c, xs, a_p, y_p, kappa,
+                                                m_eff=jnp.float32(m))
                 (x, _, _), outs = jax.lax.scan(
                     body, init, (jnp.arange(cfg.n_iter), sched))
                 return x, outs
@@ -1093,21 +1178,30 @@ class AmpEngine:
         key = ("step", m, n)
         if key not in self._jit_cache:
             kappa = m / n
-            local = jax.jit(self._local)
+            local = jax.jit(lambda x, z_p, ons, a_p, y_p: self._local(
+                x, z_p, ons, a_p, y_p, m_eff=jnp.float32(m)))
             gc = jax.jit(lambda f_p, s2, delta: self._gc(f_p, s2, delta,
                                                          kappa))
             self._jit_cache[key] = (local, gc)
         return self._jit_cache[key]
 
     def _split(self, y, a_mat):
+        """Row-split (A, y); on the kernel path, tile-align once here —
+        host-side, so no pad of the (M, N) operand enters the program."""
         a_p, y_p = split_problem(np.asarray(a_mat, np.float32),
                                  np.asarray(y, np.float32), self.cfg.n_proc)
-        return jnp.asarray(a_p), jnp.asarray(y_p)
+        if self.cfg.kernel_on:
+            a_p, y_p = pad_row_shards(a_p, y_p)
+        return (jnp.asarray(a_p, self.cfg.a_jdtype), jnp.asarray(y_p))
 
     def _split_col(self, y, a_mat):
+        """Column-split A (shared y); kernel path tile-aligns M here."""
         a_cp = split_problem_cols(np.asarray(a_mat, np.float32),
                                   self.cfg.n_proc)
-        return jnp.asarray(a_cp), jnp.asarray(np.asarray(y, np.float32))
+        y = np.asarray(y, np.float32)
+        if self.cfg.kernel_on:
+            a_cp, y = pad_col_shards(a_cp, y)
+        return jnp.asarray(a_cp, self.cfg.a_jdtype), jnp.asarray(y)
 
     def _col_scan_fn(self, m: int, n: int):
         """Build (once per shape) the jitted full-solve column scan."""
@@ -1130,8 +1224,8 @@ class AmpEngine:
 
     def _solve_col(self, y, a_mat) -> EngineTrace:
         self._check_col_controller()
+        m, n = np.shape(a_mat)             # true dims; _split_col may pad M
         a_cp, yj = self._split_col(y, a_mat)
-        m, n = a_cp.shape[1], a_cp.shape[0] * a_cp.shape[2]
         x, outs = self._col_scan_fn(m, n)(a_cp, yj, self._sched_operand())
         return self._trace(x, outs)
 
@@ -1144,11 +1238,14 @@ class AmpEngine:
         p = self.cfg.n_proc
         m, n = a_mats.shape[-2:]
         if shared_a:
-            a_b = jnp.asarray(split_problem_cols(a_mats, p))
+            a_b = split_problem_cols(a_mats, p)
         else:
             assert a_mats.shape[0] == b
-            a_b = jnp.asarray(np.stack(
-                [split_problem_cols(a_mats[i], p) for i in range(b)]))
+            a_b = np.stack(
+                [split_problem_cols(a_mats[i], p) for i in range(b)])
+        if self.cfg.kernel_on:
+            a_b, ys = pad_col_shards(a_b, ys)
+        a_b = jnp.asarray(a_b, self.cfg.a_jdtype)
         y_b = jnp.asarray(ys)
         key = ("col_vmap", m, n, shared_a)
         if key not in self._jit_cache:
@@ -1178,10 +1275,9 @@ class AmpEngine:
         C-MP-AMP solve (``cfg.n_iter`` fusion exchanges)."""
         if self.cfg.is_col:
             return self._solve_col(y, a_mat)
+        m, n = np.shape(a_mat)             # true dims; _split may tile-pad
         a_p, y_p = self._split(y, a_mat)
-        m = a_p.shape[0] * a_p.shape[1]
-        x, outs = self._scan_fn(m, a_p.shape[2])(a_p, y_p,
-                                                 self._sched_operand())
+        x, outs = self._scan_fn(m, n)(a_p, y_p, self._sched_operand())
         return self._trace(x, outs)
 
     def solve_many(self, ys, a_mats) -> EngineTrace:
@@ -1199,12 +1295,20 @@ class AmpEngine:
         p = self.cfg.n_proc
         m, n = a_mats.shape[-2:]
         assert m % p == 0, f"M={m} not divisible by P={p}"
+        mp_ = m // p
         if shared_a:
-            a_b = jnp.asarray(a_mats.reshape(p, m // p, n))
+            a_b = a_mats.reshape(p, mp_, n)
         else:
             assert a_mats.shape[0] == b
-            a_b = jnp.asarray(a_mats.reshape(b, p, m // p, n))
-        y_b = jnp.asarray(ys.reshape(b, p, m // p))
+            a_b = a_mats.reshape(b, p, mp_, n)
+        y_b = ys.reshape(b, p, mp_)
+        if self.cfg.kernel_on:
+            a_b, _ = pad_row_shards(a_b, None)
+            if a_b.shape[-2] != mp_:
+                y_b = np.pad(y_b,
+                             ((0, 0), (0, 0), (0, a_b.shape[-2] - mp_)))
+        a_b = jnp.asarray(a_b, self.cfg.a_jdtype)
+        y_b = jnp.asarray(y_b)
 
         key = ("vmap", m, n, shared_a)
         if key not in self._jit_cache:
@@ -1267,7 +1371,12 @@ class AmpEngine:
         return (x1, z1, ons1), out
 
     def _scan_fn_het(self, mp_: int, n: int, has_bt: bool):
-        """Jitted vmapped heterogeneous-batch solve for one padded shape."""
+        """Jitted vmapped heterogeneous-batch solve for one padded shape.
+
+        On the kernel path the bucket-shaped operands are tile-aligned
+        *once here* — one pad at solve entry, outside the vmapped scan —
+        and ``A`` is cast to ``cfg.a_dtype``. The carry rides at the
+        bucket's n, so results keep their bucket shapes."""
         key = ("het", mp_, n, has_bt)
         if key not in self._jit_cache:
             cfg = self.cfg
@@ -1282,7 +1391,13 @@ class AmpEngine:
                     body, init, (jnp.arange(cfg.n_iter), hp.sched))
                 return x, outs
 
-            self._jit_cache[key] = jax.jit(jax.vmap(solve_one))
+            def solve_batch(a_b, y_b, hp: HetParams):
+                if cfg.kernel_on:
+                    a_b, y_b = pad_row_shards(a_b, y_b)
+                return jax.vmap(solve_one)(a_b.astype(cfg.a_jdtype), y_b,
+                                           hp)
+
+            self._jit_cache[key] = jax.jit(solve_batch)
         return self._jit_cache[key]
 
     def _col_body_het(self, carry, xs_t, a_cp, y, hp: HetParams, n_mask,
@@ -1305,7 +1420,8 @@ class AmpEngine:
         x_new, mem_new, coef_new, v_hat, extra, syms = self._col_round(
             x, mem, coef, delta, a_cp, y, hp.m_real,
             lambda v, s2: eta_bg(v, s2, hp.eps, hp.mu_s, hp.sigma_s**2),
-            n_mask=n_mask, drop=drop, axis=axis)
+            n_mask=n_mask, drop=drop, axis=axis,
+            pp=self._col_prior_params(hp))
         extra = jnp.where(s == 0, 0.0, extra)   # zero round-0 payload
         act = s < hp.t_active
         x1 = jnp.where(act, x_new, x)
@@ -1341,7 +1457,13 @@ class AmpEngine:
                     body, init, (jnp.arange(cfg.n_iter), hp.sched))
                 return x.reshape(-1), outs
 
-            self._jit_cache[key] = jax.jit(jax.vmap(solve_one))
+            def solve_batch(a_b, y_b, hp: HetParams):
+                if cfg.kernel_on:
+                    a_b, y_b = pad_col_shards(a_b, y_b)
+                return jax.vmap(solve_one)(a_b.astype(cfg.a_jdtype), y_b,
+                                           hp)
+
+            self._jit_cache[key] = jax.jit(solve_batch)
         return self._jit_cache[key]
 
     def dispatch_het(self, a_b, y_b, params: HetParams,
@@ -1355,7 +1477,9 @@ class AmpEngine:
         ``NamedSharding``), jit partitions the same vmapped program across
         the devices — the serving layer's data-parallel placement.
         """
-        a_b = jnp.asarray(a_b, jnp.float32)
+        # cast A at the entry boundary so a bf16 a_dtype transfers (and
+        # stays resident) at half width; the in-graph astype is then a no-op
+        a_b = jnp.asarray(a_b, self.cfg.a_jdtype)
         y_b = jnp.asarray(y_b, jnp.float32)
         if has_bt is None:
             has_bt = bool(np.any(np.asarray(params.use_bt)))
@@ -1469,8 +1593,8 @@ class AmpEngine:
     def _solve_sharded_col(self, y, a_mat, mesh) -> EngineTrace:
         axis, _ = self._sharded_axis(mesh)
         self._check_col_controller()
+        m, n = np.shape(a_mat)
         a_cp, yj = self._split_col(y, a_mat)
-        m, n = a_cp.shape[1], a_cp.shape[0] * a_cp.shape[2]
         x, outs = self._col_sharded_fn(m, n, mesh, axis)(
             a_cp, yj, self._sched_operand())
         return self._trace(x, outs)
@@ -1496,8 +1620,8 @@ class AmpEngine:
                 "straggler drop_sched does not apply to the column layout"
             return self._solve_sharded_col(y, a_mat, mesh)
         axis, n_dev = self._sharded_axis(mesh)
+        m, n = np.shape(a_mat)
         a_p, y_p = self._split(y, a_mat)
-        m, n = a_p.shape[0] * a_p.shape[1], a_p.shape[2]
         if drop_sched is None:
             drop_sched = np.zeros((self.cfg.n_iter, n_dev), np.float32)
         drop_sched = np.asarray(drop_sched, np.float32)
@@ -1529,7 +1653,14 @@ class AmpEngine:
                 in_specs=(PartitionSpec(axis, None, None),
                           PartitionSpec(axis, None), PartitionSpec()),
                 out_specs=PartitionSpec(), axis_names={axis}, check=False)
-            self._jit_cache[key] = jax.jit(fn)
+
+            def solve_padded(a_p, y_p, hp: HetParams):
+                # tile-align the global operands once, before shard_map
+                if cfg.kernel_on:
+                    a_p, y_p = pad_row_shards(a_p, y_p)
+                return fn(a_p.astype(cfg.a_jdtype), y_p, hp)
+
+            self._jit_cache[key] = jax.jit(solve_padded)
         return self._jit_cache[key]
 
     def _col_sharded_het_fn(self, m_pad: int, np_pad: int, has_bt: bool,
@@ -1558,7 +1689,14 @@ class AmpEngine:
                 in_specs=(PartitionSpec(axis, None, None), PartitionSpec(),
                           PartitionSpec()),
                 out_specs=PartitionSpec(), axis_names={axis}, check=False)
-            self._jit_cache[key] = jax.jit(fn)
+
+            def solve_padded(a_cp, y, hp: HetParams):
+                # tile-align the global operands once, before shard_map
+                if cfg.kernel_on:
+                    a_cp, y = pad_col_shards(a_cp, y)
+                return fn(a_cp.astype(cfg.a_jdtype), y, hp)
+
+            self._jit_cache[key] = jax.jit(solve_padded)
         return self._jit_cache[key]
 
     def dispatch_sharded(self, a_p, y_p, params: HetParams, mesh,
@@ -1574,7 +1712,7 @@ class AmpEngine:
         Column layout: a_p (P, M_pad, Np_pad) column shards, y_p the
         shared (M_pad,) measurements."""
         axis, _ = self._sharded_axis(mesh)
-        a_p = jnp.asarray(a_p, jnp.float32)
+        a_p = jnp.asarray(a_p, self.cfg.a_jdtype)
         y_p = jnp.asarray(y_p, jnp.float32)
         if has_bt is None:
             has_bt = bool(np.any(np.asarray(params.use_bt)))
@@ -1607,8 +1745,8 @@ class AmpEngine:
             "solve_host_loop is a row-layout entry point; column solves " \
             "are scan-only (their controllers are in-graph by design)"
         cfg = self.cfg
+        m, n = np.shape(a_mat)
         a_p, y_p = self._split(y, a_mat)
-        m, n = a_p.shape[0] * a_p.shape[1], a_p.shape[2]
         local, gc = self._step_fns(m, n)
 
         if host_schedule is None:

@@ -1,18 +1,31 @@
-"""Pallas TPU kernels for the AMP local-computation (LC) step.
+"""Pallas TPU kernels for the AMP local-computation (LC) step — batched
+grids over the full processor stack (kernel suite v2).
 
 The LC step is two matvecs against the same sensing-matrix shard A^p:
     z' = y - A x + b z          (contraction over N)
-    f  = x/P + A^T z'           (contraction over M)
+    f  = x/P + A^T z'           (contraction over M/P)
 
-TPU adaptation (DESIGN.md §2): the CS literature runs this as two BLAS calls
-with A read from HBM twice. Here each kernel streams A through VMEM in
-MXU-aligned (128 x 512) tiles and fuses the residual elementwise work
-(y - . + b*z, x/P + .) into the same pass, so A is read exactly twice per
-iteration (information-theoretic minimum for the two contraction orders) and
-z'/f never round-trip to HBM in between tiles.
+v1 ran one (M, N) shard per ``pallas_call`` and the engine ``vmap``ed it
+over the processor axis P (and again over the request batch B), so each
+(b, p) cell was its own grid. v2 folds P into the Pallas grid as a leading
+parallel dimension — one launch covers the whole (P, M/P, N) stack with
+the same VMEM tiling — and fuses the sigma2_hat sum-of-squares reduction
+into the z-pass (the plug-in numerator accumulates into a scalar output as
+each z tile completes, so z' is never re-read from HBM for the reduction).
+The request batch B enters the grid through the ``pallas_call`` vmap
+batching rule, which prepends a grid axis: a ``solve_many``/``solve_het``
+batch is still a single kernel launch.
+
+A may be stored in bf16 (``EngineConfig.a_dtype``): tiles stream from HBM
+at half width and are upcast to f32 in VMEM before hitting the MXU, so
+accumulation precision is unchanged while HBM traffic on the dominant
+operand halves.
 
 Grid conventions: the reduction axis is the *last* grid dim (sequential on
-TPU), accumulating into the output tile with an init at step 0.
+TPU), accumulating into the output tile with an init at step 0. The scalar
+``ss`` output maps every grid step to the same (1,) block, which is only
+race-free because no grid dimension is declared parallel — revisit this if
+``dimension_semantics`` ever marks P parallel on real hardware.
 """
 from __future__ import annotations
 
@@ -26,67 +39,106 @@ BM = 128   # rows of A per tile (M axis)
 BN = 512   # cols of A per tile (N axis)
 
 
-def _z_kernel(ons_ref, a_ref, x_ref, y_ref, z_ref, o_ref):
-    """o[m] = y[m] - sum_n A[m,n] x[n] + onsager * z[m]; grid (M/BM, N/BN)."""
-    j = pl.program_id(1)
+def _z_kernel(ons_ref, a_ref, x_ref, y_ref, z_ref, o_ref, ss_ref, *, nj):
+    """o[p,m] = y[p,m] - sum_n A[p,m,n] x[n] + onsager * z[p,m];
+    grid (P, Mp/BM, N/BN); ss accumulates sum(o**2) as tiles complete."""
+    p, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
-        o_ref[...] = y_ref[...] + ons_ref[0] * z_ref[...]
+        o_ref[0] = y_ref[0] + ons_ref[0] * z_ref[0]
 
-    a = a_ref[...]
+    a = a_ref[0].astype(jnp.float32)
     x = x_ref[...]
-    o_ref[...] -= jax.lax.dot_general(
+    o_ref[0] -= jax.lax.dot_general(
         a, x[:, None], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)[:, 0]
 
+    @pl.when(j == nj - 1)
+    def _reduce():
+        zb = o_ref[0]
+        s = jnp.sum(zb * zb)
+        first = (p == 0) & (i == 0)
+
+        @pl.when(first)
+        def _first():
+            ss_ref[0] = s
+
+        @pl.when(~first)
+        def _acc():
+            ss_ref[0] += s
+
 
 def _f_kernel(a_ref, z_ref, x_ref, o_ref, *, inv_p):
-    """o[n] = x[n]/P + sum_m A[m,n] z'[m]; grid (N/BN, M/BM)."""
-    j = pl.program_id(1)
+    """o[p,n] = x[n]/P + sum_m A[p,m,n] z'[p,m]; grid (P, N/BN, Mp/BM)."""
+    j = pl.program_id(2)
 
     @pl.when(j == 0)
     def _init():
-        o_ref[...] = inv_p * x_ref[...]
+        o_ref[0] = inv_p * x_ref[...]
 
-    a = a_ref[...]          # (BM, BN) tile
-    z = z_ref[...]          # (BM,)
-    o_ref[...] += jax.lax.dot_general(
+    a = a_ref[0].astype(jnp.float32)    # (BM, BN) tile
+    z = z_ref[0]                         # (BM,)
+    o_ref[0] += jax.lax.dot_general(
         z[None, :], a, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)[0]
 
 
-@partial(jax.jit, static_argnames=("n_proc", "interpret"))
-def amp_local_pallas(a, x, y, z, onsager, n_proc: int, interpret: bool = False):
-    """Fused LC step. a (M, N) with M % BM == 0, N % BN == 0 (ops.py pads)."""
-    m, n = a.shape
+@partial(jax.jit, static_argnames=("n_proc", "interpret", "bm", "bn"))
+def amp_local_pallas_grid(a_p, x, y_p, z_p, onsager, n_proc: int,
+                          interpret: bool = False,
+                          bm: int = BM, bn: int = BN):
+    """Batched-grid fused LC step over the full processor stack.
+
+    a_p (P, Mp, N) with Mp % bm == 0 and N % bn == 0 (``ops.py`` aligns),
+    f32 or bf16; x (N,); y_p, z_p (P, Mp) f32. Returns
+    ``(z_new (P, Mp), f (P, N), ss ())`` with ``ss = sum(z_new**2)``.
+    """
+    p, mp_, n = a_p.shape
+    assert mp_ % bm == 0 and n % bn == 0, (a_p.shape, bm, bn)
+    ni, nj = mp_ // bm, n // bn
     ons = jnp.asarray(onsager, jnp.float32).reshape(1)
 
-    z_new = pl.pallas_call(
-        _z_kernel,
-        grid=(m // BM, n // BN),
+    z_new, ss = pl.pallas_call(
+        partial(_z_kernel, nj=nj),
+        grid=(p, ni, nj),
         in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (0,)),
-            pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
-            pl.BlockSpec((BN,), lambda i, j: (j,)),
-            pl.BlockSpec((BM,), lambda i, j: (i,)),
-            pl.BlockSpec((BM,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda p, i, j: (0,)),
+            pl.BlockSpec((1, bm, bn), lambda p, i, j: (p, i, j)),
+            pl.BlockSpec((bn,), lambda p, i, j: (j,)),
+            pl.BlockSpec((1, bm), lambda p, i, j: (p, i)),
+            pl.BlockSpec((1, bm), lambda p, i, j: (p, i)),
         ],
-        out_specs=pl.BlockSpec((BM,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        out_specs=[
+            pl.BlockSpec((1, bm), lambda p, i, j: (p, i)),
+            pl.BlockSpec((1,), lambda p, i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, mp_), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
         interpret=interpret,
-    )(ons, a, x, y, z)
+    )(ons, a_p, x, y_p, z_p)
 
     f = pl.pallas_call(
         partial(_f_kernel, inv_p=1.0 / n_proc),
-        grid=(n // BN, m // BM),
+        grid=(p, n // bn, ni),
         in_specs=[
-            pl.BlockSpec((BM, BN), lambda i, j: (j, i)),
-            pl.BlockSpec((BM,), lambda i, j: (j,)),
-            pl.BlockSpec((BN,), lambda i, j: (i,)),
+            pl.BlockSpec((1, bm, bn), lambda p, i, j: (p, j, i)),
+            pl.BlockSpec((1, bm), lambda p, i, j: (p, j)),
+            pl.BlockSpec((bn,), lambda p, i, j: (i,)),
         ],
-        out_specs=pl.BlockSpec((BN,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        out_specs=pl.BlockSpec((1, bn), lambda p, i, j: (p, i)),
+        out_shape=jax.ShapeDtypeStruct((p, n), jnp.float32),
         interpret=interpret,
-    )(a, z_new, x)
-    return z_new, f
+    )(a_p, z_new, x)
+    return z_new, f, ss[0]
+
+
+@partial(jax.jit, static_argnames=("n_proc", "interpret"))
+def amp_local_pallas(a, x, y, z, onsager, n_proc: int, interpret: bool = False):
+    """Single-shard fused LC step (v1 signature, kept for the per-op tests
+    and external callers). a (M, N) with M % BM == 0, N % BN == 0."""
+    z_new, f, _ = amp_local_pallas_grid(a[None], x, y[None], z[None],
+                                        onsager, n_proc, interpret=interpret)
+    return z_new[0], f[0]

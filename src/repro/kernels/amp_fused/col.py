@@ -1,0 +1,182 @@
+"""Pallas kernels for the column-layout (C-MP-AMP) LC hot path.
+
+Two kernels cover the per-round A-touching work of ``engine._col_round``
+/ ``_col_inner`` (DESIGN.md §7/§8):
+
+* ``col_residual_pallas`` — the fused residual contributions
+  ``r_p = A_p x_p`` over (M, N/P) column blocks, P folded into the grid.
+* ``col_inner_pallas`` — one C-MP-AMP inner iteration in a single VMEM
+  pass over A_p per contraction: stage 0 streams A_p once accumulating
+  the message ``f_p = x_p + A_p^T z_p`` *and* the plug-in numerator
+  ``||z_p||^2``, then (at the final M tile, with f_p still in VMEM)
+  applies the Bernoulli-Gauss conditional-mean denoiser and its
+  derivative sum ``c_p`` in closed form; stage 1 streams A_p a second
+  time for the residual update ``z_p <- g - A_p (x' - x_p^0) + c_p z_p``.
+  A is read exactly twice per inner iteration — the same
+  information-theoretic minimum as the row kernels — and f_p / x' / c_p
+  never round-trip to HBM between the stages' tiles (they live in
+  revisited output blocks).
+
+The denoiser runs *in-kernel*, so its derivative cannot come from
+``jax.grad``: the closed form lives beside the prior math as
+``denoisers.eta_bg_and_deriv`` (one home for the Bernoulli-Gauss
+formulas; pinned against ``jax.grad`` in tests/test_kernels_col.py) and
+is re-exported here for kernel callers.
+
+Blocking: A_p tiles are (BM, Np) — the full per-processor column slice
+rides in VMEM (Np * BM * 4B per tile; Np beyond ~16k would need a second
+tiling level, far past the serving shapes). Scalar parameters travel as a
+packed (4,) operand ``[m_eff, eps, mu_s, sigma_s2]`` so the same compiled
+kernel serves traced per-instance priors (the heterogeneous path). A may
+be bf16 (upcast in VMEM, f32 accumulation).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .amp_fused import BM
+
+
+def eta_bg_and_deriv(f, sigma2, eps, mu_s, sigma_s2):
+    """Re-export of ``denoisers.eta_bg_and_deriv`` (the single home of
+    the Bernoulli-Gauss closed forms) for kernel callers. Imported
+    lazily: ``core.engine`` imports this package at module load, so a
+    top-level ``core.denoisers`` import here would be circular."""
+    from ...core.denoisers import eta_bg_and_deriv as _impl
+    return _impl(f, sigma2, eps, mu_s, sigma_s2)
+
+
+def _col_r_kernel(a_ref, x_ref, o_ref):
+    """o[p,m] = sum_n A[p,m,n] x[p,n]; grid (P, M/BM), full-Np tiles."""
+    a = a_ref[0].astype(jnp.float32)     # (BM, Np)
+    x = x_ref[0]                          # (Np,)
+    o_ref[0] = jax.lax.dot_general(
+        a, x[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+
+
+@partial(jax.jit, static_argnames=("interpret", "bm"))
+def col_residual_pallas(a_cp, x, interpret: bool = False, bm: int = BM):
+    """r_p = A_p x_p. a_cp (P, M, Np) with M % bm == 0; x (P, Np)."""
+    p, m, np_ = a_cp.shape
+    assert m % bm == 0, (a_cp.shape, bm)
+    return pl.pallas_call(
+        _col_r_kernel,
+        grid=(p, m // bm),
+        in_specs=[
+            pl.BlockSpec((1, bm, np_), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, np_), lambda p, i: (p, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda p, i: (p, i)),
+        out_shape=jax.ShapeDtypeStruct((p, m), jnp.float32),
+        interpret=interpret,
+    )(a_cp, x)
+
+
+def _col_inner_kernel(par_ref, a_ref, x_ref, x0_ref, z_ref, g_ref, mask_ref,
+                      xo_ref, co_ref, fo_ref, sso_ref, zo_ref=None,
+                      *, ni, update_z):
+    """One inner iteration; grid (P, 2, M/BM) (stage axis dropped when
+    ``update_z`` is False). Stage 0 accumulates f/||z||^2 over M tiles and
+    denoises at the last; stage 1 writes the updated residual tiles."""
+    if update_z:
+        s, i = pl.program_id(1), pl.program_id(2)
+    else:
+        s, i = 0, pl.program_id(1)
+    a = a_ref[0].astype(jnp.float32)      # (BM, Np)
+
+    @pl.when((s == 0) & (i == 0))
+    def _init():
+        fo_ref[0] = x_ref[0]
+        sso_ref[0] = 0.0
+
+    @pl.when(s == 0)
+    def _accumulate():
+        z = z_ref[0]                       # (BM,)
+        fo_ref[0] += jax.lax.dot_general(
+            z[None, :], a, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+        sso_ref[0] += jnp.sum(z * z)
+
+    @pl.when((s == 0) & (i == ni - 1))
+    def _denoise():
+        m_eff, eps, mu_s, s2s = (par_ref[0], par_ref[1], par_ref[2],
+                                 par_ref[3])
+        s2 = jnp.maximum(sso_ref[0] / m_eff, 1e-30)
+        val, deriv = eta_bg_and_deriv(fo_ref[0], s2, eps, mu_s, s2s)
+        mask = mask_ref[...]
+        xo_ref[0] = val * mask
+        co_ref[0] = jnp.sum(deriv * mask) / m_eff
+
+    if update_z:
+        @pl.when(s == 1)
+        def _residual():
+            dx = xo_ref[0] - x0_ref[0]
+            zo_ref[0] = (g_ref[...] - jax.lax.dot_general(
+                a, dx[:, None], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)[:, 0]
+                + co_ref[0] * z_ref[0])
+
+
+@partial(jax.jit, static_argnames=("update_z", "interpret", "bm"))
+def col_inner_pallas(a_cp, x, x0, z_p, g, n_mask, m_eff, eps, mu_s, sigma_s2,
+                     update_z: bool, interpret: bool = False, bm: int = BM):
+    """Fused C-MP-AMP inner iteration (see module docstring).
+
+    a_cp (P, M, Np), M % bm == 0; x, x0 (P, Np); z_p (P, M); g (M,);
+    n_mask (Np,). Scalars may be traced. Returns ``(x_new (P, Np),
+    c_p (P,), z_new (P, M))``; ``z_new`` is ``z_p`` unchanged when
+    ``update_z`` is False (the final inner iteration keeps the residual
+    that fed the denoise — the Onsager boundary carry).
+    """
+    p, m, np_ = a_cp.shape
+    assert m % bm == 0, (a_cp.shape, bm)
+    ni = m // bm
+    par = jnp.stack([jnp.asarray(v, jnp.float32).reshape(())
+                     for v in (m_eff, eps, mu_s, sigma_s2)])
+
+    if update_z:
+        ix = lambda fn: fn                 # index maps take (p, s, i)
+        grid = (p, 2, ni)
+    else:
+        # no stage axis: wrap the 3-arg index maps with s pinned to 0
+        ix = lambda fn: (lambda p, i, fn=fn: fn(p, 0, i))
+        grid = (p, ni)
+
+    in_specs = [
+        pl.BlockSpec((4,), ix(lambda p, s, i: (0,))),
+        pl.BlockSpec((1, bm, np_), ix(lambda p, s, i: (p, i, 0))),
+        pl.BlockSpec((1, np_), ix(lambda p, s, i: (p, 0))),
+        pl.BlockSpec((1, np_), ix(lambda p, s, i: (p, 0))),
+        pl.BlockSpec((1, bm), ix(lambda p, s, i: (p, i))),
+        pl.BlockSpec((bm,), ix(lambda p, s, i: (i,))),
+        pl.BlockSpec((np_,), ix(lambda p, s, i: (0,))),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, np_), ix(lambda p, s, i: (p, 0))),
+        pl.BlockSpec((1,), ix(lambda p, s, i: (p,))),
+        pl.BlockSpec((1, np_), ix(lambda p, s, i: (p, 0))),
+        pl.BlockSpec((1,), ix(lambda p, s, i: (p,))),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((p, np_), jnp.float32),   # x_new
+        jax.ShapeDtypeStruct((p,), jnp.float32),       # c_p
+        jax.ShapeDtypeStruct((p, np_), jnp.float32),   # f accumulator
+        jax.ShapeDtypeStruct((p,), jnp.float32),       # ||z||^2 accumulator
+    ]
+    if update_z:
+        out_specs.append(pl.BlockSpec((1, bm), lambda p, s, i: (p, i)))
+        out_shape.append(jax.ShapeDtypeStruct((p, m), jnp.float32))
+
+    outs = pl.pallas_call(
+        partial(_col_inner_kernel, ni=ni, update_z=update_z),
+        grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(par, a_cp, x, x0, z_p, g, n_mask)
+    x_new, c_p = outs[0], outs[1]
+    z_new = outs[4] if update_z else z_p
+    return x_new, c_p, z_new

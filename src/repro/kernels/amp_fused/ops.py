@@ -1,29 +1,156 @@
-"""Wrapper for the fused AMP LC kernel: padding + backend dispatch."""
+"""Dispatch + tile alignment for the fused AMP LC kernel suite.
+
+The engine calls the ``*_grid`` entry points with *pre-aligned* operands:
+padding of the (M, N)-sized sensing operand happens once at solve entry
+(``pad_row_shards`` / ``pad_col_shards`` — host-side numpy for the
+homogeneous paths, one jnp pad outside the scan for the heterogeneous
+wrappers), never inside the scanned iteration body (tests assert the
+jaxpr). Zero-padding is exact end-to-end: padded rows/columns of A are
+zero, so residuals/messages in the padded region are identically zero and
+every transport maps 0 -> 0.
+
+Tile sizes adapt to the problem (``row_tiles``): full 128 x 512 MXU tiles
+when the shard is big enough, shrinking to the (8, 128) f32 minimum so
+serving-sized shards (e.g. Mp = 32) do not pay 4x padded compute.
+
+``amp_local_step`` keeps the v1 single-shard signature (pads per call) for
+per-op tests and external callers; the engine no longer uses it.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .amp_fused import BM, BN, amp_local_pallas
-from .ref import amp_local_ref
+from .amp_fused import BM, BN, amp_local_pallas_grid
+from .col import col_inner_pallas, col_residual_pallas, eta_bg_and_deriv
+from .ref import (amp_local_ref, amp_local_ref_grid, amp_local_ref_vmap,
+                  col_inner_step_ref, col_residual_ref)
 
-__all__ = ["amp_local_step"]
+__all__ = [
+    "amp_local_step", "amp_local_grid", "col_residual", "col_inner_step",
+    "row_tiles", "col_tiles", "pad_row_shards", "pad_col_shards",
+    "eta_bg_and_deriv",
+]
+
+
+def _round_up(v: int, q: int) -> int:
+    return -(-v // q) * q
+
+
+def _balanced_tile(dim: int, full: int, quantum: int) -> int:
+    """Largest-tile-<= ``full`` split of ``dim`` into near-equal
+    ``quantum``-aligned tiles: k = ceil(dim/full) tiles of
+    round_up(dim/k, quantum). Caps padding waste at quantum-1 rows per
+    tile instead of up to full-1 (e.g. Mp=150 pads to 160, not 256)."""
+    dim = max(dim, 1)
+    k = -(-dim // full)
+    return _round_up(-(-dim // k), quantum)
+
+
+def row_tiles(mp: int, n: int) -> tuple[int, int]:
+    """(bm, bn) for a (P, Mp, N) row-shard stack: (128, 512) MXU tiles at
+    large shards, balanced smaller tiles (8/128-aligned minimum) so small
+    or slightly-off serving shards pad by at most one quantum per tile."""
+    return _balanced_tile(mp, BM, 8), _balanced_tile(n, BN, 128)
+
+
+def col_tiles(m: int) -> int:
+    """bm for a (P, M, Np) column-shard stack (Np rides untiled)."""
+    return _balanced_tile(m, BM, 8)
+
+
+def pad_row_shards(a_p, y_p):
+    """Align a (..., P, Mp, N) row-shard stack (+ matching y, or None) to
+    kernel tiles with zero padding. Works on numpy or jax arrays; no-op
+    (returns the inputs unchanged) when already aligned."""
+    mp_, n = a_p.shape[-2], a_p.shape[-1]
+    bm, bn = row_tiles(mp_, n)
+    dm, dn = _round_up(mp_, bm) - mp_, _round_up(n, bn) - n
+    if dm == 0 and dn == 0:
+        return a_p, y_p
+    xp = np if isinstance(a_p, np.ndarray) else jnp
+    nd = a_p.ndim
+    a_p = xp.pad(a_p, [(0, 0)] * (nd - 2) + [(0, dm), (0, dn)])
+    if y_p is not None:
+        y_p = xp.pad(y_p, [(0, 0)] * (y_p.ndim - 1) + [(0, dm)])
+    return a_p, y_p
+
+
+def pad_col_shards(a_cp, y):
+    """Align a (..., P, M, Np) column-shard stack (+ shared y) to kernel
+    tiles: M is zero-padded to the tile multiple, Np rides untiled."""
+    m = a_cp.shape[-2]
+    dm = _round_up(m, col_tiles(m)) - m
+    if dm == 0:
+        return a_cp, y
+    xp = np if isinstance(a_cp, np.ndarray) else jnp
+    nd = a_cp.ndim
+    a_cp = xp.pad(a_cp, [(0, 0)] * (nd - 2) + [(0, dm), (0, 0)])
+    y = xp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, dm)])
+    return a_cp, y
+
+
+def amp_local_grid(a_p, x, y_p, z_p, onsager, n_proc: int,
+                   use_pallas: bool | None = None, interpret: bool = False):
+    """Batched-grid fused LC step over the whole (P, Mp, N) shard stack.
+
+    Returns ``(z_new (P, Mp), f_p (P, N), ss ())`` — ``ss`` the fused
+    sigma2_hat numerator ``sum(z_new**2)``. Pallas path requires
+    tile-aligned shards (``pad_row_shards``); x must match N. A may be
+    bf16 (upcast in VMEM / promoted by the reference einsum).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return amp_local_ref_grid(a_p, x, y_p, z_p, onsager, n_proc)
+    bm, bn = row_tiles(a_p.shape[1], a_p.shape[2])
+    return amp_local_pallas_grid(a_p, x, y_p, z_p, onsager, n_proc,
+                                 interpret=interpret, bm=bm, bn=bn)
+
+
+def col_residual(a_cp, x, use_pallas: bool | None = None,
+                 interpret: bool = False):
+    """Column-layout residual contributions ``r_p = A_p x_p`` (P, M)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return col_residual_ref(a_cp, x)
+    return col_residual_pallas(a_cp, x, interpret=interpret,
+                               bm=col_tiles(a_cp.shape[1]))
+
+
+def col_inner_step(a_cp, x, x0, z_p, g, n_mask, m_eff, eps, mu_s, sigma_s2,
+                   update_z: bool, use_pallas: bool | None = None,
+                   interpret: bool = False):
+    """One fused C-MP-AMP inner iteration (message + denoise + optional
+    residual update); see ``col.col_inner_pallas``. ``n_mask`` is a
+    (Np,) 0/1 mask of real columns (pass all-ones when unpadded)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return col_inner_step_ref(a_cp, x, x0, z_p, g, n_mask, m_eff,
+                                  eps, mu_s, sigma_s2, update_z)
+    return col_inner_pallas(a_cp, x, x0, z_p, g, n_mask, m_eff, eps, mu_s,
+                            sigma_s2, update_z, interpret=interpret,
+                            bm=col_tiles(a_cp.shape[1]))
 
 
 def amp_local_step(a, x, y, z, onsager, n_proc: int,
                    use_pallas: bool | None = None, interpret: bool = False):
-    """Fused z'/f computation for one processor's LC step (padded+dispatched)."""
+    """Fused z'/f computation for one processor's LC step (v1 signature:
+    pads per call, single (M, N) shard)."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
         return amp_local_ref(a, x, y, z, onsager, n_proc)
     m, n = a.shape
-    pm, pn = (-m) % BM, (-n) % BN
-    ap = jnp.pad(a, ((0, pm), (0, pn)))
-    xp = jnp.pad(x, (0, pn))
-    yp = jnp.pad(y, (0, pm))
-    zp = jnp.pad(z, (0, pm))
-    z_new, f = amp_local_pallas(ap, xp, yp, zp, onsager, n_proc,
-                                interpret=interpret)
+    ap, yp = pad_row_shards(a[None], y[None])
+    xp_ = jnp.pad(x, (0, ap.shape[2] - n))
+    zp = jnp.pad(z, (0, ap.shape[1] - m))[None]
+    bm, bn = row_tiles(ap.shape[1], ap.shape[2])
+    z_new, f, _ = amp_local_pallas_grid(jnp.asarray(ap), xp_,
+                                        jnp.asarray(yp), zp, onsager, n_proc,
+                                        interpret=interpret, bm=bm, bn=bn)
     # padded x rows contribute x/P to padded f entries only; slice them away
-    return z_new[:m], f[:n]
+    return z_new[0, :m], f[0, :n]

@@ -344,6 +344,64 @@ def test_column_rate_accounting_round_indexing():
     assert not res_ll.tracked and np.isinf(res_ll.rates).all()
 
 
+@pytest.mark.parametrize("p,n_inner", [(4, 1), (4, 2), (8, 2)])
+def test_column_kernel_interpret_matches_einsum(golden_point, p, n_inner):
+    """ISSUE 5 acceptance: column solves with ``use_kernel`` +
+    ``kernel_interpret=True`` (fused residual + fused inner-step Pallas
+    kernels, M tile-padded) match the einsum reference to <= 1e-6 MSE on
+    the parity grid — exact fusion and ECSQ, n_inner 1 and 2."""
+    prob, s0, a, y = golden_point
+    t = 6
+    deltas = np.full(t, 0.02, np.float32)
+    deltas[0] = np.inf
+    for transport, ctrl in ((ExactFusion(), None),
+                            (EcsqTransport(), FixedSchedule(deltas))):
+        ref = _col_engine(prob.prior, p, t, transport, ctrl,
+                          n_inner=n_inner).solve(y, a)
+        pal = _col_engine(prob.prior, p, t, transport, ctrl,
+                          n_inner=n_inner, use_kernel=True,
+                          kernel_interpret=True).solve(y, a)
+        d = float(np.mean((pal.x - ref.x) ** 2))
+        assert d <= 1e-6, (type(transport).__name__, d)
+        np.testing.assert_allclose(pal.sigma2_hat, ref.sigma2_hat,
+                                   rtol=1e-4)
+        np.testing.assert_allclose(pal.extra_var, ref.extra_var, rtol=1e-5)
+
+
+def test_column_het_kernel_interpret_matches_ref(golden_point):
+    """The heterogeneous column path (padded columns via ``n_mask``,
+    padded rows, frozen tail) through the kernel suite == the einsum het
+    solve — the mask rides into the fused kernel's in-kernel denoise."""
+    prob, _, a, y = golden_point
+    prior = prob.prior
+    p, t_max = 4, 8
+    m_pad, np_pad = 640, 512
+    a_b = np.zeros((1, p, m_pad, np_pad), np.float32)
+    y_b = np.zeros((1, m_pad), np.float32)
+    a_b[0, :, :600, :500] = split_problem_cols(np.asarray(a, np.float32), p)
+    y_b[0, :600] = y
+    from repro.core.rate_alloc import stack_schedules
+    params = HetParams(
+        sched=stack_schedules([np.full(6, np.inf, np.float32)], t_max),
+        t_active=np.asarray([6], np.int32),
+        m_real=np.asarray([600], np.float32),
+        n_real=np.asarray([2000], np.int32),
+        eps=np.full(1, prior.eps, np.float32),
+        mu_s=np.zeros(1, np.float32), sigma_s=np.ones(1, np.float32),
+        use_bt=np.asarray([False]),
+        bt=stack_bt_tables([ColBTTables.dummy(t_max)]),
+    )
+    ref = _col_engine(prior, p, t_max, EcsqTransport(),
+                      collect_xs=False).solve_het(a_b, y_b, params)
+    pal = _col_engine(prior, p, t_max, EcsqTransport(), collect_xs=False,
+                      use_kernel=True,
+                      kernel_interpret=True).solve_het(a_b, y_b, params)
+    assert pal.x.shape == ref.x.shape     # bucket shapes preserved
+    d = float(np.mean((pal.x - ref.x) ** 2))
+    assert d <= 1e-6, d
+    np.testing.assert_allclose(pal.sigma2_hat, ref.sigma2_hat, rtol=1e-4)
+
+
 def test_column_rejects_row_controller(golden_point):
     """A row-wise BT controller predicts through the wrong SE: refused."""
     from repro.core.engine import BTRateControl
