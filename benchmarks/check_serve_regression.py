@@ -1,0 +1,82 @@
+"""Non-blocking serving-perf regression check for CI.
+
+Compares a freshly measured ``BENCH_serve.json`` against the committed
+baseline and prints a GitHub Actions ``::warning::`` annotation when the
+stream p50 latency regresses by more than ``--threshold`` (default 25%)
+or a batched speedup drops below the baseline by the same margin.
+
+Always exits 0: CI wall-clock on shared runners is jittery, so this
+surfaces drift on the PR without turning noise into a red build. The
+archived artifacts carry the full trajectory for offline comparison.
+
+  python benchmarks/check_serve_regression.py \
+      --baseline /tmp/bench_serve_baseline.json --fresh BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_serve.json (snapshot before the "
+                         "bench overwrites it)")
+    ap.add_argument("--fresh", default="BENCH_serve.json",
+                    help="just-measured BENCH_serve.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative regression that triggers a warning")
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::notice::serve-bench comparison skipped: {e}")
+        return 0
+
+    warnings = []
+
+    b_lat, f_lat = base.get("latency") or {}, fresh.get("latency") or {}
+    b50, f50 = b_lat.get("p50_ms"), f_lat.get("p50_ms")
+    if b50 and f50:
+        rel = f50 / b50 - 1.0
+        line = (f"stream p50 {f50:.2f} ms vs baseline {b50:.2f} ms "
+                f"({rel:+.0%}, commit {base.get('commit', '?')})")
+        if rel > args.threshold:
+            warnings.append(f"p50 latency regressed: {line}")
+        else:
+            print(f"serve-bench: {line}")
+
+    b_sp = {row["batch"]: row["speedup"] for row in base.get("batched", [])}
+    for row in fresh.get("batched", []):
+        b = row["batch"]
+        if b not in b_sp or b_sp[b] <= 0:
+            continue
+        rel = row["speedup"] / b_sp[b] - 1.0
+        line = (f"B={b} speedup {row['speedup']:.2f}x vs baseline "
+                f"{b_sp[b]:.2f}x ({rel:+.0%})")
+        if rel < -args.threshold:
+            warnings.append(f"batched speedup regressed: {line}")
+        else:
+            print(f"serve-bench: {line}")
+
+    ssc = (f_lat or {}).get("steady_state_compiles")
+    if ssc:
+        warnings.append(f"steady-state stream triggered {ssc} recompiles "
+                        f"(prewarm should cover the whole menu)")
+
+    for w in warnings:
+        print(f"::warning::{w}")
+    if not warnings:
+        print("serve-bench: no regressions beyond "
+              f"{args.threshold:.0%} threshold")
+    return 0   # advisory only — never fail the build on wall-clock noise
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,13 +54,15 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import warnings
 from typing import NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import PartitionSpec
+from jax.sharding import PartitionSpec, SingleDeviceSharding
 
 from ..compat import axis_size, shard_map
 from ..kernels.amp_fused.ops import (amp_local_grid, col_inner_step,
@@ -813,6 +815,14 @@ class EngineConfig:
                                       # "bfloat16" halves HBM traffic on the
                                       # dominant operand, accumulation stays
                                       # f32 (MXU preferred_element_type)
+    donate: bool = False              # donate batch operands (a_b, y_b) into
+                                      # the het programs so large buckets stop
+                                      # double-buffering HBM (DESIGN §9). Only
+                                      # safe when callers pass temporaries —
+                                      # the serving layer stacks a fresh batch
+                                      # per flush, so it opts in; cached /
+                                      # long-lived buffers must stay out of
+                                      # donating programs.
 
     @property
     def is_col(self) -> bool:
@@ -885,6 +895,61 @@ class AmpEngine:
             controller = FixedSchedule(np.full(cfg.n_iter, np.inf))
         self.controller = controller
         self._jit_cache: dict = {}
+        # AOT executable cache (DESIGN §9): (program key, operand-aval key)
+        # -> jax Compiled. Owning the cache (instead of leaning on jit's
+        # internal one) makes compiles *observable* — ``compile_count`` is
+        # the serving layer's zero-steady-state-recompile invariant — and
+        # lets ``prewarm``/``compile_het`` populate it ahead of traffic.
+        self._exec_cache: dict = {}
+        self._exec_lock = threading.Lock()
+        self.compile_count = 0
+
+    # -- AOT executable cache (DESIGN §9) ------------------------------------
+
+    @staticmethod
+    def _exec_key(args) -> tuple:
+        """Aval fingerprint of a concrete operand pytree: (shape, dtype,
+        weak_type, sharding token) per leaf. numpy operands and default
+        single-device jax arrays share the ``None`` sharding token — a
+        program compiled from numpy dummies at prewarm serves jnp runtime
+        operands of the same avals; explicitly sharded operands (the
+        data-parallel placement) key on ``str(sharding)``."""
+        toks = []
+        for x in jax.tree_util.tree_leaves(args):
+            sh = getattr(x, "sharding", None)
+            tok = None if sh is None or isinstance(sh, SingleDeviceSharding) \
+                else str(sh)
+            dt = getattr(x, "dtype", None)
+            toks.append((tuple(np.shape(x)),
+                         str(dt) if dt is not None else str(np.result_type(x)),
+                         bool(getattr(x, "weak_type", False)), tok))
+        return tuple(toks)
+
+    def _run(self, base_key, fn, args, compile_only: bool = False):
+        """Execute ``fn(*args)`` through the AOT cache: first sight of a
+        (program, avals) pair pays ``lower().compile()`` exactly once (and
+        bumps ``compile_count``); every later call reuses the Compiled.
+        ``compile_only`` returns the executable without running it — the
+        prewarm path. Thread-safe: background prewarm and foreground
+        dispatch serialize on the compile lock, never duplicate work."""
+        key = (base_key, self._exec_key(args))
+        ex = self._exec_cache.get(key)
+        if ex is None:
+            with self._exec_lock:
+                ex = self._exec_cache.get(key)
+                if ex is None:
+                    with warnings.catch_warnings():
+                        # donation feasibility is a compile-time XLA note
+                        # (e.g. scalar operands can't alias outputs); it
+                        # is expected, not actionable
+                        warnings.filterwarnings(
+                            "ignore", message=".*[Dd]onat.*")
+                        ex = fn.lower(*args).compile()
+                    self._exec_cache[key] = ex
+                    self.compile_count += 1
+        if compile_only:
+            return ex
+        return ex(*args)
 
     # -- shared iteration body ----------------------------------------------
 
@@ -1268,6 +1333,34 @@ class AmpEngine:
             xs=np.asarray(xs) if cfg.collect_xs else None,
         )
 
+    def dispatch_single(self, a_p, y_p, m: int, n: int, sched=None,
+                        compile_only: bool = False):
+        """Launch one plain (row-layout, homogeneous) solve from pre-split
+        operands, returning raw ``(x, outs)`` — the serving layer's
+        singleton fast path: a lone request skips batch padding and
+        het-operand assembly entirely and runs the true-dims ``_scan_fn``
+        program through the AOT executable cache. ``sched`` overrides the
+        engine controller's schedule operand (lossless/fixed/DP deltas ride
+        here); ``a_p`` may be a long-lived cached device buffer — this
+        path never donates."""
+        assert not self.cfg.is_col, \
+            "dispatch_single is a row-layout entry point"
+        # keep host operands as numpy: the compiled call's shard_args path
+        # uploads them cheaper than an eager device_put per operand, and
+        # an already-resident cached a_p passes through untouched
+        if getattr(a_p, "dtype", None) != self.cfg.a_jdtype:
+            a_p = np.asarray(a_p, np.float32) \
+                if isinstance(a_p, np.ndarray) and self.cfg.a_dtype == "float32" \
+                else jnp.asarray(a_p, self.cfg.a_jdtype)
+        y_p = np.asarray(y_p, np.float32)
+        if sched is None:
+            sched = self._sched_operand()
+        sched = np.asarray(sched, np.float32)
+        assert sched.shape == (self.cfg.n_iter,), \
+            (sched.shape, self.cfg.n_iter)
+        return self._run(("scan", m, n), self._scan_fn(m, n),
+                         (a_p, y_p, sched), compile_only)
+
     def solve(self, y, a_mat) -> EngineTrace:
         """Full T-iteration solve as one scan-compiled call (no host sync).
 
@@ -1277,8 +1370,7 @@ class AmpEngine:
             return self._solve_col(y, a_mat)
         m, n = np.shape(a_mat)             # true dims; _split may tile-pad
         a_p, y_p = self._split(y, a_mat)
-        x, outs = self._scan_fn(m, n)(a_p, y_p, self._sched_operand())
-        return self._trace(x, outs)
+        return self._trace(*self.dispatch_single(a_p, y_p, m, n))
 
     def solve_many(self, ys, a_mats) -> EngineTrace:
         """vmap-batched solve of B independent CS instances.
@@ -1397,7 +1489,8 @@ class AmpEngine:
                 return jax.vmap(solve_one)(a_b.astype(cfg.a_jdtype), y_b,
                                            hp)
 
-            self._jit_cache[key] = jax.jit(solve_batch)
+            self._jit_cache[key] = jax.jit(
+                solve_batch, donate_argnums=(0, 1) if cfg.donate else ())
         return self._jit_cache[key]
 
     def _col_body_het(self, carry, xs_t, a_cp, y, hp: HetParams, n_mask,
@@ -1463,11 +1556,13 @@ class AmpEngine:
                 return jax.vmap(solve_one)(a_b.astype(cfg.a_jdtype), y_b,
                                            hp)
 
-            self._jit_cache[key] = jax.jit(solve_batch)
+            self._jit_cache[key] = jax.jit(
+                solve_batch, donate_argnums=(0, 1) if cfg.donate else ())
         return self._jit_cache[key]
 
     def dispatch_het(self, a_b, y_b, params: HetParams,
-                     has_bt: bool | None = None):
+                     has_bt: bool | None = None,
+                     compile_only: bool = False):
         """Launch the compiled het solve, returning raw ``(x, outs)`` device
         arrays without materializing them on host. jax dispatch is async, so
         a caller (the serving dispatcher) can prepare the next batch while
@@ -1476,6 +1571,15 @@ class AmpEngine:
         When the operands arrive batch-sharded over a mesh (leading-axis
         ``NamedSharding``), jit partitions the same vmapped program across
         the devices — the serving layer's data-parallel placement.
+
+        Runs through the AOT executable cache: the first (shape, sharding)
+        sighting compiles once, everything after is a cached-Compiled call.
+        ``compile_only=True`` (the prewarm path) stops after populating the
+        cache and returns the executable.
+
+        With ``cfg.donate`` the batch operands are donated into the
+        program: a_b/y_b are **consumed** — pass per-flush temporaries, not
+        buffers you intend to reuse.
         """
         # cast A at the entry boundary so a bf16 a_dtype transfers (and
         # stays resident) at half width; the in-graph astype is then a no-op
@@ -1489,12 +1593,42 @@ class AmpEngine:
             b, p, m_pad, np_pad = a_b.shape
             assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
             assert y_b.shape == (b, m_pad), (y_b.shape, (b, m_pad))
-            return self._col_scan_fn_het(m_pad, np_pad, has_bt)(a_b, y_b,
-                                                                params)
+            return self._run(("col_het", m_pad, np_pad, has_bt),
+                             self._col_scan_fn_het(m_pad, np_pad, has_bt),
+                             (a_b, y_b, params), compile_only)
         b, p, mp_, n = a_b.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
         assert y_b.shape == (b, p, mp_)
-        return self._scan_fn_het(mp_, n, has_bt)(a_b, y_b, params)
+        return self._run(("het", mp_, n, has_bt),
+                         self._scan_fn_het(mp_, n, has_bt),
+                         (a_b, y_b, params), compile_only)
+
+    def lower_het(self, a_b, y_b, params: HetParams,
+                  has_bt: bool | None = None):
+        """AOT entry: trace + lower the het program for these operands
+        without compiling or executing (inspection / offline compile).
+        Does not touch the executable cache; pair with ``compile_het`` for
+        the cached pipeline."""
+        a_b = jnp.asarray(a_b, self.cfg.a_jdtype)
+        y_b = jnp.asarray(y_b, jnp.float32)
+        if has_bt is None:
+            has_bt = bool(np.any(np.asarray(params.use_bt)))
+        if self.cfg.is_col:
+            _, _, m_pad, np_pad = a_b.shape
+            fn = self._col_scan_fn_het(m_pad, np_pad, has_bt)
+        else:
+            _, _, mp_, n = a_b.shape
+            fn = self._scan_fn_het(mp_, n, has_bt)
+        return fn.lower(a_b, y_b, params)
+
+    def compile_het(self, a_b, y_b, params: HetParams,
+                    has_bt: bool | None = None):
+        """AOT entry: compile the het program for these operand avals into
+        the executable cache (idempotent) and return the executable.
+        Subsequent ``dispatch_het`` calls with matching shapes/shardings
+        run with zero new compiles."""
+        return self.dispatch_het(a_b, y_b, params, has_bt,
+                                 compile_only=True)
 
     def trace_of(self, x_outs) -> EngineTrace:
         """Materialize a ``dispatch_het``/``dispatch_sharded`` result."""
@@ -1660,7 +1794,10 @@ class AmpEngine:
                     a_p, y_p = pad_row_shards(a_p, y_p)
                 return fn(a_p.astype(cfg.a_jdtype), y_p, hp)
 
-            self._jit_cache[key] = jax.jit(solve_padded)
+            # donate y only: the sharded A may be a long-lived cached
+            # device buffer (serving operand cache) and must survive
+            self._jit_cache[key] = jax.jit(
+                solve_padded, donate_argnums=(1,) if cfg.donate else ())
         return self._jit_cache[key]
 
     def _col_sharded_het_fn(self, m_pad: int, np_pad: int, has_bt: bool,
@@ -1696,11 +1833,14 @@ class AmpEngine:
                     a_cp, y = pad_col_shards(a_cp, y)
                 return fn(a_cp.astype(cfg.a_jdtype), y, hp)
 
-            self._jit_cache[key] = jax.jit(solve_padded)
+            # donate y only (see _sharded_het_fn): A may be cache-resident
+            self._jit_cache[key] = jax.jit(
+                solve_padded, donate_argnums=(1,) if cfg.donate else ())
         return self._jit_cache[key]
 
     def dispatch_sharded(self, a_p, y_p, params: HetParams, mesh,
-                         has_bt: bool | None = None):
+                         has_bt: bool | None = None,
+                         compile_only: bool = False):
         """Processor-sharded het solve of ONE padded instance (no batch
         axis): a_p (P, M_pad/P, N_pad), y_p (P, M_pad/P), ``params`` the
         per-instance operands *without* a leading batch axis (replicated
@@ -1720,13 +1860,16 @@ class AmpEngine:
             p, m_pad, np_pad = a_p.shape
             assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
             assert y_p.shape == (m_pad,), (y_p.shape, m_pad)
-            return self._col_sharded_het_fn(m_pad, np_pad, has_bt, mesh,
-                                            axis)(a_p, y_p, params)
+            return self._run(
+                ("col_sharded_het", m_pad, np_pad, has_bt, mesh, axis),
+                self._col_sharded_het_fn(m_pad, np_pad, has_bt, mesh, axis),
+                (a_p, y_p, params), compile_only)
         p, mp_, n = a_p.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
         assert y_p.shape == (p, mp_)
-        return self._sharded_het_fn(mp_, n, has_bt, mesh, axis)(
-            a_p, y_p, params)
+        return self._run(("sharded_het", mp_, n, has_bt, mesh, axis),
+                         self._sharded_het_fn(mp_, n, has_bt, mesh, axis),
+                         (a_p, y_p, params), compile_only)
 
     def solve_sharded_het(self, a_p, y_p, params: HetParams, mesh,
                           has_bt: bool | None = None) -> EngineTrace:

@@ -31,7 +31,8 @@ import numpy as np
 from ..core.amp import sample_problem
 from ..core.denoisers import BernoulliGauss
 from ..core.state_evolution import CSProblem
-from ..serving import BucketPolicy, SolveRequest, SolveService
+from ..serving import (BucketPolicy, PrewarmSpec, SolveRequest,
+                       SolveService)
 
 # (N, M, P) menu — wide shapes (N/M ~ 3.2) route row, tall ones (N/M >=
 # 4) route column; P divides every M and every N
@@ -75,6 +76,11 @@ def main():
                     help="serve over all visible devices (placement "
                          "dispatcher; forced-host devices need XLA_FLAGS "
                          "set before launch)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="AOT-compile the SHAPES bucket menu before "
+                         "streaming (DESIGN.md §9): compiles move out of "
+                         "the serving path, the summary then reports "
+                         "steady-state compiles")
     args = ap.parse_args()
 
     n_req = 16 if args.smoke else args.requests
@@ -92,6 +98,19 @@ def main():
         max_batch = round_up(max_batch, mesh.shape["data"])
     svc = SolveService(policy=BucketPolicy(max_batch=max_batch),
                        rate_accounting=not args.smoke, mesh=mesh)
+    prewarmed = 0
+    if args.prewarm:
+        # one spec per (shape, t-bucket, program family): T in {6,8} and
+        # {10} pad to distinct t_max buckets; BT solves trace a different
+        # program (in-graph table controller) than the other policies
+        fams = [p for p in ("lossless", "bt") if p == "lossless"
+                or "bt" in policies]
+        menu = [PrewarmSpec(n=n, m=m, n_proc=p, n_iter=t, policy=fam)
+                for (n, m, p) in SHAPES for t in (8, 12) for fam in fams]
+        rep = svc.prewarm(menu)
+        prewarmed = rep["programs"]
+        print(f"prewarm: {rep['programs']} programs over "
+              f"{len(rep['buckets'])} buckets in {rep['seconds']:.1f}s")
     t0 = time.time()
     results = list(svc.stream(r for r, _ in pairs))
     dt = time.time() - t0
@@ -123,8 +142,16 @@ def main():
               f"{len(tracked)} rate-tracked, "
               f"{tot:.1f} {unit[layout]} total"
               + (f" ({tot / len(tracked):.2f} avg)" if tracked else ""))
+    st = svc.stats()
+    oc = st["operand_cache"]
     print(f"\n{n_req} requests in {dt:.2f}s  "
           f"({n_req / dt:.1f} req/s, {len(svc._engines)} compiled buckets)")
+    print(f"hot path: {st['compiles']['total']} compiles"
+          + (f" ({st['compiles']['total'] - prewarmed} after prewarm)"
+             if args.prewarm else "")
+          + f", operand cache {oc['hits']} hits / {oc['misses']} misses"
+          f" ({oc['bytes'] / (1 << 20):.1f} MiB), "
+          f"{st['singleton_dispatches']} singleton dispatches")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,19 @@
 """Serving front for the unified AMP engine (DESIGN.md §5).
 
 Heterogeneous CS solve requests -> shape buckets -> vmapped batched engine
-calls -> per-request results with realized-rate accounting.
+calls -> per-request results with realized-rate accounting. The hot path
+(DESIGN.md §9) runs on a device-resident operand cache, AOT-prewarmed
+programs, and donated batch operands.
 """
 from .batcher import Batcher
-from .buckets import (BucketKey, BucketPolicy, bucket_for, pad_batch_size,
-                      placement_for)
-from .service import SolveRequest, SolveResult, SolveService
+from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
+                      bucket_for, pad_batch_size, placement_for)
+from .operand_cache import OperandCache, fingerprint
+from .service import PrewarmSpec, SolveRequest, SolveResult, SolveService
 
 __all__ = [
-    "Batcher", "BucketKey", "BucketPolicy", "bucket_for", "pad_batch_size",
-    "placement_for", "SolveRequest", "SolveResult", "SolveService",
+    "Batcher", "BucketKey", "BucketPolicy", "batch_width_ladder",
+    "bucket_for", "pad_batch_size", "placement_for", "OperandCache",
+    "fingerprint", "PrewarmSpec", "SolveRequest", "SolveResult",
+    "SolveService",
 ]

@@ -22,13 +22,21 @@ class Batcher:
         # insertion-ordered so flush keeps request arrival order stable
         # within a bucket
         self._groups: "OrderedDict[BucketKey, list]" = OrderedDict()
+        # lifetime per-bucket admission counts — the demand signal the
+        # prewarm menu (and later, elastic replica scaling) reads
+        self._demand: dict[BucketKey, int] = {}
 
     def __len__(self) -> int:
         return sum(len(g) for g in self._groups.values())
 
+    def demand(self) -> dict:
+        """Requests ever admitted per bucket (not reset by drain)."""
+        return dict(self._demand)
+
     def add(self, key: BucketKey, req):
         """Queue one request; returns (key, batch) if its group is now full,
         else None."""
+        self._demand[key] = self._demand.get(key, 0) + 1
         group = self._groups.setdefault(key, [])
         group.append(req)
         if len(group) >= self.policy.max_batch:

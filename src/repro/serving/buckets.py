@@ -50,7 +50,8 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["BucketPolicy", "BucketKey", "bucket_for", "pad_batch_size",
-           "placement_for", "round_up", "TRANSPORT_BLOCK"]
+           "batch_width_ladder", "placement_for", "round_up",
+           "TRANSPORT_BLOCK"]
 
 # scale-block length of the block-quantized transports (QuantConfig.block
 # as instantiated by serving/service.py); "ecsq" has no block structure
@@ -170,3 +171,19 @@ def pad_batch_size(b: int, policy: BucketPolicy) -> int:
     while p < b:
         p <<= 1
     return min(p, policy.max_batch)
+
+
+def batch_width_ladder(policy: BucketPolicy, n_devices: int = 1) -> tuple:
+    """Every batch width the service can actually dispatch for one bucket:
+    the ``pad_batch_size`` power-of-two ladder, rounded to device
+    multiples under the data-parallel placement. This is the width grid
+    ``SolveService.prewarm`` compiles — exactly the reachable programs, no
+    more."""
+    widths, w = set(), 1
+    while True:
+        wp = round_up(w, n_devices) if n_devices > 1 else w
+        widths.add(min(wp, policy.max_batch))
+        if w >= policy.max_batch:
+            break
+        w <<= 1
+    return tuple(sorted(widths))

@@ -1,0 +1,108 @@
+"""Device-resident operand cache for the serving hot path (DESIGN.md §9).
+
+CS workloads reuse sensing matrices heavily — a stream of requests over
+the same A differs only in y (and schedule). Before this cache the
+service re-padded and re-uploaded O(B*P*M*N) operand bytes per flush;
+with it, each distinct A is split/padded/cast/`device_put` **once per
+(bucket shape, layout, dtype)** and the per-flush batch assembly becomes
+a device-side ``jnp.stack`` over resident shards.
+
+Identity is content, not object: ``fingerprint`` hashes the full A
+buffer (blake2b), so in-place mutation of a caller's array is a cache
+*miss*, never a stale hit. Callers that manage matrix identity
+themselves (a sensing-matrix registry) can skip hashing by passing a
+stable ``a_id`` on the request — that is the "id" half of the
+fingerprint; the content hash is the default.
+
+Eviction is plain LRU under a byte budget, newest entry always kept
+(a single over-budget entry still serves its own stream; it just evicts
+everything else). Hit/miss/evict counters feed ``SolveService.stats()``.
+
+Cached values must never be passed into *donating* jit programs — the
+XLA runtime would invalidate the resident buffer (engine.py wires
+donation only on the per-flush stacked temporaries for exactly this
+reason).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+__all__ = ["OperandCache", "fingerprint"]
+
+
+def fingerprint(arr) -> tuple:
+    """Content fingerprint of an operand array: (shape, dtype, blake2b).
+
+    Hashes the full buffer so mutated arrays never alias a cached entry;
+    at ~1 GB/s this is noise next to the pad+upload it saves (a bench-
+    scale 64x128 f32 A hashes in ~10us).
+    """
+    a = np.asarray(arr)
+    if not a.flags.c_contiguous:
+        a = np.ascontiguousarray(a)
+    digest = hashlib.blake2b(a, digest_size=16).hexdigest()
+    return (a.shape, str(a.dtype), digest)
+
+
+def _nbytes(value) -> int:
+    return sum(int(np.prod(np.shape(x))) * np.dtype(x.dtype).itemsize
+               for x in jax.tree_util.tree_leaves(value))
+
+
+class OperandCache:
+    """LRU map fingerprint-key -> device-resident operand (jax array or
+    pytree of them), bounded by a byte budget."""
+
+    def __init__(self, max_bytes: int = 256 << 20):
+        self.max_bytes = int(max_bytes)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def get(self, key: tuple, build):
+        """Return the cached value for ``key``, building (and admitting)
+        it via ``build()`` on a miss. Dropped entries release their device
+        buffers once no in-flight computation references them (jax
+        refcounting)."""
+        entry = self._entries.get(key)
+        if entry is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return entry[0]
+        self.misses += 1
+        value = build()
+        nb = _nbytes(value)
+        self._entries[key] = (value, nb)
+        self._bytes += nb
+        while self._bytes > self.max_bytes and len(self._entries) > 1:
+            _, (_, old_nb) = self._entries.popitem(last=False)
+            self._bytes -= old_nb
+            self.evictions += 1
+        return value
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._bytes = 0
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "entries": len(self._entries),
+            "bytes": self._bytes,
+            "max_bytes": self.max_bytes,
+        }

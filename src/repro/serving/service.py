@@ -36,9 +36,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+import time
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
@@ -55,10 +58,11 @@ from ..core.rate_alloc import dp_allocate, dp_allocate_col, stack_schedules
 from ..core.rate_distortion import RDModel
 from ..core.state_evolution import CSProblem
 from .batcher import Batcher
-from .buckets import (BucketKey, BucketPolicy, bucket_for, pad_batch_size,
-                      placement_for, round_up)
+from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
+                      bucket_for, pad_batch_size, placement_for, round_up)
+from .operand_cache import OperandCache, fingerprint
 
-__all__ = ["SolveRequest", "SolveResult", "SolveService"]
+__all__ = ["SolveRequest", "SolveResult", "SolveService", "PrewarmSpec"]
 
 
 @dataclasses.dataclass
@@ -97,6 +101,11 @@ class SolveRequest:
     bt_r_max: float = 6.0
     transport: str = "ecsq"               # "ecsq" | "block8" | "block4"
     layout: str | None = None             # None = auto | "row" | "col"
+    a_id: str | None = None               # stable caller-managed identity of
+    #                                       ``a`` for the operand cache; when
+    #                                       set it replaces the content hash
+    #                                       (the caller vouches the bytes
+    #                                       behind one id never change)
     request_id: int = -1                  # assigned at submit
 
     @property
@@ -152,6 +161,35 @@ class SolveResult:
         return bool(np.isfinite(self.rates).any())
 
 
+@dataclasses.dataclass(frozen=True)
+class PrewarmSpec:
+    """One entry of a prewarm menu (DESIGN.md §9): the structural shape of
+    expected traffic. ``SolveService.prewarm`` expands each spec into its
+    bucket x batch-width grid and AOT-compiles every program so steady-state
+    requests never block on XLA.
+
+    ``policy`` picks the compiled program family: "lossless"/"fixed"/"dp"
+    share the has_bt=False program, "bt" compiles the in-graph-controller
+    variant (and warms the BT table cache for (prior, snr_db) — streams
+    mixing BT and non-BT traffic should list both). "dp" additionally warms
+    the DP/RD allocation caches, which builds an RD table on first sight of
+    a prior — only list it when that cost belongs in startup.
+
+    ``batch_widths=None`` compiles the full ``batch_width_ladder`` of the
+    service policy; pass an explicit tuple to narrow startup cost."""
+
+    n: int
+    m: int
+    n_proc: int = 10
+    n_iter: int = 8
+    policy: str = "lossless"
+    transport: str = "ecsq"
+    layout: str | None = None
+    snr_db: float = 20.0
+    prior: BernoulliGauss = dataclasses.field(default_factory=BernoulliGauss)
+    batch_widths: tuple | None = None
+
+
 _TRANSPORTS = {
     "ecsq": EcsqTransport,
     "block8": lambda: BlockQuantTransport(bits=8, block=512),
@@ -182,7 +220,10 @@ class SolveService:
                  collect_xs: bool = False, rate_accounting: bool = True,
                  use_kernel: bool | None = None,
                  kernel_interpret: bool = False,
-                 mesh=None, mesh_axis: str = "data"):
+                 mesh=None, mesh_axis: str = "data",
+                 operand_cache_bytes: int = 256 << 20,
+                 singleton_fastpath: bool = True,
+                 donate: bool = True):
         self.policy = policy or BucketPolicy()
         self.collect_xs = collect_xs
         self.rate_accounting = rate_accounting
@@ -205,6 +246,20 @@ class SolveService:
         self._completed: list[SolveResult] = []
         self._pending: list[_Pending] = []
         self._next_id = 0
+        # hot-path state (DESIGN.md §9): device-resident A shards keyed by
+        # content fingerprint (0 bytes disables), plain-dispatch routing for
+        # lone row requests, and operand donation on the batched engines
+        self._opcache = (OperandCache(operand_cache_bytes)
+                         if operand_cache_bytes > 0 else None)
+        self.singleton_fastpath = singleton_fastpath
+        self.donate = donate
+        self._single_engines: dict = {}
+        self._singleton_dispatches = 0
+        self._prewarm_report: dict | None = None
+        self._prewarm_thread: threading.Thread | None = None
+        # guards id assignment and engine-map mutation against a background
+        # prewarm thread racing foreground submits
+        self._lock = threading.RLock()
 
     # -- request intake ------------------------------------------------------
 
@@ -284,15 +339,20 @@ class SolveService:
 
     # -- internals -----------------------------------------------------------
 
-    def _prepare(self, req: SolveRequest) -> SolveRequest:
+    def _prepare(self, req: SolveRequest,
+                 assign_id: bool = True) -> SolveRequest:
         if req.request_id >= 0:
             # template reuse: resubmitting an already-served request object
             # must not alias two queue entries onto one id (cold path)
             req = dataclasses.replace(req)
         # id assignment mutates in place: dataclasses.replace would copy the
-        # request row on the hot path for no benefit
-        req.request_id = self._next_id
-        self._next_id += 1
+        # request row on the hot path for no benefit; prewarm's dummy
+        # requests skip it so the id sequence stays a pure submission
+        # counter (callers index their own bookkeeping by it)
+        if assign_id:
+            with self._lock:
+                req.request_id = self._next_id
+                self._next_id += 1
         assert req.policy in ("lossless", "fixed", "dp", "bt"), req.policy
         assert req.transport in _TRANSPORTS, req.transport
         if req.transport != "ecsq":
@@ -336,21 +396,47 @@ class SolveService:
         # lives on the operands, and jit re-specializes the same callable
         ekey = (key if key.placement == "proc"
                 else dataclasses.replace(key, placement="local"))
-        eng = self._engines.get(ekey)
-        if eng is None:
-            cfg = EngineConfig(
-                n_proc=key.n_proc, n_iter=key.t_max,
-                use_kernel=self.use_kernel,
-                kernel_interpret=self.kernel_interpret,
-                collect_symbols=False, collect_xs=self.collect_xs,
-                layout=(ColumnPartition(n_inner=1) if key.layout == "col"
-                        else RowPartition()))
-            if ekey.placement == "proc":
-                transport = _SHARDED_TRANSPORTS[key.transport](self.mesh_axis)
-            else:
-                transport = _TRANSPORTS[key.transport]()
-            eng = AmpEngine(BernoulliGauss(), cfg, transport)
-            self._engines[ekey] = eng
+        with self._lock:
+            eng = self._engines.get(ekey)
+            if eng is None:
+                cfg = EngineConfig(
+                    n_proc=key.n_proc, n_iter=key.t_max,
+                    use_kernel=self.use_kernel,
+                    kernel_interpret=self.kernel_interpret,
+                    collect_symbols=False, collect_xs=self.collect_xs,
+                    layout=(ColumnPartition(n_inner=1) if key.layout == "col"
+                            else RowPartition()),
+                    # batched operands are per-flush temporaries -> donate;
+                    # the proc placement's jit donates only y (engine.py):
+                    # its A may be a cache-resident buffer
+                    donate=self.donate)
+                if ekey.placement == "proc":
+                    transport = _SHARDED_TRANSPORTS[key.transport](
+                        self.mesh_axis)
+                else:
+                    transport = _TRANSPORTS[key.transport]()
+                eng = AmpEngine(BernoulliGauss(), cfg, transport)
+                self._engines[ekey] = eng
+        return eng
+
+    def _single_engine(self, req: SolveRequest) -> AmpEngine:
+        """True-dims plain engine for the singleton fast path. Keyed on
+        everything ``_scan_fn`` closes over (the prior lives on the engine
+        here, unlike the het path where it rides as an operand)."""
+        skey = (req.n, req.m, req.n_proc, req.n_iter, req.transport,
+                req.prior)
+        with self._lock:
+            eng = self._single_engines.get(skey)
+            if eng is None:
+                cfg = EngineConfig(
+                    n_proc=req.n_proc, n_iter=req.n_iter,
+                    use_kernel=self.use_kernel,
+                    kernel_interpret=self.kernel_interpret,
+                    collect_symbols=False, collect_xs=self.collect_xs)
+                # donate=False: this path runs on cache-resident operands
+                eng = AmpEngine(req.prior, cfg,
+                                _TRANSPORTS[req.transport]())
+                self._single_engines[skey] = eng
         return eng
 
     def _dp_deltas(self, req: SolveRequest) -> np.ndarray:
@@ -393,36 +479,70 @@ class SolveService:
             self._bt_cache[(key, t_max)] = padded
         return padded
 
-    def _het_operands(self, key: BucketKey, batch: list):
-        """Pad one request group into the engine's het operands.
+    def _fingerprint(self, req: SolveRequest):
+        """Operand-cache identity of a request's A: the caller-vouched
+        ``a_id`` when set, else the content hash (in-place mutation of a
+        caller's array is then a miss, never a stale hit)."""
+        return req.a_id if req.a_id is not None else fingerprint(req.a)
 
-        Row buckets: a (B, P, mp_pad, n_pad) row shards + y (B, P, mp_pad).
-        Column buckets: a (B, P, m_pad, np_pad) column shards (each
-        processor's real columns padded within its own slice, mirroring
-        the row layout's per-shard row padding) + the shared y (B, m_pad).
-        """
-        p, mp_pad, n_pad, t_max = (key.n_proc, key.mp_pad, key.n_pad,
-                                   key.t_max)
+    def _pad_a_one(self, key: BucketKey, r: SolveRequest) -> np.ndarray:
+        """Host-side pad of one request's A into its bucket shard shape:
+        (P, mp_pad, n_pad) row / (P, m_pad, np_pad) col (docstring of
+        ``_het_operands`` for the padding semantics)."""
+        p, mp_pad, n_pad = key.n_proc, key.mp_pad, key.n_pad
+        if key.layout == "col":
+            buf = np.zeros((p, mp_pad, n_pad // p), np.float32)
+            buf[:, :r.m, :r.n // p] = split_problem_cols(
+                np.asarray(r.a, np.float32), p)
+        else:
+            mp = r.m // p
+            buf = np.zeros((p, mp_pad, n_pad), np.float32)
+            buf[:, :mp, :r.n] = np.asarray(r.a, np.float32).reshape(
+                p, mp, r.n)
+        return buf
+
+    def _a_slice(self, key: BucketKey, r: SolveRequest, eng: AmpEngine):
+        """Device-resident padded A shards for one request: built (pad +
+        dtype cast + upload) once per (fingerprint, bucket shard shape) and
+        reused across batches and streams. The cached buffer is never
+        donated (engine.py wires donation onto the stacked temporaries
+        only), so reuse is safe."""
+        ck = (key.layout, self._fingerprint(r), key.n_proc, key.mp_pad,
+              key.n_pad, eng.cfg.a_dtype)
+        build = lambda: jnp.asarray(self._pad_a_one(key, r),
+                                    eng.cfg.a_jdtype)
+        if self._opcache is None:
+            return build()
+        return self._opcache.get(ck, build)
+
+    def _a_batch(self, key: BucketKey, batch: list, eng: AmpEngine,
+                 use_cache: bool = True):
+        """Batch A operand: a device-side stack over cache-resident shards
+        (a pad slot repeating a real request hits the same entry), or the
+        legacy host-assembled numpy block when the cache is off —
+        including prewarm, whose all-zero dummies must not pollute it."""
+        if self._opcache is not None and use_cache:
+            return jnp.stack([self._a_slice(key, r, eng) for r in batch])
+        return np.stack([self._pad_a_one(key, r) for r in batch])
+
+    def _y_and_params(self, key: BucketKey, batch: list):
+        """Per-flush (small) operands: padded y and the per-instance
+        ``HetParams``. Unlike A these change with every request, so they
+        are host-built fresh and donated into the program."""
+        p, mp_pad, t_max = key.n_proc, key.mp_pad, key.t_max
         b = len(batch)
         is_col = key.layout == "col"
         if is_col:
-            np_pad = n_pad // p
-            a_b = np.zeros((b, p, mp_pad, np_pad), np.float32)
             y_b = np.zeros((b, mp_pad), np.float32)
         else:
-            a_b = np.zeros((b, p, mp_pad, n_pad), np.float32)
             y_b = np.zeros((b, p, mp_pad), np.float32)
         scheds, tacts, mreals, nreals = [], [], [], []
         eps, mus, sss, use_bt, tables = [], [], [], [], []
         for i, r in enumerate(batch):
             if is_col:
-                a_b[i, :, :r.m, :r.n // p] = split_problem_cols(
-                    np.asarray(r.a, np.float32), p)
                 y_b[i, :r.m] = np.asarray(r.y, np.float32)
             else:
                 mp = r.m // p
-                a_b[i, :, :mp, :r.n] = np.asarray(r.a, np.float32).reshape(
-                    p, mp, r.n)
                 y_b[i, :, :mp] = np.asarray(r.y, np.float32).reshape(p, mp)
             if r.policy in ("fixed", "dp"):
                 scheds.append(np.asarray(r.deltas, np.float32))
@@ -453,13 +573,28 @@ class SolveService:
             use_bt=np.asarray(use_bt),
             bt=stack_bt_tables(tables),
         )
-        return a_b, y_b, params, any(use_bt)
+        return y_b, params, any(use_bt)
+
+    def _het_operands(self, key: BucketKey, batch: list,
+                      use_cache: bool = True):
+        """Pad one request group into the engine's het operands.
+
+        Row buckets: a (B, P, mp_pad, n_pad) row shards + y (B, P, mp_pad).
+        Column buckets: a (B, P, m_pad, np_pad) column shards (each
+        processor's real columns padded within its own slice, mirroring
+        the row layout's per-shard row padding) + the shared y (B, m_pad).
+        """
+        a_b = self._a_batch(key, batch, self._engine(key), use_cache)
+        y_b, params, has_bt = self._y_and_params(key, batch)
+        return a_b, y_b, params, has_bt
 
     def _dispatch_bucket(self, key: BucketKey, reqs: list) -> _Pending:
         """Launch one bucket group on its placement; materialization is
         deferred to the returned ``_Pending.finalize``."""
         if key.placement == "proc":
             return self._dispatch_proc(key, reqs)
+        if len(reqs) == 1 and self._singleton_ok(key, reqs[0]):
+            return self._dispatch_singleton(key, reqs[0])
 
         b_real = len(reqs)
         b_pad = pad_batch_size(b_real, self.policy)
@@ -467,13 +602,17 @@ class SolveService:
             # the batch axis shards over the mesh: pad to a device multiple
             b_pad = round_up(b_pad, self.n_devices)
         # fill pad slots by repeating real requests (their results are
-        # dropped); keeps every instance numerically benign
+        # dropped); keeps every instance numerically benign — and on the
+        # cached path a pad slot is an operand-cache hit, not a rebuild
         batch = [reqs[i % b_real] for i in range(b_pad)]
-        a_b, y_b, params, has_bt = self._het_operands(key, batch)
+        eng = self._engine(key)
+        a_b = self._a_batch(key, batch, eng)
+        y_b, params, has_bt = self._y_and_params(key, batch)
         if key.placement == "data":
             shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
             a_b, y_b, params = jax.device_put((a_b, y_b, params), shard)
-        eng = self._engine(key)
+        # a_b/y_b are per-flush temporaries: the donating engine consumes
+        # them (the cached per-request shards behind the stack survive)
         x_outs = eng.dispatch_het(a_b, y_b, params, has_bt=has_bt)
 
         def finalize() -> list[SolveResult]:
@@ -483,17 +622,62 @@ class SolveService:
 
         return finalize
 
+    def _singleton_ok(self, key: BucketKey, r: SolveRequest) -> bool:
+        """Whether a lone request may skip batch padding + het-operand
+        assembly and run the plain true-dims ``dispatch_single`` program
+        (DESIGN.md §9). BT stays on the het path (its controller is the
+        in-graph het table machinery); col stays batched (no plain
+        single-dispatch entry point)."""
+        return (self.singleton_fastpath and key.placement == "local"
+                and key.layout == "row" and r.policy != "bt")
+
+    def _dispatch_singleton(self, key: BucketKey, r: SolveRequest) \
+            -> _Pending:
+        """Singleton fast path: true-dims solve on a plain engine, A from
+        the operand cache, schedule riding as the ``sched`` operand. No
+        bucket padding, no HetParams stack, no donation (A is
+        cache-resident)."""
+        eng = self._single_engine(r)
+        self._singleton_dispatches += 1
+        ck = ("single", self._fingerprint(r), r.n_proc,
+              eng.cfg.kernel_on, eng.cfg.a_dtype)
+        # _split row-splits + tile-aligns + casts; cache the result so a
+        # repeated-A stream pays it once
+        build = lambda: eng._split(np.zeros(r.m, np.float32), r.a)[0]
+        a_p = build() if self._opcache is None \
+            else self._opcache.get(ck, build)
+        p = r.n_proc
+        mp = r.m // p
+        y_p = np.asarray(r.y, np.float32).reshape(p, mp)
+        mp_pad = a_p.shape[1]
+        if mp_pad != mp:   # kernel-path tile alignment
+            y_p = np.pad(y_p, ((0, 0), (0, mp_pad - mp)))
+        if r.policy in ("fixed", "dp"):
+            sched = np.asarray(r.deltas, np.float32)
+        else:
+            sched = np.full(r.n_iter, np.inf, np.float32)
+        x_outs = eng.dispatch_single(a_p, y_p, r.m, r.n, sched=sched)
+
+        def finalize() -> list[SolveResult]:
+            return [self._result_one(key, r, eng.trace_of(x_outs),
+                                     None, 1)]
+
+        return finalize
+
     def _dispatch_proc(self, key: BucketKey, reqs: list) -> _Pending:
         """Processor-sharded placement: each request owns the whole mesh for
         one ``dispatch_sharded`` call (still padded to the bucket shape, so
-        the compile cache stays bounded)."""
+        the compile cache stays bounded). A rides from the operand cache —
+        for these mesh-sized matrices the once-per-fingerprint pad+upload
+        is the dominant saving; the sharded jit donates only y."""
         eng = self._engine(key)
         dispatched = []
         for r in reqs:
-            a_b, y_b, params, has_bt = self._het_operands(key, [r])
+            a_p = self._a_slice(key, r, eng)
+            y_b, params, has_bt = self._y_and_params(key, [r])
             hp = jax.tree.map(lambda v: np.asarray(v)[0], params)
             dispatched.append(eng.dispatch_sharded(
-                a_b[0], y_b[0], hp, self.mesh, has_bt=has_bt))
+                a_p, y_b[0], hp, self.mesh, has_bt=has_bt))
 
         def finalize() -> list[SolveResult]:
             return [self._result_one(key, r, eng.trace_of(x_outs), None, 1)
@@ -573,3 +757,127 @@ class SolveService:
         if req.layout == "col" and np.isfinite(rates[1:]).any():
             rates[0] = 0.0
         return rates
+
+    # -- AOT prewarm + observability (DESIGN.md §9) --------------------------
+
+    def _spec_request(self, spec: PrewarmSpec) -> SolveRequest:
+        """Dummy request with the spec's structural shape (zero operands:
+        compilation keys on avals, not values)."""
+        deltas = (np.full(spec.n_iter, np.inf, np.float32)
+                  if spec.policy == "fixed" else None)
+        return SolveRequest(
+            y=np.zeros(spec.m, np.float32),
+            a=np.zeros((spec.m, spec.n), np.float32),
+            prior=spec.prior, snr_db=spec.snr_db, n_proc=spec.n_proc,
+            n_iter=spec.n_iter, policy=spec.policy, deltas=deltas,
+            transport=spec.transport, layout=spec.layout)
+
+    def prewarm(self, menu, background: bool = False):
+        """AOT-compile the bucket x batch-width grid for a traffic menu of
+        ``PrewarmSpec``s, so steady-state requests never block on XLA.
+
+        Blocking by default (returns the report dict); with
+        ``background=True`` compilation runs on a daemon thread (returns
+        the ``Thread``; traffic may flow immediately and converges to
+        zero-compile as programs land — per-engine compile locks serialize
+        against foreground dispatches of the same program). The report is
+        surfaced on ``stats()["prewarm"]`` either way.
+
+        Dummy operands bypass the operand cache (zero-A entries would
+        poison it) and compiled programs key on operand avals, so runtime
+        traffic of the same structural shape reuses them exactly.
+        """
+        menu = list(menu)
+        if background:
+            th = threading.Thread(target=self._prewarm_run, args=(menu,),
+                                  name="solve-prewarm", daemon=True)
+            self._prewarm_thread = th
+            th.start()
+            return th
+        return self._prewarm_run(menu)
+
+    def _prewarm_run(self, menu: list) -> dict:
+        t0 = time.perf_counter()
+        programs, buckets = 0, set()
+        for spec in menu:
+            req = self._prepare(self._spec_request(spec), assign_id=False)
+            key = self._key_for(req)
+            buckets.add(str(key))
+            eng = self._engine(key)
+            if key.placement == "proc":
+                a_b, y_b, params, has_bt = self._het_operands(
+                    key, [req], use_cache=False)
+                hp = jax.tree.map(lambda v: np.asarray(v)[0], params)
+                eng.dispatch_sharded(a_b[0], y_b[0], hp, self.mesh,
+                                     has_bt=has_bt, compile_only=True)
+                programs += 1
+                continue
+            widths = spec.batch_widths
+            if widths is None:
+                widths = batch_width_ladder(
+                    self.policy,
+                    self.n_devices if key.placement == "data" else 1)
+            for w in widths:
+                w = pad_batch_size(min(int(w), self.policy.max_batch),
+                                   self.policy)
+                if key.placement == "data":
+                    w = round_up(w, self.n_devices)
+                a_b, y_b, params, has_bt = self._het_operands(
+                    key, [req] * w, use_cache=False)
+                if key.placement == "data":
+                    shard = NamedSharding(self.mesh,
+                                          PartitionSpec(self.mesh_axis))
+                    a_b, y_b, params = jax.device_put((a_b, y_b, params),
+                                                      shard)
+                eng.dispatch_het(a_b, y_b, params, has_bt=has_bt,
+                                 compile_only=True)
+                programs += 1
+            if self._singleton_ok(key, req):
+                seng = self._single_engine(req)
+                a_p, y_p = seng._split(req.y, req.a)
+                sched = (req.deltas if req.policy in ("fixed", "dp")
+                         else np.full(req.n_iter, np.inf, np.float32))
+                seng.dispatch_single(a_p, y_p, req.m, req.n, sched=sched,
+                                     compile_only=True)
+                programs += 1
+        report = {"programs": programs, "buckets": sorted(buckets),
+                  "seconds": time.perf_counter() - t0}
+        self._prewarm_report = report
+        return report
+
+    def compile_count(self) -> int:
+        """Total XLA compiles across every engine this service owns (het
+        bucket engines and singleton fast-path engines). Flat after
+        prewarm under steady-state traffic — the zero-recompile
+        invariant tests pin."""
+        with self._lock:
+            engines = (list(self._engines.values())
+                       + list(self._single_engines.values()))
+        return sum(e.compile_count for e in engines)
+
+    def stats(self) -> dict:
+        """Hot-path observability: operand-cache counters, per-bucket
+        compile counts, singleton fast-path traffic, per-bucket demand
+        (requests ever admitted), and the last prewarm report."""
+        with self._lock:
+            engines = list(self._engines.items())
+            singles = list(self._single_engines.items())
+        by_bucket = {}
+        for key, eng in engines:
+            label = (f"{key.layout}/{key.placement}/n{key.n_pad}"
+                     f"/mp{key.mp_pad}/p{key.n_proc}/t{key.t_max}"
+                     f"/{key.transport}")
+            by_bucket[label] = eng.compile_count
+        for (n, m, p, t, transport, _prior), eng in singles:
+            by_bucket[f"single/n{n}/m{m}/p{p}/t{t}/{transport}"] = \
+                eng.compile_count
+        return {
+            "operand_cache": (self._opcache.stats()
+                              if self._opcache is not None else None),
+            "compiles": {"total": sum(by_bucket.values()),
+                         "by_bucket": by_bucket},
+            "singleton_dispatches": self._singleton_dispatches,
+            "bucket_demand": {str(k): v
+                              for k, v in self._batcher.demand().items()},
+            "prewarm": self._prewarm_report,
+        }
