@@ -16,7 +16,12 @@ Measurements (DESIGN.md §5-§6, hot path §9):
     (compare req/s against a ``--devices 1`` run; ISSUE 3 acceptance:
     >=3x at 8 devices on a multi-core host), and
   * processor-sharded placement — one large single request whose P maps
-    onto the mesh axis, exact wire vs int8 compressed wire.
+    onto the mesh axis, exact wire vs int8 compressed wire, and
+  * measured wire bytes — a ``measure_wire`` bucket whose per-round
+    symbol streams are actually rANS-coded host-side (DESIGN.md §10):
+    measured payload vs the model entropy H_Q, bytes-on-wire /
+    time-on-air / energy columns, and (with ``--erasure``) the same load
+    over a lossy link under both recovery policies.
 
 Timing methodology (shared with ``bench_kernels.py``): explicit warmup
 first (compiles and cache fills excluded), then min over ``--reps``
@@ -254,6 +259,60 @@ def bench_col_bucket(n: int, m: int, p: int, t: int, b: int, reps: int,
     return dt, res[0].bucket.placement, mse
 
 
+def bench_wire(n: int, m: int, p: int, t: int, b: int, reps: int,
+               erasure: float):
+    """Measured-wire accounting (DESIGN.md §10): every request opts into
+    ``measure_wire``; the clean pass pins measured rANS payload against
+    the model entropy, the lossy pass (``erasure > 0``) reports the byte
+    cost of each recovery policy on the same masks."""
+    import numpy as np
+    from repro.serving import BucketPolicy, SolveService
+
+    _, _, reqs, s0s = make_load(n, m, p, t, b)
+    svc = SolveService(policy=BucketPolicy(max_batch=max(b, 1),
+                                           n_quantum=64, mp_quantum=8))
+
+    def run(rate, recovery):
+        wreqs = [dataclass_replace(r, measure_wire=True, erasure_rate=rate,
+                                   erasure_seed=i, recovery=recovery)
+                 for i, r in enumerate(reqs)]
+        svc.solve(wreqs)                   # warmup/compile
+        dt, res = best_of(lambda: svc.solve(wreqs), reps)
+        row = {
+            "seconds": dt,
+            "mse": float(np.mean([r.mse(s)
+                                  for r, s in zip(res, s0s)])),
+            "bytes_on_wire": float(np.mean([r.bytes_on_wire
+                                            for r in res])),
+            "payload_bytes": float(np.mean([r.payload_bytes
+                                            for r in res])),
+            "time_on_air_s": float(np.mean([r.time_on_air_s
+                                            for r in res])),
+            "energy_j": float(np.mean([r.energy_j for r in res])),
+        }
+        # delivered-rate model bytes (H_Q per element per processor) —
+        # the number the measured rANS payload must land within ~5% of;
+        # reported rates are on-the-wire, so undo the recovery factor
+        from repro.core.rate_alloc import erasure_rate_factors
+        _, _, wire_f = erasure_rate_factors(rate, recovery)
+        model = []
+        for r in res:
+            fin = np.isfinite(r.rates) & (r.rates > 0)
+            delivered = r.rates[fin].sum() / wire_f
+            lossless = float((~fin).sum()) * 32.0
+            model.append((delivered * p + lossless * p) * n / 8.0)
+        row["model_payload_bytes"] = float(np.mean(model))
+        row["payload_vs_model"] = (row["payload_bytes"]
+                                   / row["model_payload_bytes"])
+        return row
+
+    out = {"clean": run(0.0, "retransmit")}
+    if erasure > 0.0:
+        out["retransmit"] = run(erasure, "retransmit")
+        out["rate_up"] = run(erasure, "rate_up")
+    return out
+
+
 def dataclass_replace(req, **kw):
     import dataclasses
     return dataclasses.replace(req, request_id=-1, **kw)
@@ -267,6 +326,9 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="force this many host-platform devices (mesh "
                          "placements activate above 1)")
+    ap.add_argument("--erasure", type=float, default=0.0,
+                    help="packet-drop rate for the measured-wire section "
+                         "(runs both recovery policies at this rate)")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",
                     help="skip SolveService.prewarm (measures cold-ish "
                          "services; compiles still leave the timed region "
@@ -383,6 +445,23 @@ def main():
     report["col_bucket"] = {
         "n": ncb, "m": mcb, "batch": bcb, "placement": placement_cb,
         "req_s": bcb / dt_cb, "seconds": dt_cb, "mse": mse_cb}
+
+    # measured wire bytes (DESIGN.md §10): rANS payload vs model entropy,
+    # plus the lossy-link byte cost per recovery policy at --erasure.
+    # Config is smoke-independent: byte counts are deterministic, so the
+    # CI smoke run compares directly against the committed full baseline
+    bwire = 8
+    wire = bench_wire(n, m, p, t, bwire, max(2, reps // 2), args.erasure)
+    print(f"\nmeasured wire (B={bwire}, erasure={args.erasure}):")
+    print(f"{'variant':>12s} {'payload B':>10s} {'model B':>10s} "
+          f"{'ratio':>6s} {'wire B':>10s} {'energy J':>9s} {'mse':>9s}")
+    for name, row in wire.items():
+        print(f"{name:>12s} {row['payload_bytes']:10.0f} "
+              f"{row['model_payload_bytes']:10.0f} "
+              f"{row['payload_vs_model']:6.3f} {row['bytes_on_wire']:10.0f} "
+              f"{row['energy_j']:9.2e} {row['mse']:9.2e}")
+    report["wire"] = {"n": n, "m": m, "p": p, "t": t, "batch": bwire,
+                      "erasure": args.erasure, **wire}
 
     if args.json:
         with open(args.json, "w") as f:

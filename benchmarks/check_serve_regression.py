@@ -4,6 +4,9 @@ Compares a freshly measured ``BENCH_serve.json`` against the committed
 baseline and prints a GitHub Actions ``::warning::`` annotation when the
 stream p50 latency regresses by more than ``--threshold`` (default 25%)
 or a batched speedup drops below the baseline by the same margin.
+Measured wire bytes (the ``wire`` section) get a tighter 10% band:
+byte counts are deterministic at fixed config — drift there is an
+accounting change, not runner jitter.
 
 Always exits 0: CI wall-clock on shared runners is jittery, so this
 surfaces drift on the PR without turning noise into a red build. The
@@ -62,6 +65,23 @@ def main() -> int:
                 f"{b_sp[b]:.2f}x ({rel:+.0%})")
         if rel < -args.threshold:
             warnings.append(f"batched speedup regressed: {line}")
+        else:
+            print(f"serve-bench: {line}")
+
+    b_wire, f_wire = base.get("wire") or {}, fresh.get("wire") or {}
+    same_cfg = all(b_wire.get(k) == f_wire.get(k)
+                   for k in ("n", "m", "p", "t", "batch", "erasure"))
+    for variant in ("clean", "retransmit", "rate_up"):
+        bb = (b_wire.get(variant) or {}).get("bytes_on_wire")
+        fb = (f_wire.get(variant) or {}).get("bytes_on_wire")
+        if not (same_cfg and bb and fb):
+            continue
+        rel = fb / bb - 1.0
+        line = (f"{variant} bytes-on-wire {fb:.0f} vs baseline {bb:.0f} "
+                f"({rel:+.0%})")
+        if abs(rel) > 0.10:
+            warnings.append(f"wire bytes drifted beyond 10% at fixed "
+                            f"config (accounting change?): {line}")
         else:
             print(f"serve-bench: {line}")
 

@@ -78,7 +78,7 @@ from .rate_distortion import RDModel
 from .state_evolution import CSProblem, se_trajectory_col
 
 __all__ = [
-    "AmpEngine", "EngineConfig", "EngineTrace",
+    "AmpEngine", "EngineConfig", "EngineTrace", "ErasureSpec",
     "RowPartition", "ColumnPartition",
     "Transport", "ExactFusion", "EcsqTransport", "BlockQuantTransport",
     "PsumFusion", "CompressedPsumTransport",
@@ -170,6 +170,58 @@ def amp_gc_step(f, denoise_var, prior: BernoulliGauss, kappa):
 
 
 # ---------------------------------------------------------------------------
+# erasure (lossy-wire realism; DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ErasureSpec:
+    """Per-round, per-processor fusion-packet loss model.
+
+    ``sample_mask`` draws the concrete (T, P) 0/1 drop schedule host-side;
+    the engine threads it through the solve as an ordinary scan operand,
+    so erasure is *data*, not a recompile — one erasure-enabled program
+    serves every loss realization of its shape.
+
+    ``bernoulli``: each packet lost i.i.d. with probability ``rate``.
+    ``gilbert``: two-state Gilbert-Elliott channel per processor — a bad
+    state drops every packet, mean bad-state sojourn ``burst_len`` rounds,
+    transition probabilities chosen so the stationary loss probability is
+    ``rate`` (p_bg = 1/burst_len, p_gb = rate*p_bg/(1-rate), clipped to
+    1). Chains start in their stationary distribution so the first round
+    is already representative.
+    """
+
+    rate: float = 0.0
+    model: str = "bernoulli"          # "bernoulli" | "gilbert"
+    burst_len: float = 4.0            # gilbert: mean bad-state rounds
+    seed: int = 0
+
+    def __post_init__(self):
+        assert 0.0 <= self.rate < 1.0, self.rate
+        assert self.model in ("bernoulli", "gilbert"), self.model
+        assert self.burst_len >= 1.0, self.burst_len
+
+    def sample_mask(self, n_iter: int, n_proc: int,
+                    seed: int | None = None) -> np.ndarray:
+        """Draw a (n_iter, n_proc) float32 drop mask (1 = packet lost)."""
+        rng = np.random.default_rng(self.seed if seed is None else seed)
+        if self.rate == 0.0:
+            return np.zeros((n_iter, n_proc), np.float32)
+        if self.model == "bernoulli":
+            return (rng.random((n_iter, n_proc))
+                    < self.rate).astype(np.float32)
+        p_bg = 1.0 / self.burst_len
+        p_gb = min(self.rate * p_bg / (1.0 - self.rate), 1.0)
+        bad = rng.random(n_proc) < self.rate
+        mask = np.zeros((n_iter, n_proc), np.float32)
+        for t in range(n_iter):
+            mask[t] = bad
+            flip = rng.random(n_proc)
+            bad = np.where(bad, flip >= p_bg, flip < p_gb)
+        return mask
+
+
+# ---------------------------------------------------------------------------
 # transports
 # ---------------------------------------------------------------------------
 
@@ -182,17 +234,42 @@ class Transport(Protocol):
     denoiser variance injected by compression (the paper's P*sigma_Q^2
     accounting) and ``symbols`` the per-processor quantizer indices for
     empirical-rate accounting (all-zeros when not applicable).
+
+    ``drop`` is the erasure/straggler mask: a per-processor (P,) 0/1
+    vector for the emulated transports (survivor rescale via
+    ``_erasure_rescale``), a per-device scalar for the device collectives
+    (``_drop_rescale``). ``None`` (emulated only) compiles the drop-free
+    program — byte-identical to the pre-erasure engine.
     """
 
-    def fuse(self, f_p, delta): ...  # pragma: no cover - protocol
+    def fuse(self, f_p, delta, drop=None): ...  # pragma: no cover - protocol
+
+
+def _erasure_rescale(f_q, extra_per, drop):
+    """Emulated counterpart of ``_drop_rescale``: per-processor erasure of
+    the row-layout fusion packets. ``drop`` is a (P,) 0/1 mask; survivors
+    are rescaled by P/k so the fusion stays an unbiased estimate of the
+    full sum, and their embedded quantization noise (``extra_per`` per
+    delivered packet) amplifies by the same scale^2 — exactly the noise
+    bookkeeping the erasure-extended SE integrates over k
+    (``state_evolution.erasure_amplification``)."""
+    keep = 1.0 - drop
+    n_surv = jnp.maximum(jnp.sum(keep), 1.0)
+    scale = f_q.shape[0] / n_surv
+    f = jnp.sum(f_q * keep[:, None], axis=0) * scale
+    extra = extra_per * n_surv * scale**2
+    return f, extra
 
 
 @dataclasses.dataclass(frozen=True)
 class ExactFusion:
     """Lossless fusion (centralized AMP / the paper's 32-bit baseline)."""
 
-    def fuse(self, f_p, delta):
-        return jnp.sum(f_p, axis=0), jnp.zeros(()), jnp.zeros_like(f_p)
+    def fuse(self, f_p, delta, drop=None):
+        if drop is None:
+            return jnp.sum(f_p, axis=0), jnp.zeros(()), jnp.zeros_like(f_p)
+        f, extra = _erasure_rescale(f_p, jnp.zeros(()), drop)
+        return f, extra, jnp.zeros_like(f_p)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,14 +282,18 @@ class EcsqTransport:
     — both computed by the frontends from the returned trace.
     """
 
-    def fuse(self, f_p, delta):
+    def fuse(self, f_p, delta, drop=None):
         n_proc = f_p.shape[0]
         lossless = ~jnp.isfinite(delta)
         safe_delta = jnp.where(lossless, 1.0, delta)
         q = quantize_midtread(f_p, safe_delta)
         f_q = jnp.where(lossless, f_p, dequantize_midtread(q, safe_delta))
-        f = jnp.sum(f_q, axis=0)
-        extra = jnp.where(lossless, 0.0, n_proc * safe_delta**2 / 12.0)
+        if drop is None:
+            f = jnp.sum(f_q, axis=0)
+            extra = jnp.where(lossless, 0.0, n_proc * safe_delta**2 / 12.0)
+            return f, extra, q
+        per = jnp.where(lossless, 0.0, safe_delta**2 / 12.0)
+        f, extra = _erasure_rescale(f_q, per, drop)
         return f, extra, q
 
 
@@ -233,13 +314,17 @@ class BlockQuantTransport:
     def qc(self) -> QuantConfig:
         return QuantConfig(bits=self.bits, block=self.block)
 
-    def fuse(self, f_p, delta):
+    def fuse(self, f_p, delta, drop=None):
         n_proc, n = f_p.shape
         qc = self.qc
         q, scale = quantize_blocks(f_p, qc)
         deq = dequantize_blocks(q, scale, qc, orig_len=n)
-        f = jnp.sum(deq, axis=0)
-        extra = quant_noise_var(scale, qc) * n_proc
+        if drop is None:
+            f = jnp.sum(deq, axis=0)
+            extra = quant_noise_var(scale, qc) * n_proc
+        else:
+            f, extra = _erasure_rescale(deq, quant_noise_var(scale, qc),
+                                        drop)
         return f, extra, q[..., :n].astype(jnp.float32)
 
 
@@ -384,7 +469,9 @@ class BTTables(NamedTuple):
     eps: jnp.ndarray          # () prior
     mu_s: jnp.ndarray         # ()
     sigma_s2: jnp.ndarray     # ()
-    r_max: jnp.ndarray        # ()
+    r_max: jnp.ndarray        # () delivered-rate cap (erasure-adjusted)
+    amp: jnp.ndarray          # () erasure survivor-rescale amplification
+                              #    E[P/max(k,1)]; exactly 1.0 when lossless
 
     _dummies = {}  # class-level memo for dummy tables (not a field)
 
@@ -414,6 +501,7 @@ class BTTables(NamedTuple):
             cap_lsq2=jnp.zeros(512, jnp.float32),
             sigma_e2=f(1e-3), inv_kappa=f(1.0), n_proc=f(1.0),
             eps=f(0.1), mu_s=f(0.0), sigma_s2=f(1.0), r_max=f(6.0),
+            amp=f(1.0),
         )
         cls._dummies[key] = tb
         return tb
@@ -425,7 +513,9 @@ def _bt_mmse(tb: BTTables, v):
 
 
 def _bt_predict_next(tb: BTTables, sigma2_d, sigma_q2):
-    eff = sigma2_d + tb.n_proc * sigma_q2
+    # tb.amp is exactly 1.0 on a lossless link, so the multiply is a
+    # bit-exact no-op there (IEEE: 1.0 * x == x)
+    eff = tb.amp * (sigma2_d + tb.n_proc * sigma_q2)
     return tb.sigma_e2 + _bt_mmse(tb, eff) * tb.inv_kappa
 
 
@@ -553,15 +643,23 @@ class BTRateControl:
     def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
                  c_ratio: float = 1.05, r_max: float = 6.0,
                  rate_model: str = "ecsq", rd: RDModel | None = None,
-                 mmse_fn=None, n_s2_grid: int = 25, n_u_grid: int = 61):
+                 mmse_fn=None, n_s2_grid: int = 25, n_u_grid: int = 61,
+                 erasure_rate: float = 0.0, recovery: str = "retransmit"):
         host = BTController(prob, n_proc, n_iter, c_ratio, r_max,
-                            rate_model, rd, mmse_fn)
+                            rate_model, rd, mmse_fn,
+                            erasure_rate=erasure_rate, recovery=recovery)
         self.host = host
         self.prob = prob
         self.n_proc = n_proc
         self.n_iter = n_iter
         self.c_ratio = c_ratio
         self.r_max = r_max
+        self.erasure_rate = erasure_rate
+        self.recovery = recovery
+        # delivered-rate cap under the recovery policy (== r_max when
+        # lossless); the in-graph tables work in delivered-rate space and
+        # the serving layer applies host._wire_f for wire accounting
+        eff_r_max = host._r_cap
 
         # (1) MMSE interp table — same grid as make_mmse_interp, evaluated
         # through the host controller's own mmse_fn so both agree.
@@ -608,7 +706,7 @@ class BTRateControl:
             lo, hi = log2u_grid[0], log2u_grid[-1]
             for _ in range(60):
                 mid = 0.5 * (lo + hi)
-                if g_row(mid) - mid > r_max:
+                if g_row(mid) - mid > eff_r_max:
                     lo = mid
                 else:
                     hi = mid
@@ -629,7 +727,7 @@ class BTRateControl:
             sigma_e2=f32(prob.sigma_e2), inv_kappa=f32(1.0 / prob.kappa),
             n_proc=f32(float(n_proc)), eps=f32(prob.prior.eps),
             mu_s=f32(prob.prior.mu_s), sigma_s2=f32(prob.prior.sigma_s**2),
-            r_max=f32(r_max),
+            r_max=f32(eff_r_max), amp=f32(host._amp),
         )
 
     def delta_for(self, t, sigma2_hat):
@@ -655,14 +753,16 @@ class ColBTTables(NamedTuple):
     targets: jnp.ndarray      # (S,) c_ratio * tau_C^{s} (lossless column SE)
     log2u_grid: jnp.ndarray   # (n_u,) rate-table axis
     hq_tab: jnp.ndarray       # (n_u,) H_Q(u) of the unit Gaussian
-    u_cap: jnp.ndarray        # () log2 u achieving rate r_max
+    u_cap: jnp.ndarray        # () log2 u achieving the delivered-rate cap
     sigma_e2: jnp.ndarray     # () problem scalars -------------------
     inv_kappa: jnp.ndarray    # ()
     n_proc: jnp.ndarray       # () float
     eps: jnp.ndarray          # () prior
     mu_s: jnp.ndarray         # ()
     sigma_s2: jnp.ndarray     # ()
-    r_max: jnp.ndarray        # ()
+    r_max: jnp.ndarray        # () delivered-rate cap (erasure-adjusted)
+    surv: jnp.ndarray         # () survival probability 1 - erasure_rate;
+                              #    exactly 1.0 on a lossless link
 
     _dummies = {}  # class-level memo for dummy tables (not a field)
 
@@ -682,6 +782,7 @@ class ColBTTables(NamedTuple):
             hq_tab=jnp.ones(n_u, jnp.float32),
             u_cap=f(0.0), sigma_e2=f(1e-3), inv_kappa=f(1.0), n_proc=f(1.0),
             eps=f(0.1), mu_s=f(0.0), sigma_s2=f(1.0), r_max=f(6.0),
+            surv=f(1.0),
         )
         cls._dummies[key] = tb
         return tb
@@ -711,9 +812,14 @@ def col_bt_delta_for(tb: ColBTTables, t, v_prev):
     v_r = jnp.maximum(sm - d, 1e-30) * tb.inv_kappa / tb.n_proc
     sd_r = jnp.sqrt(v_r)
 
-    base = tb.sigma_e2 + d * tb.inv_kappa
+    # erasure reset semantics (tb.surv == 1.0 is a bit-exact no-op): an
+    # erased contribution leaves its block at x = 0, so the expected block
+    # MSE entering the round is surv*d + (1-surv)*E[S0^2], and only the
+    # surviving fraction injects quantization noise onto g
+    d_in = tb.surv * d + (1.0 - tb.surv) * sm
+    base = tb.sigma_e2 + d_in * tb.inv_kappa
     target = tb.targets[t]
-    sq2_adm = jnp.maximum(target - base, 0.0) / tb.n_proc
+    sq2_adm = jnp.maximum(target - base, 0.0) / (tb.n_proc * tb.surv)
     sq2_cap = (jnp.exp2(tb.u_cap) * sd_r) ** 2 / 12.0
     # the cap binds when the admissible bin is finer than r_max affords
     sq2 = jnp.minimum(jnp.maximum(sq2_adm, sq2_cap), v_r)
@@ -740,33 +846,42 @@ class ColumnBTRateControl:
 
     def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
                  c_ratio: float = 1.05, r_max: float = 6.0,
-                 n_inner: int = 1, mmse_fn=None, n_u_grid: int = 256):
+                 n_inner: int = 1, mmse_fn=None, n_u_grid: int = 256,
+                 erasure_rate: float = 0.0, recovery: str = "retransmit"):
         assert n_inner == 1, \
             "in-graph column BT tracks the measured plug-in, which pins " \
             "the block MSE only at n_inner=1; use dp_allocate_col for " \
             "multi-inner-round rate schedules"
         from .denoisers import make_mmse_interp
+        from .rate_alloc import erasure_rate_factors
         self.prob = prob
         self.n_proc = n_proc
         self.n_iter = n_iter
         self.n_inner = n_inner
         self.c_ratio = c_ratio
         self.r_max = r_max
+        self.erasure_rate = erasure_rate
+        self.recovery = recovery
         self.mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
+        budget_f, boost, wire_f = erasure_rate_factors(erasure_rate, recovery)
+        self._wire_f = wire_f
+        # delivered-rate cap under the recovery policy (== r_max lossless)
+        eff_r_max = r_max * budget_f * boost
 
         grid_v = np.geomspace(1e-9, 1e3, 400)
         grid_m = np.maximum(np.asarray(self.mmse_fn(grid_v), np.float64),
                             1e-300)
 
         tau_c, _ = se_trajectory_col(prob, n_proc, n_iter, n_inner,
-                                     mmse_fn=self.mmse_fn)
+                                     mmse_fn=self.mmse_fn,
+                                     erasure_rate=erasure_rate)
         targets = np.asarray(c_ratio * tau_c, np.float32)
 
         log2u_grid = np.linspace(-12.0, 5.0, n_u_grid)
         unit = GaussMixture(w=(1.0,), mu=(0.0,), var=(1.0,))
         hq = ecsq_entropy(2.0 ** log2u_grid, unit)
-        # H_Q(u) is strictly decreasing: invert for the r_max bin
-        u_cap = float(np.interp(r_max, hq[::-1], log2u_grid[::-1]))
+        # H_Q(u) is strictly decreasing: invert for the cap-rate bin
+        u_cap = float(np.interp(eff_r_max, hq[::-1], log2u_grid[::-1]))
 
         f32 = lambda v: jnp.asarray(v, jnp.float32)
         self.tables = ColBTTables(
@@ -776,7 +891,7 @@ class ColumnBTRateControl:
             sigma_e2=f32(prob.sigma_e2), inv_kappa=f32(1.0 / prob.kappa),
             n_proc=f32(float(n_proc)), eps=f32(prob.prior.eps),
             mu_s=f32(prob.prior.mu_s), sigma_s2=f32(prob.prior.sigma_s**2),
-            r_max=f32(r_max),
+            r_max=f32(eff_r_max), surv=f32(1.0 - erasure_rate),
         )
 
     def delta_for(self, t, v_prev):
@@ -861,6 +976,12 @@ class HetParams(NamedTuple):
     sigma_s: jnp.ndarray   # () f32 prior std
     use_bt: jnp.ndarray    # () bool: BT controller vs fixed schedule
     bt: BTTables           # stacked in-graph BT tables (dummy when !use_bt)
+    drop: jnp.ndarray | None = None
+                           # (T, P) erasure mask, 1 = fusion packet lost
+                           # (sharded placement: (T, n_dev), replicated).
+                           # None is an *empty pytree node*, so drop-free
+                           # batches keep the pre-erasure operand avals
+                           # and programs byte-identical.
 
 
 @dataclasses.dataclass
@@ -895,6 +1016,10 @@ class AmpEngine:
             controller = FixedSchedule(np.full(cfg.n_iter, np.inf))
         self.controller = controller
         self._jit_cache: dict = {}
+        # program-builder cache lock: builders nest (solve_many's vmap
+        # build calls _scan_fn), hence re-entrant. Background prewarm and
+        # foreground flush() race these dicts otherwise — see _cached.
+        self._build_lock = threading.RLock()
         # AOT executable cache (DESIGN §9): (program key, operand-aval key)
         # -> jax Compiled. Owning the cache (instead of leaning on jit's
         # internal one) makes compiles *observable* — ``compile_count`` is
@@ -951,6 +1076,24 @@ class AmpEngine:
             return ex
         return ex(*args)
 
+    def _cached(self, key, build):
+        """Double-checked admission into the jit-program cache.
+
+        Every program builder routes here so a background ``prewarm``
+        thread and a foreground dispatch can never observe a half-built
+        entry, build the same program twice, or drop each other's insert
+        (plain ``if key not in dict`` admission loses one of two racing
+        builds). The lock is re-entrant because builders nest — the
+        vmapped solve builds wrap ``_scan_fn``/``_col_scan_fn``."""
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            with self._build_lock:
+                fn = self._jit_cache.get(key)
+                if fn is None:
+                    fn = build()
+                    self._jit_cache[key] = fn
+        return fn
+
     # -- shared iteration body ----------------------------------------------
 
     def _local(self, x, z_p, onsager, a_p, y_p, m_eff=None, axis=None):
@@ -982,8 +1125,11 @@ class AmpEngine:
         return z_new, f_p, sigma2_hat
 
     def _fuse(self, f_p, delta, drop=None):
-        """Transport dispatch: device-collective transports take the extra
-        sharded ``drop`` operand, emulated transports do not."""
+        """Transport dispatch. ``drop`` None compiles the drop-free
+        program (emulated transports only — byte-identical to the
+        pre-erasure engine); non-None it is the erasure/straggler mask:
+        per-device scalar for device-collective transports, per-processor
+        (P,) for the emulated ones."""
         if drop is None:
             assert not hasattr(self.transport, "axis"), \
                 f"{type(self.transport).__name__} is a device-collective " \
@@ -1001,7 +1147,13 @@ class AmpEngine:
 
     def _body(self, carry, xs_t, a_p, y_p, kappa, axis=None, m_eff=None):
         if axis is None:
-            (t, sched_delta), drop = xs_t, None
+            # erasure-enabled emulated programs thread a (P,) drop mask as
+            # a third scan operand; the 2-tuple form is the drop-free
+            # program, byte-identical to the pre-erasure engine
+            if len(xs_t) == 3:
+                t, sched_delta, drop = xs_t
+            else:
+                (t, sched_delta), drop = xs_t, None
         else:
             t, sched_delta, drop = xs_t
         x, z_p, onsager = carry
@@ -1144,12 +1296,50 @@ class AmpEngine:
         transports (0 -> 0) and the v_hat sum are unaffected.
         """
         kern = self.cfg.kernel_on
+        er_keep = None
+        if drop is not None:
+            # Column erasure is a *reset*, not a rescale (DESIGN.md §10):
+            # an erased contribution leaves its whole signal block
+            # unexplained in the fused residual, so zeroing the block's
+            # estimate before forming r_p is the only self-consistent
+            # round — r_p vanishes exactly, the inner stage restarts the
+            # block from x = 0 against the fused residual, and the next
+            # round re-fuses it in full. A survivor rescale would be both
+            # biased (the r_p are independent zero-mean blocks, not
+            # estimates of r/P) and higher-variance than zeroing. The
+            # boundary Onsager coefficient scales with the surviving
+            # fraction: an erased block's jump correction never crossed
+            # the wire.
+            er_keep = 1.0 - drop
+            if axis is None:
+                x = x * er_keep[:, None]
+                coef = (coef * jnp.mean(er_keep)
+                        if self.cfg.layout.carry_fused else coef * er_keep)
+                # the emulated transports' row-style survivor rescale must
+                # not trigger on the already-zeroed contributions
+                drop = None
+            else:
+                x = x * er_keep
+                if self.cfg.layout.carry_fused:
+                    coef = coef * (lax.psum(er_keep, axis)
+                                   / axis_size(axis))
+                else:
+                    coef = coef * er_keep
+                # likewise neutralize the device collectives' rescale
+                drop = drop * 0.0
         if kern:
             r_p = col_residual(a_cp, x, use_pallas=True,
                                interpret=self.cfg.kernel_interpret)
         else:
             r_p = jnp.einsum("pmn,pn->pm", a_cp.astype(jnp.float32), x)
         r, extra, syms = self._fuse(r_p, delta, drop)
+        if er_keep is not None:
+            # only the delivered packets inject quantization noise (an
+            # erased processor's zero block quantizes to exactly zero)
+            if axis is None:
+                extra = extra * (jnp.sum(er_keep) / r_p.shape[0])
+            else:
+                extra = extra * (lax.psum(er_keep, axis) / axis_size(axis))
         g = y - r
         # boundary Onsager correction sum_q c_q z_q^last (ColumnPartition
         # docstring); scalar * previous-g on the n_inner == 1 fast path
@@ -1192,7 +1382,10 @@ class AmpEngine:
         a measured variance to act on).
         """
         if axis is None:
-            (s, sched_delta), drop = xs_t, None
+            if len(xs_t) == 3:
+                s, sched_delta, drop = xs_t
+            else:
+                (s, sched_delta), drop = xs_t, None
         else:
             s, sched_delta, drop = xs_t
         x, mem, coef, v_prev = carry
@@ -1217,38 +1410,48 @@ class AmpEngine:
 
     # -- compiled entry points ----------------------------------------------
 
-    def _scan_fn(self, m: int, n: int):
+    def _scan_fn(self, m: int, n: int, erasure: bool = False):
         """Build (once per shape) the jitted full-solve scan. ``m``/``n``
-        are the *true* problem dims; operands may arrive tile-padded."""
-        key = ("scan", m, n)
-        if key not in self._jit_cache:
+        are the *true* problem dims; operands may arrive tile-padded.
+        ``erasure`` programs take a (T, P) drop mask as a fourth operand
+        (threaded as a third scan input); the drop-free program stays
+        byte-identical to the pre-erasure engine."""
+
+        def build():
             cfg, kappa = self.cfg, m / n
 
-            def solve_fn(a_p, y_p, sched):
+            def solve_core(a_p, y_p, sched, drops=None):
                 init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
                         jnp.zeros(()))
                 body = lambda c, xs: self._body(c, xs, a_p, y_p, kappa,
                                                 m_eff=jnp.float32(m))
-                (x, _, _), outs = jax.lax.scan(
-                    body, init, (jnp.arange(cfg.n_iter), sched))
+                xs = (jnp.arange(cfg.n_iter), sched)
+                if drops is not None:
+                    xs = xs + (drops,)
+                (x, _, _), outs = jax.lax.scan(body, init, xs)
                 return x, outs
 
-            self._jit_cache[key] = jax.jit(solve_fn)
-        return self._jit_cache[key]
+            if erasure:
+                return jax.jit(lambda a_p, y_p, sched, drops:
+                               solve_core(a_p, y_p, sched, drops))
+            return jax.jit(solve_core)
+
+        return self._cached(("scan", m, n, erasure), build)
 
     def _step_fns(self, m: int, n: int):
         """Jitted single-iteration (LC, GC) pair for host-loop mode — the
         same body as the scan, sliced at the LC/GC boundary so an online
         host-side controller can observe sigma_hat_{t,D}^2."""
-        key = ("step", m, n)
-        if key not in self._jit_cache:
+
+        def build():
             kappa = m / n
             local = jax.jit(lambda x, z_p, ons, a_p, y_p: self._local(
                 x, z_p, ons, a_p, y_p, m_eff=jnp.float32(m)))
             gc = jax.jit(lambda f_p, s2, delta: self._gc(f_p, s2, delta,
                                                          kappa))
-            self._jit_cache[key] = (local, gc)
-        return self._jit_cache[key]
+            return (local, gc)
+
+        return self._cached(("step", m, n), build)
 
     def _split(self, y, a_mat):
         """Row-split (A, y); on the kernel path, tile-align once here —
@@ -1268,30 +1471,46 @@ class AmpEngine:
             a_cp, y = pad_col_shards(a_cp, y)
         return jnp.asarray(a_cp, self.cfg.a_jdtype), jnp.asarray(y)
 
-    def _col_scan_fn(self, m: int, n: int):
-        """Build (once per shape) the jitted full-solve column scan."""
-        key = ("col", m, n)
-        if key not in self._jit_cache:
+    def _col_scan_fn(self, m: int, n: int, erasure: bool = False):
+        """Build (once per shape) the jitted full-solve column scan.
+        ``erasure`` as in ``_scan_fn`` (mask shape (T, P); column reset
+        semantics — ``_col_round``)."""
+
+        def build():
             cfg = self.cfg
             p = cfg.n_proc
 
-            def solve_fn(a_cp, y, sched):
+            def solve_core(a_cp, y, sched, drops=None):
                 np_ = a_cp.shape[2]
                 init = self._col_init(p, np_, y, jnp.sum(y * y) / m)
                 body = lambda c, xs: self._col_body(c, xs, a_cp, y,
                                                     jnp.float32(m))
-                (x, _, _, _), outs = jax.lax.scan(
-                    body, init, (jnp.arange(cfg.n_iter), sched))
+                xs = (jnp.arange(cfg.n_iter), sched)
+                if drops is not None:
+                    xs = xs + (drops,)
+                (x, _, _, _), outs = jax.lax.scan(body, init, xs)
                 return x.reshape(-1), outs
 
-            self._jit_cache[key] = jax.jit(solve_fn)
-        return self._jit_cache[key]
+            if erasure:
+                return jax.jit(lambda a_cp, y, sched, drops:
+                               solve_core(a_cp, y, sched, drops))
+            return jax.jit(solve_core)
 
-    def _solve_col(self, y, a_mat) -> EngineTrace:
+        return self._cached(("col", m, n, erasure), build)
+
+    def _solve_col(self, y, a_mat, drop_sched=None) -> EngineTrace:
         self._check_col_controller()
         m, n = np.shape(a_mat)             # true dims; _split_col may pad M
         a_cp, yj = self._split_col(y, a_mat)
-        x, outs = self._col_scan_fn(m, n)(a_cp, yj, self._sched_operand())
+        if drop_sched is None:
+            x, outs = self._col_scan_fn(m, n)(a_cp, yj,
+                                              self._sched_operand())
+        else:
+            drop_sched = np.asarray(drop_sched, np.float32)
+            assert drop_sched.shape == (self.cfg.n_iter, self.cfg.n_proc), \
+                drop_sched.shape
+            x, outs = self._col_scan_fn(m, n, erasure=True)(
+                a_cp, yj, self._sched_operand(), jnp.asarray(drop_sched))
         return self._trace(x, outs)
 
     def _solve_many_col(self, ys, a_mats) -> EngineTrace:
@@ -1312,12 +1531,13 @@ class AmpEngine:
             a_b, ys = pad_col_shards(a_b, ys)
         a_b = jnp.asarray(a_b, self.cfg.a_jdtype)
         y_b = jnp.asarray(ys)
-        key = ("col_vmap", m, n, shared_a)
-        if key not in self._jit_cache:
+        def build():
             fn = self._col_scan_fn(m, n)
             in_axes = (None, 0, None) if shared_a else (0, 0, None)
-            self._jit_cache[key] = jax.jit(jax.vmap(fn, in_axes=in_axes))
-        x, outs = self._jit_cache[key](a_b, y_b, self._sched_operand())
+            return jax.jit(jax.vmap(fn, in_axes=in_axes))
+
+        vfn = self._cached(("col_vmap", m, n, shared_a), build)
+        x, outs = vfn(a_b, y_b, self._sched_operand())
         return self._trace(x, outs)
 
     def _trace(self, x, outs) -> EngineTrace:
@@ -1334,15 +1554,16 @@ class AmpEngine:
         )
 
     def dispatch_single(self, a_p, y_p, m: int, n: int, sched=None,
-                        compile_only: bool = False):
+                        drop_sched=None, compile_only: bool = False):
         """Launch one plain (row-layout, homogeneous) solve from pre-split
         operands, returning raw ``(x, outs)`` — the serving layer's
         singleton fast path: a lone request skips batch padding and
         het-operand assembly entirely and runs the true-dims ``_scan_fn``
         program through the AOT executable cache. ``sched`` overrides the
         engine controller's schedule operand (lossless/fixed/DP deltas ride
-        here); ``a_p`` may be a long-lived cached device buffer — this
-        path never donates."""
+        here); ``drop_sched`` a (T, P) erasure mask (``ErasureSpec``),
+        routed to the erasure-enabled program variant; ``a_p`` may be a
+        long-lived cached device buffer — this path never donates."""
         assert not self.cfg.is_col, \
             "dispatch_single is a row-layout entry point"
         # keep host operands as numpy: the compiled call's shard_args path
@@ -1358,19 +1579,33 @@ class AmpEngine:
         sched = np.asarray(sched, np.float32)
         assert sched.shape == (self.cfg.n_iter,), \
             (sched.shape, self.cfg.n_iter)
-        return self._run(("scan", m, n), self._scan_fn(m, n),
-                         (a_p, y_p, sched), compile_only)
+        erasure = drop_sched is not None
+        args = (a_p, y_p, sched)
+        if erasure:
+            drop_sched = np.asarray(drop_sched, np.float32)
+            assert drop_sched.shape == (self.cfg.n_iter, self.cfg.n_proc), \
+                drop_sched.shape
+            args = args + (drop_sched,)
+        return self._run(("scan", m, n, erasure),
+                         self._scan_fn(m, n, erasure), args, compile_only)
 
-    def solve(self, y, a_mat) -> EngineTrace:
+    def solve(self, y, a_mat, drop_sched=None) -> EngineTrace:
         """Full T-iteration solve as one scan-compiled call (no host sync).
 
         Under a ``ColumnPartition`` layout this is the full outer-round
-        C-MP-AMP solve (``cfg.n_iter`` fusion exchanges)."""
+        C-MP-AMP solve (``cfg.n_iter`` fusion exchanges).
+
+        ``drop_sched`` (T, P) optionally marks erased fusion packets per
+        iteration (sample one with ``ErasureSpec.sample_mask``): the row
+        layout rescales the survivors unbiasedly, the column layout resets
+        the erased signal blocks (DESIGN.md §10). ``None`` runs the
+        pre-erasure program unchanged."""
         if self.cfg.is_col:
-            return self._solve_col(y, a_mat)
+            return self._solve_col(y, a_mat, drop_sched)
         m, n = np.shape(a_mat)             # true dims; _split may tile-pad
         a_p, y_p = self._split(y, a_mat)
-        return self._trace(*self.dispatch_single(a_p, y_p, m, n))
+        return self._trace(*self.dispatch_single(a_p, y_p, m, n,
+                                                 drop_sched=drop_sched))
 
     def solve_many(self, ys, a_mats) -> EngineTrace:
         """vmap-batched solve of B independent CS instances.
@@ -1402,12 +1637,13 @@ class AmpEngine:
         a_b = jnp.asarray(a_b, self.cfg.a_jdtype)
         y_b = jnp.asarray(y_b)
 
-        key = ("vmap", m, n, shared_a)
-        if key not in self._jit_cache:
+        def build():
             fn = self._scan_fn(m, n)
             in_axes = (None, 0, None) if shared_a else (0, 0, None)
-            self._jit_cache[key] = jax.jit(jax.vmap(fn, in_axes=in_axes))
-        x, outs = self._jit_cache[key](a_b, y_b, self._sched_operand())
+            return jax.jit(jax.vmap(fn, in_axes=in_axes))
+
+        vfn = self._cached(("vmap", m, n, shared_a), build)
+        x, outs = vfn(a_b, y_b, self._sched_operand())
         return self._trace(x, outs)
 
     # -- heterogeneous batches (the serving path) -----------------------------
@@ -1428,7 +1664,10 @@ class AmpEngine:
         ``_body``; HetParams ride replicated).
         """
         if axis is None:
-            (t, sched_delta), drop = xs_t, None
+            if len(xs_t) == 3:
+                t, sched_delta, drop = xs_t
+            else:
+                (t, sched_delta), drop = xs_t, None
         else:
             t, sched_delta, drop = xs_t
         x, z_p, onsager = carry
@@ -1462,15 +1701,19 @@ class AmpEngine:
                syms if cfg.collect_symbols else jnp.zeros(()))
         return (x1, z1, ons1), out
 
-    def _scan_fn_het(self, mp_: int, n: int, has_bt: bool):
+    def _scan_fn_het(self, mp_: int, n: int, has_bt: bool,
+                     has_er: bool = False):
         """Jitted vmapped heterogeneous-batch solve for one padded shape.
 
         On the kernel path the bucket-shaped operands are tile-aligned
         *once here* — one pad at solve entry, outside the vmapped scan —
         and ``A`` is cast to ``cfg.a_dtype``. The carry rides at the
-        bucket's n, so results keep their bucket shapes."""
-        key = ("het", mp_, n, has_bt)
-        if key not in self._jit_cache:
+        bucket's n, so results keep their bucket shapes. ``has_er``
+        (static, derived from ``params.drop is not None``) threads the
+        per-instance (T, P) erasure masks as a third scan operand; the
+        drop-free program is byte-identical to the pre-erasure engine."""
+
+        def build():
             cfg = self.cfg
 
             def solve_one(a_p, y_p, hp: HetParams):
@@ -1479,8 +1722,10 @@ class AmpEngine:
                         jnp.zeros(()))
                 body = lambda c, xs: self._body_het(c, xs, a_p, y_p, hp,
                                                     n_mask, has_bt)
-                (x, _, _), outs = jax.lax.scan(
-                    body, init, (jnp.arange(cfg.n_iter), hp.sched))
+                xs = (jnp.arange(cfg.n_iter), hp.sched)
+                if has_er:
+                    xs = xs + (hp.drop,)
+                (x, _, _), outs = jax.lax.scan(body, init, xs)
                 return x, outs
 
             def solve_batch(a_b, y_b, hp: HetParams):
@@ -1489,9 +1734,10 @@ class AmpEngine:
                 return jax.vmap(solve_one)(a_b.astype(cfg.a_jdtype), y_b,
                                            hp)
 
-            self._jit_cache[key] = jax.jit(
+            return jax.jit(
                 solve_batch, donate_argnums=(0, 1) if cfg.donate else ())
-        return self._jit_cache[key]
+
+        return self._cached(("het", mp_, n, has_bt, has_er), build)
 
     def _col_body_het(self, carry, xs_t, a_cp, y, hp: HetParams, n_mask,
                       has_bt: bool, axis=None):
@@ -1500,7 +1746,10 @@ class AmpEngine:
         carry as ``_col_body`` plus the ``t_active`` freeze; ``hp.bt``
         holds stacked ``ColBTTables`` for column buckets."""
         if axis is None:
-            (s, sched_delta), drop = xs_t, None
+            if len(xs_t) == 3:
+                s, sched_delta, drop = xs_t
+            else:
+                (s, sched_delta), drop = xs_t, None
         else:
             s, sched_delta, drop = xs_t
         x, mem, coef, v_prev = carry
@@ -1530,11 +1779,12 @@ class AmpEngine:
                syms if cfg.collect_symbols else jnp.zeros(()))
         return (x1, mem1, coef1, v1), out
 
-    def _col_scan_fn_het(self, m_pad: int, np_pad: int, has_bt: bool):
+    def _col_scan_fn_het(self, m_pad: int, np_pad: int, has_bt: bool,
+                         has_er: bool = False):
         """Jitted vmapped heterogeneous column-batch solve for one padded
         shape: a (B, P, M_pad, Np_pad) column shards, y (B, M_pad)."""
-        key = ("col_het", m_pad, np_pad, has_bt)
-        if key not in self._jit_cache:
+
+        def build():
             cfg = self.cfg
             p = cfg.n_proc
 
@@ -1546,8 +1796,10 @@ class AmpEngine:
                                       jnp.sum(y * y) / hp.m_real)
                 body = lambda c, xs: self._col_body_het(c, xs, a_cp, y, hp,
                                                         n_mask, has_bt)
-                (x, _, _, _), outs = jax.lax.scan(
-                    body, init, (jnp.arange(cfg.n_iter), hp.sched))
+                xs = (jnp.arange(cfg.n_iter), hp.sched)
+                if has_er:
+                    xs = xs + (hp.drop,)
+                (x, _, _, _), outs = jax.lax.scan(body, init, xs)
                 return x.reshape(-1), outs
 
             def solve_batch(a_b, y_b, hp: HetParams):
@@ -1556,9 +1808,11 @@ class AmpEngine:
                 return jax.vmap(solve_one)(a_b.astype(cfg.a_jdtype), y_b,
                                            hp)
 
-            self._jit_cache[key] = jax.jit(
+            return jax.jit(
                 solve_batch, donate_argnums=(0, 1) if cfg.donate else ())
-        return self._jit_cache[key]
+
+        return self._cached(("col_het", m_pad, np_pad, has_bt, has_er),
+                            build)
 
     def dispatch_het(self, a_b, y_b, params: HetParams,
                      has_bt: bool | None = None,
@@ -1587,20 +1841,22 @@ class AmpEngine:
         y_b = jnp.asarray(y_b, jnp.float32)
         if has_bt is None:
             has_bt = bool(np.any(np.asarray(params.use_bt)))
+        has_er = params.drop is not None
         if self.cfg.is_col:
             # column layout: a_b (B, P, M_pad, Np_pad), y_b (B, M_pad) —
             # y is shared across processors, not row-split
             b, p, m_pad, np_pad = a_b.shape
             assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
             assert y_b.shape == (b, m_pad), (y_b.shape, (b, m_pad))
-            return self._run(("col_het", m_pad, np_pad, has_bt),
-                             self._col_scan_fn_het(m_pad, np_pad, has_bt),
-                             (a_b, y_b, params), compile_only)
+            return self._run(
+                ("col_het", m_pad, np_pad, has_bt, has_er),
+                self._col_scan_fn_het(m_pad, np_pad, has_bt, has_er),
+                (a_b, y_b, params), compile_only)
         b, p, mp_, n = a_b.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
         assert y_b.shape == (b, p, mp_)
-        return self._run(("het", mp_, n, has_bt),
-                         self._scan_fn_het(mp_, n, has_bt),
+        return self._run(("het", mp_, n, has_bt, has_er),
+                         self._scan_fn_het(mp_, n, has_bt, has_er),
                          (a_b, y_b, params), compile_only)
 
     def lower_het(self, a_b, y_b, params: HetParams,
@@ -1613,12 +1869,13 @@ class AmpEngine:
         y_b = jnp.asarray(y_b, jnp.float32)
         if has_bt is None:
             has_bt = bool(np.any(np.asarray(params.use_bt)))
+        has_er = params.drop is not None
         if self.cfg.is_col:
             _, _, m_pad, np_pad = a_b.shape
-            fn = self._col_scan_fn_het(m_pad, np_pad, has_bt)
+            fn = self._col_scan_fn_het(m_pad, np_pad, has_bt, has_er)
         else:
             _, _, mp_, n = a_b.shape
-            fn = self._scan_fn_het(mp_, n, has_bt)
+            fn = self._scan_fn_het(mp_, n, has_bt, has_er)
         return fn.lower(a_b, y_b, params)
 
     def compile_het(self, a_b, y_b, params: HetParams,
@@ -1671,8 +1928,8 @@ class AmpEngine:
         """Jitted full-solve scan under shard_map: the same iteration body
         as ``_scan_fn``, with (A, y) row-sharded over ``axis`` (each device
         carries P/D emulated processors) and the schedule replicated."""
-        key = ("sharded", m, n, mesh, axis)
-        if key not in self._jit_cache:
+
+        def build():
             cfg, kappa = self.cfg, m / n
 
             def solve_fn(a_p, y_p, sched, drops):
@@ -1692,45 +1949,54 @@ class AmpEngine:
                           PartitionSpec(axis, None), PartitionSpec(),
                           PartitionSpec(None, axis)),
                 out_specs=PartitionSpec(), axis_names={axis}, check=False)
-            self._jit_cache[key] = jax.jit(fn)
-        return self._jit_cache[key]
+            return jax.jit(fn)
+
+        return self._cached(("sharded", m, n, mesh, axis), build)
 
     def _col_sharded_fn(self, m: int, n: int, mesh, axis: str):
         """Jitted column-layout solve under shard_map: each device owns P/D
         column blocks; the fusion psums residual contributions (length M)
         and the boundary Onsager scalar across the mesh axis; y and the
-        fused residual are replicated."""
-        key = ("col_sharded", m, n, mesh, axis)
-        if key not in self._jit_cache:
+        fused residual are replicated. ``drops`` (T, n_dev) marks erased
+        device shards per round — column reset semantics
+        (``_col_round``); an all-zeros schedule is bit-exact with the
+        drop-free solve (every adjustment multiplies by exactly 1.0)."""
+
+        def build():
             cfg = self.cfg
 
-            def solve_fn(a_cp, y, sched):
+            def solve_fn(a_cp, y, sched, drops):
                 # local: a_cp (P/D, M, N/P); y (M,) replicated
                 p_loc, _, np_ = a_cp.shape
                 init = self._col_init(p_loc, np_, y, jnp.sum(y * y) / m)
-                drops = jnp.zeros(cfg.n_iter, jnp.float32)
                 body = lambda c, xs: self._col_body(c, xs, a_cp, y,
                                                     jnp.float32(m),
                                                     axis=axis)
                 (x, _, _, _), outs = jax.lax.scan(
-                    body, init, (jnp.arange(cfg.n_iter), sched, drops))
+                    body, init, (jnp.arange(cfg.n_iter), sched, drops[:, 0]))
                 return self._col_gather_x(x, axis), outs
 
             fn = shard_map(
                 solve_fn, mesh=mesh,
                 in_specs=(PartitionSpec(axis, None, None), PartitionSpec(),
-                          PartitionSpec()),
+                          PartitionSpec(), PartitionSpec(None, axis)),
                 out_specs=PartitionSpec(), axis_names={axis}, check=False)
-            self._jit_cache[key] = jax.jit(fn)
-        return self._jit_cache[key]
+            return jax.jit(fn)
 
-    def _solve_sharded_col(self, y, a_mat, mesh) -> EngineTrace:
-        axis, _ = self._sharded_axis(mesh)
+        return self._cached(("col_sharded", m, n, mesh, axis), build)
+
+    def _solve_sharded_col(self, y, a_mat, mesh, drop_sched=None
+                           ) -> EngineTrace:
+        axis, n_dev = self._sharded_axis(mesh)
         self._check_col_controller()
         m, n = np.shape(a_mat)
         a_cp, yj = self._split_col(y, a_mat)
+        if drop_sched is None:
+            drop_sched = np.zeros((self.cfg.n_iter, n_dev), np.float32)
+        drop_sched = np.asarray(drop_sched, np.float32)
+        assert drop_sched.shape == (self.cfg.n_iter, n_dev), drop_sched.shape
         x, outs = self._col_sharded_fn(m, n, mesh, axis)(
-            a_cp, yj, self._sched_operand())
+            a_cp, yj, self._sched_operand(), jnp.asarray(drop_sched))
         return self._trace(x, outs)
 
     def solve_sharded(self, y, a_mat, mesh, drop_sched=None) -> EngineTrace:
@@ -1739,20 +2005,19 @@ class AmpEngine:
 
         The iteration body, controller, and trace semantics are identical to
         ``solve`` — only the fusion sum (and the sigma2_hat reduction) cross
-        device links. ``drop_sched`` (T, n_dev) optionally marks straggler
-        shards per iteration; the transport rescales the survivors
+        device links. ``drop_sched`` (T, n_dev) optionally marks straggler/
+        erased shards per iteration; the transport rescales the survivors
         unbiasedly instead of stalling the solve.
 
         Under a ``ColumnPartition`` layout the mesh axis carries the column
-        blocks and the fusion psums residual contributions; straggler drop
-        does not apply (a dropped shard would remove its *signal block*
-        from the fusion — a bias, not zero-mean noise — so ``drop_sched``
-        must be None).
+        blocks and the fusion psums residual contributions; a dropped shard
+        there is handled by *reset*, not rescale — its signal blocks
+        restart from zero and re-fuse next round (``_col_round``,
+        DESIGN.md §10), since rescaling the other blocks cannot stand in
+        for the missing one.
         """
         if self.cfg.is_col:
-            assert drop_sched is None, \
-                "straggler drop_sched does not apply to the column layout"
-            return self._solve_sharded_col(y, a_mat, mesh)
+            return self._solve_sharded_col(y, a_mat, mesh, drop_sched)
         axis, n_dev = self._sharded_axis(mesh)
         m, n = np.shape(a_mat)
         a_p, y_p = self._split(y, a_mat)
@@ -1765,16 +2030,19 @@ class AmpEngine:
         return self._trace(x, outs)
 
     def _sharded_het_fn(self, mp_: int, n: int, has_bt: bool, mesh,
-                        axis: str):
-        key = ("sharded_het", mp_, n, has_bt, mesh, axis)
-        if key not in self._jit_cache:
+                        axis: str, has_er: bool = False):
+
+        def build():
             cfg = self.cfg
 
             def solve_one(a_p, y_p, hp: HetParams):
                 n_mask = (jnp.arange(n) < hp.n_real).astype(jnp.float32)
                 init = (jnp.zeros(n, jnp.float32), jnp.zeros_like(y_p),
                         jnp.zeros(()))
-                drops = jnp.zeros(cfg.n_iter, jnp.float32)
+                # hp.drop rides replicated as (T, n_dev); each device
+                # slices its own column of the mask
+                drops = (hp.drop[:, lax.axis_index(axis)] if has_er
+                         else jnp.zeros(cfg.n_iter, jnp.float32))
                 body = lambda c, xs: self._body_het(c, xs, a_p, y_p, hp,
                                                     n_mask, has_bt,
                                                     axis=axis)
@@ -1796,14 +2064,16 @@ class AmpEngine:
 
             # donate y only: the sharded A may be a long-lived cached
             # device buffer (serving operand cache) and must survive
-            self._jit_cache[key] = jax.jit(
+            return jax.jit(
                 solve_padded, donate_argnums=(1,) if cfg.donate else ())
-        return self._jit_cache[key]
+
+        return self._cached(("sharded_het", mp_, n, has_bt, has_er, mesh,
+                             axis), build)
 
     def _col_sharded_het_fn(self, m_pad: int, np_pad: int, has_bt: bool,
-                            mesh, axis: str):
-        key = ("col_sharded_het", m_pad, np_pad, has_bt, mesh, axis)
-        if key not in self._jit_cache:
+                            mesh, axis: str, has_er: bool = False):
+
+        def build():
             cfg = self.cfg
             p = cfg.n_proc
 
@@ -1813,7 +2083,8 @@ class AmpEngine:
                 p_loc = a_cp.shape[0]
                 init = self._col_init(p_loc, np_pad, y,
                                       jnp.sum(y * y) / hp.m_real)
-                drops = jnp.zeros(cfg.n_iter, jnp.float32)
+                drops = (hp.drop[:, lax.axis_index(axis)] if has_er
+                         else jnp.zeros(cfg.n_iter, jnp.float32))
                 body = lambda c, xs: self._col_body_het(c, xs, a_cp, y, hp,
                                                         n_mask, has_bt,
                                                         axis=axis)
@@ -1834,9 +2105,11 @@ class AmpEngine:
                 return fn(a_cp.astype(cfg.a_jdtype), y, hp)
 
             # donate y only (see _sharded_het_fn): A may be cache-resident
-            self._jit_cache[key] = jax.jit(
+            return jax.jit(
                 solve_padded, donate_argnums=(1,) if cfg.donate else ())
-        return self._jit_cache[key]
+
+        return self._cached(("col_sharded_het", m_pad, np_pad, has_bt,
+                             has_er, mesh, axis), build)
 
     def dispatch_sharded(self, a_p, y_p, params: HetParams, mesh,
                          has_bt: bool | None = None,
@@ -1851,24 +2124,33 @@ class AmpEngine:
 
         Column layout: a_p (P, M_pad, Np_pad) column shards, y_p the
         shared (M_pad,) measurements."""
-        axis, _ = self._sharded_axis(mesh)
+        axis, n_dev = self._sharded_axis(mesh)
         a_p = jnp.asarray(a_p, self.cfg.a_jdtype)
         y_p = jnp.asarray(y_p, jnp.float32)
         if has_bt is None:
             has_bt = bool(np.any(np.asarray(params.use_bt)))
+        has_er = params.drop is not None
+        if has_er:
+            # per-*device* mask here: the mesh axis is the processor axis
+            assert np.shape(params.drop) == (self.cfg.n_iter, n_dev), \
+                (np.shape(params.drop), (self.cfg.n_iter, n_dev))
         if self.cfg.is_col:
             p, m_pad, np_pad = a_p.shape
             assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
             assert y_p.shape == (m_pad,), (y_p.shape, m_pad)
             return self._run(
-                ("col_sharded_het", m_pad, np_pad, has_bt, mesh, axis),
-                self._col_sharded_het_fn(m_pad, np_pad, has_bt, mesh, axis),
+                ("col_sharded_het", m_pad, np_pad, has_bt, has_er, mesh,
+                 axis),
+                self._col_sharded_het_fn(m_pad, np_pad, has_bt, mesh, axis,
+                                         has_er),
                 (a_p, y_p, params), compile_only)
         p, mp_, n = a_p.shape
         assert p == self.cfg.n_proc, (p, self.cfg.n_proc)
         assert y_p.shape == (p, mp_)
-        return self._run(("sharded_het", mp_, n, has_bt, mesh, axis),
-                         self._sharded_het_fn(mp_, n, has_bt, mesh, axis),
+        return self._run(("sharded_het", mp_, n, has_bt, has_er, mesh,
+                          axis),
+                         self._sharded_het_fn(mp_, n, has_bt, mesh, axis,
+                                              has_er),
                          (a_p, y_p, params), compile_only)
 
     def solve_sharded_het(self, a_p, y_p, params: HetParams, mesh,

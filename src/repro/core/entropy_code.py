@@ -31,6 +31,14 @@ def _quantize_freqs(counts: np.ndarray) -> np.ndarray:
     counts = np.asarray(counts, dtype=np.float64)
     if counts.sum() <= 0:
         raise ValueError("empty model")
+    if len(counts) > _SCALE:
+        # every symbol needs a frequency slot >= 1, so an alphabet larger
+        # than the frequency scale cannot be normalized: the adjustment
+        # loop below would spin forever trying to shed an irreducible
+        # surplus. ECSQ alphabets here are ~2*clip/delta, far below 4096.
+        raise ValueError(
+            f"alphabet of {len(counts)} symbols exceeds the rANS frequency "
+            f"scale ({_SCALE}); re-bin the symbols or raise _SCALE_BITS")
     freqs = np.maximum(1, np.round(counts / counts.sum() * _SCALE)).astype(np.int64)
     # fix rounding drift by adjusting the largest entries
     diff = int(freqs.sum() - _SCALE)

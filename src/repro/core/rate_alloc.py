@@ -15,6 +15,23 @@ iterations discretized at dR (=0.1 in the paper), dynamic programming over
 the table sigma_D^2(s, t) = best variance using R^{(s)} bits in the first t
 iterations, with transition
     sigma_D^2(s,t) = min_r f1(sigma_D^2(r, t-1), R^{(s-r+1)}).
+
+Erasure recovery policies (DESIGN.md §10): under per-packet loss rate p the
+allocators support two bit-accounting disciplines, selectable via
+``recovery``:
+
+  * ``"retransmit"`` — lost packets are re-sent next round, so of a wire
+    budget R only (1-p)*R lands as fused payload: the DP allocates the
+    shrunk budget, BT caps the delivered per-packet rate at r_max*(1-p),
+    and the wire rate is the delivered rate / (1-p).
+  * ``"rate_up"`` — the dropped processors' bit share is re-allocated to
+    the survivors: the fused-payload budget is unchanged, each survivor
+    spends rate/(1-p) (finer bins), and the per-processor-slot wire rate
+    equals the allocated rate.
+
+Either way the SE step amplifies the denoiser input by
+``erasure_amplification`` (the survivor-rescale noise blow-up); the
+``DPResult.wire_rates`` column reports what actually crosses the wire.
 """
 from __future__ import annotations
 
@@ -27,11 +44,32 @@ from .denoisers import BernoulliGauss, make_mmse_interp
 from .quantize import (delta_for_rate_ecsq, delta_for_sigma_q2, ecsq_entropy,
                        message_mixture)
 from .rate_distortion import RDModel
-from .state_evolution import CSProblem, se_trajectory
+from .state_evolution import (CSProblem, erasure_amplification,
+                              se_trajectory, se_trajectory_erasure)
 
 __all__ = ["BTController", "bt_schedule_offline", "dp_allocate",
            "dp_allocate_col", "col_sigma_q2_for_rate", "DPResult",
-           "rate_for_sigma_q2", "sigma_q2_for_rate", "stack_schedules"]
+           "rate_for_sigma_q2", "sigma_q2_for_rate", "stack_schedules",
+           "erasure_rate_factors"]
+
+
+def erasure_rate_factors(erasure_rate: float, recovery: str):
+    """(budget_factor, survivor_boost, wire_factor) for a recovery policy.
+
+    ``budget_factor`` scales the allocatable payload budget,
+    ``survivor_boost`` the per-delivered-packet rate actually spent
+    relative to the allocated slot rate, and ``wire_factor`` maps
+    delivered rates to on-the-wire rates (module docstring). At
+    ``erasure_rate = 0`` all three are exactly 1.0.
+    """
+    assert 0.0 <= erasure_rate < 1.0, erasure_rate
+    assert recovery in ("retransmit", "rate_up"), recovery
+    if erasure_rate == 0.0:
+        return 1.0, 1.0, 1.0
+    keep = 1.0 - erasure_rate
+    if recovery == "retransmit":
+        return keep, 1.0, 1.0 / keep
+    return 1.0, 1.0 / keep, keep
 
 
 def stack_schedules(schedules, n_iter: int) -> np.ndarray:
@@ -93,7 +131,8 @@ class BTController:
     def __init__(self, prob: CSProblem, n_proc: int, n_iter: int,
                  c_ratio: float = 1.05, r_max: float = 6.0,
                  rate_model: str = "ecsq", rd: RDModel | None = None,
-                 mmse_fn=None):
+                 mmse_fn=None, erasure_rate: float = 0.0,
+                 recovery: str = "retransmit"):
         self.prob = prob
         self.n_proc = n_proc
         self.c_ratio = c_ratio
@@ -101,13 +140,32 @@ class BTController:
         self.rate_model = rate_model
         self.rd = rd if (rd is not None or rate_model != "rd") else RDModel(prob.prior)
         self.mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
-        # offline centralized SE reference sigma_{t,C}^2, t = 0..n_iter
-        self.sigma2_c = se_trajectory(prob, n_iter, mmse_fn=self.mmse_fn)
-        self.rates: list[float] = []
+        self.erasure_rate = erasure_rate
+        self.recovery = recovery
+        budget_f, boost, wire_f = erasure_rate_factors(erasure_rate, recovery)
+        self._amp = erasure_amplification(erasure_rate, n_proc)
+        self._wire_f = wire_f
+        # delivered-rate cap implied by the wire cap r_max: retransmit
+        # loses p of the wire budget, rate_up hands the dropped share to
+        # survivors (r_max * budget_f * boost; exactly r_max at rate 0)
+        self._r_cap = r_max * budget_f * boost
+        # offline SE reference sigma_{t,C}^2, t = 0..n_iter — under
+        # erasure the reachable reference is the zero-quantization SE with
+        # the survivor-rescale amplification, not the lossless-link one
+        if erasure_rate > 0.0:
+            self.sigma2_c = se_trajectory_erasure(
+                prob, np.zeros(n_iter), n_proc, erasure_rate,
+                mmse_fn=self.mmse_fn)
+        else:
+            self.sigma2_c = se_trajectory(prob, n_iter, mmse_fn=self.mmse_fn)
+        self.rates: list[float] = []        # delivered bits/element
+        self.wire_rates: list[float] = []   # on-the-wire bits/element/slot
         self.sigma_q2s: list[float] = []
 
     def _predict_next(self, sigma2_d: float, sigma_q2: float) -> float:
         eff = sigma2_d + self.n_proc * sigma_q2
+        if self._amp != 1.0:
+            eff = self._amp * eff
         return self.prob.sigma_e2 + float(self.mmse_fn(eff)) / self.prob.kappa
 
     def __call__(self, t: int, sigma2_hat: float) -> float:
@@ -116,8 +174,8 @@ class BTController:
         # feasibility at zero quantization noise (plug-in may exceed SE ref)
         base = self._predict_next(sigma2_hat, 0.0)
         if base >= target:
-            # cannot meet the ratio even losslessly -> spend r_max
-            rate = self.r_max
+            # cannot meet the ratio even losslessly -> spend the cap
+            rate = self._r_cap
             sq2 = sigma_q2_for_rate(rate, sigma2_hat, prob, p,
                                      self.rate_model, self.rd)
         else:
@@ -137,11 +195,12 @@ class BTController:
             sq2 = lo
             rate = rate_for_sigma_q2(sq2, sigma2_hat, prob, p,
                                       self.rate_model, self.rd)
-            if rate > self.r_max:
-                rate = self.r_max
+            if rate > self._r_cap:
+                rate = self._r_cap
                 sq2 = sigma_q2_for_rate(rate, sigma2_hat, prob, p,
                                          self.rate_model, self.rd)
         self.rates.append(rate)
+        self.wire_rates.append(rate * self._wire_f)
         self.sigma_q2s.append(sq2)
         return delta_for_sigma_q2(sq2)
 
@@ -149,14 +208,15 @@ class BTController:
 def bt_schedule_offline(prob: CSProblem, n_proc: int, n_iter: int,
                         c_ratio: float = 1.05, r_max: float = 6.0,
                         rate_model: str = "rd", rd: RDModel | None = None,
-                        mmse_fn=None):
+                        mmse_fn=None, erasure_rate: float = 0.0,
+                        recovery: str = "retransmit"):
     """Pure-SE BT prediction (no data): returns (rates, sigma2_D trajectory).
 
     This is the paper's "BT-MP-AMP (RD prediction)" row: run the BT rule on
     the quantized SE recursion itself, using the RD function as rate model.
     """
     ctrl = BTController(prob, n_proc, n_iter, c_ratio, r_max, rate_model, rd,
-                        mmse_fn)
+                        mmse_fn, erasure_rate=erasure_rate, recovery=recovery)
     sigma2_d = [prob.sigma0_2]
     for t in range(n_iter):
         ctrl(t, sigma2_d[-1])
@@ -174,23 +234,40 @@ class DPResult:
     sigma2_d: np.ndarray       # predicted variance trajectory (T+1,)
     sigma2_table: np.ndarray   # full DP table Sigma (S, T)
     r_grid: np.ndarray         # R^{(s)} grid
+    wire_rates: np.ndarray | None = None
+                               # on-the-wire bits/element/processor-slot
+                               # under an erasure recovery policy (None =
+                               # lossless link, wire == rates)
 
 
 def dp_allocate(prob: CSProblem, n_proc: int, n_iter: int, r_total: float,
                 dr: float = 0.1, rd: RDModel | None = None,
-                mmse_fn=None) -> DPResult:
-    """Optimal rate allocation by dynamic programming (paper eqs. 10-12)."""
+                mmse_fn=None, erasure_rate: float = 0.0,
+                recovery: str = "retransmit") -> DPResult:
+    """Optimal rate allocation by dynamic programming (paper eqs. 10-12).
+
+    ``erasure_rate``/``recovery`` allocate for a lossy link (module
+    docstring): the SE transition amplifies by the survivor-rescale
+    factor, ``retransmit`` shrinks the allocatable budget to
+    (1-p)*r_total, ``rate_up`` lets survivors spend the dropped share.
+    ``erasure_rate = 0`` reproduces the published allocator exactly.
+    """
     rd = rd or RDModel(prob.prior)
     mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
     p = n_proc
-    s_count = int(round(r_total / dr)) + 1
+    budget_f, boost, wire_f = erasure_rate_factors(erasure_rate, recovery)
+    amp = erasure_amplification(erasure_rate, n_proc)
+    s_count = int(round(r_total * budget_f / dr)) + 1
     r_grid = np.arange(s_count) * dr  # R^{(s)}, s = 1..S (0-indexed)
 
     def f1_matrix(v_prev: np.ndarray, rates: np.ndarray) -> np.ndarray:
         """f1(v_prev[r], rates[k]) for all (r, k): (S, S) array."""
         sigma_p = np.sqrt(p * v_prev)[:, None]          # (S, 1)
-        d_g = rd.distortion_g(rates[None, :], sigma_p)  # (S, S)
+        # survivors deliver at boost * the allocated slot rate
+        d_g = rd.distortion_g(rates[None, :] * boost, sigma_p)  # (S, S)
         eff = v_prev[:, None] + d_g / p                 # + P * sigma_Q^2
+        if amp != 1.0:
+            eff = amp * eff
         return prob.sigma_e2 + mmse_fn(eff) / prob.kappa
 
     big = np.inf
@@ -226,12 +303,15 @@ def dp_allocate(prob: CSProblem, n_proc: int, n_iter: int, r_total: float,
     # predicted trajectory under the optimal schedule
     sigma2_d = [prob.sigma0_2]
     for t in range(n_iter):
-        sq2 = float(rd.distortion_msg(rates[t], sigma2_d[-1], p))
+        sq2 = float(rd.distortion_msg(rates[t] * boost, sigma2_d[-1], p))
         eff = sigma2_d[-1] + p * sq2
+        if amp != 1.0:
+            eff = amp * eff
         sigma2_d.append(prob.sigma_e2 + float(mmse_fn(eff)) / prob.kappa)
 
+    wire = rates * boost * wire_f if erasure_rate > 0.0 else None
     return DPResult(rates=rates, sigma2_d=np.asarray(sigma2_d),
-                    sigma2_table=sigma_tab, r_grid=r_grid)
+                    sigma2_table=sigma_tab, r_grid=r_grid, wire_rates=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -258,22 +338,37 @@ def col_sigma_q2_for_rate(rate, block_mse, prob: CSProblem, n_proc: int,
 
 
 def _col_round_map(d_prev, sigma_q2, prob: CSProblem, n_proc: int,
-                   n_inner: int, mmse_fn):
+                   n_inner: int, mmse_fn, erasure_rate: float = 0.0):
     """One outer-round map of the two-stage column SE, vectorized over a
-    (d_prev, sigma_q2) grid: returns the block MSE after the round."""
+    (d_prev, sigma_q2) grid: returns the block MSE after the round.
+
+    ``erasure_rate`` applies the column *reset* semantics
+    (state_evolution module docstring): the block MSE entering the round
+    averages to (1-p)*d + p*E[S0^2] and only the surviving fraction
+    injects quantization noise.  ``0.0`` is bit-exact with the
+    lossless-link map.
+    """
     d_prev = np.asarray(d_prev, np.float64)
-    tau0 = prob.sigma_e2 + n_proc * sigma_q2 + d_prev / prob.kappa
-    e = d_prev
+    if erasure_rate > 0.0:
+        keep = 1.0 - erasure_rate
+        d_in = keep * d_prev + erasure_rate * prob.prior.second_moment
+    else:
+        keep = 1.0
+        d_in = d_prev
+    tau0 = prob.sigma_e2 + keep * n_proc * sigma_q2 + d_in / prob.kappa
+    e = d_in
     tau_t = tau0
     for _ in range(n_inner):
         e = mmse_fn(tau_t)
-        tau_t = tau0 + (e - d_prev) / (prob.kappa * n_proc)
+        tau_t = tau0 + (e - d_in) / (prob.kappa * n_proc)
     return e
 
 
 def dp_allocate_col(prob: CSProblem, n_proc: int, n_outer: int,
                     r_total: float, n_inner: int = 1, dr: float = 0.1,
-                    mmse_fn=None, ecsq_gap: bool = True) -> DPResult:
+                    mmse_fn=None, ecsq_gap: bool = True,
+                    erasure_rate: float = 0.0,
+                    recovery: str = "retransmit") -> DPResult:
     """Offline-optimal rate allocation across C-MP-AMP outer rounds.
 
     Same DP recursion as ``dp_allocate`` (paper eqs. 10-12) with the
@@ -283,32 +378,44 @@ def dp_allocate_col(prob: CSProblem, n_proc: int, n_outer: int,
     steps.  Round 0 is excluded from the allocation — its exchanged
     contributions are identically zero, so it is lossless for free.
 
+    ``erasure_rate``/``recovery`` follow the module-docstring accounting;
+    the SE step is the column *reset* map rather than the row-wise
+    survivor-rescale amplification.
+
     Returns a ``DPResult`` whose ``rates`` has length ``n_outer``
     (``rates[0] = 0``) and whose ``sigma2_d`` is the predicted block-MSE
     trajectory d^0..d^{n_outer} (length n_outer+1).
     """
     mmse_fn = mmse_fn or make_mmse_interp(prob.prior)
-    s_count = int(round(r_total / dr)) + 1
+    budget_f, boost, wire_f = erasure_rate_factors(erasure_rate, recovery)
+    p_e = erasure_rate
+    s_count = int(round(r_total * budget_f / dr)) + 1
     r_grid = np.arange(s_count) * dr
     n_alloc = n_outer - 1   # rounds 1..n_outer-1 spend the budget
 
     def f1_matrix(d_prev: np.ndarray, rates: np.ndarray) -> np.ndarray:
         """round_map(d_prev[r], rates[k]) for all (r, k): (S, S) array."""
         dp_col = d_prev[:, None]
-        sq2 = col_sigma_q2_for_rate(rates[None, :], dp_col, prob, n_proc,
-                                    ecsq_gap)
-        return _col_round_map(dp_col, sq2, prob, n_proc, n_inner, mmse_fn)
+        # survivors deliver at boost * the allocated slot rate
+        sq2 = col_sigma_q2_for_rate(rates[None, :] * boost, dp_col, prob,
+                                    n_proc, ecsq_gap)
+        return _col_round_map(dp_col, sq2, prob, n_proc, n_inner, mmse_fn,
+                              erasure_rate=p_e)
 
-    # round 0: lossless, no budget spent
+    # round 0: lossless, no budget spent (an erased all-zeros contribution
+    # resets a block to the x = 0 it already holds, so the reset map is
+    # exact here too)
     d0 = _col_round_map(np.asarray([prob.prior.second_moment]), 0.0, prob,
-                        n_proc, n_inner, mmse_fn)[0]
+                        n_proc, n_inner, mmse_fn, erasure_rate=p_e)[0]
 
     big = np.inf
     if n_alloc == 0:
         return DPResult(rates=np.zeros(n_outer),
                         sigma2_d=np.asarray([prob.prior.second_moment, d0]),
                         sigma2_table=np.full((s_count, 1), d0),
-                        r_grid=r_grid)
+                        r_grid=r_grid,
+                        wire_rates=(np.zeros(n_outer) if p_e > 0.0
+                                    else None))
 
     sigma_tab = np.full((s_count, n_alloc), big)
     choice = np.zeros((s_count, n_alloc), dtype=np.int64)
@@ -339,11 +446,12 @@ def dp_allocate_col(prob: CSProblem, n_proc: int, n_outer: int,
     # predicted block-MSE trajectory under the optimal schedule
     d_traj = [prob.prior.second_moment, d0]
     for t in range(1, n_outer):
-        sq2 = float(col_sigma_q2_for_rate(rates[t], d_traj[-1], prob,
+        sq2 = float(col_sigma_q2_for_rate(rates[t] * boost, d_traj[-1], prob,
                                           n_proc, ecsq_gap))
         d_traj.append(float(_col_round_map(np.asarray([d_traj[-1]]), sq2,
-                                           prob, n_proc, n_inner,
-                                           mmse_fn)[0]))
+                                           prob, n_proc, n_inner, mmse_fn,
+                                           erasure_rate=p_e)[0]))
 
+    wire = rates * boost * wire_f if p_e > 0.0 else None
     return DPResult(rates=rates, sigma2_d=np.asarray(d_traj),
-                    sigma2_table=sigma_tab, r_grid=r_grid)
+                    sigma2_table=sigma_tab, r_grid=r_grid, wire_rates=wire)

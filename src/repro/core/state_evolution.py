@@ -26,6 +26,26 @@ while the own-block term e updates:
 At n_inner = 1 the round map collapses to the centralized recursion with
 the quantization noise entering *additively on the fused residual*:
 tau^{s+1} = sigma_e^2 + P*sigma_q2[s+1] + mmse(tau^s)/kappa.
+
+Erasure-extended SE (DESIGN.md §10): when each processor's fusion packet is
+lost i.i.d. with probability p and the fusion center rescales the k
+survivors by P/k (the transport's unbiased survivor rescale), both the
+message noise and the survivors' embedded quantization noise are amplified
+by P/k.  Taking the expectation over k ~ Binomial(P, 1-p),
+
+    sigma_{t+1}^2 = sigma_e^2
+        + mmse( amp * (sigma_t^2 + P*sigma_Q^2) ) / kappa,
+    amp = E[ P / max(k, 1) ]      (``erasure_amplification``),
+
+where the k = 0 event (all packets lost, the fused message collapses to
+zero) is folded in through the max.  Column-layout erasure is a *reset*,
+not a rescale (an erased contribution leaves its whole signal block
+unexplained in g): the block MSE entering a round averages to
+(1-p) * d + p * E[S0^2] and only the (1-p) fraction of survivors injects
+quantization noise.  Bursty (Gilbert-Elliott) losses share the same
+single-round marginals at the stationary loss rate; their temporal
+correlation is not tracked here (bursty-loss DP tables are a named
+follow-up in ROADMAP.md).
 """
 from __future__ import annotations
 
@@ -37,7 +57,8 @@ import numpy as np
 from .denoisers import BernoulliGauss, mmse
 
 __all__ = ["CSProblem", "se_trajectory", "se_trajectory_quantized",
-           "se_trajectory_col", "sdr", "steady_state_iters",
+           "se_trajectory_col", "erasure_amplification",
+           "se_trajectory_erasure", "sdr", "steady_state_iters",
            "sigma_e2_for_snr", "PAPER_T"]
 
 
@@ -107,8 +128,51 @@ def se_trajectory_quantized(prob: CSProblem, sigma_q2: np.ndarray, n_proc: int,
     return np.asarray(out)
 
 
+def erasure_amplification(rate: float, n_proc: int) -> float:
+    """E[P / max(k, 1)] for k ~ Binomial(P, 1 - rate): the expected noise
+    amplification of the P/k survivor rescale at the fusion center.
+
+    Exact binomial sum (P is small — tens of processors). ``rate = 0``
+    returns exactly 1.0, so erasure-aware formulas degrade to the
+    published SE without even a float rounding difference.
+    """
+    if rate <= 0.0:
+        return 1.0
+    assert 0.0 <= rate < 1.0, rate
+    p_keep = 1.0 - rate
+    amp = 0.0
+    for k in range(n_proc + 1):
+        pmf = math.comb(n_proc, k) * p_keep**k * rate**(n_proc - k)
+        amp += pmf * n_proc / max(k, 1)
+    return amp
+
+
+def se_trajectory_erasure(prob: CSProblem, sigma_q2, n_proc: int,
+                          erasure_rate: float, mmse_fn=None) -> np.ndarray:
+    """Row-layout quantized SE under Bernoulli per-processor erasure.
+
+    Each iteration the denoiser input variance is amplified by
+    ``erasure_amplification`` (module docstring): survivors are rescaled
+    by P/k, inflating both the message noise and the surviving
+    quantization noise.  ``erasure_rate = 0`` reproduces
+    ``se_trajectory_quantized`` exactly.  Gilbert-Elliott losses are
+    evaluated at their stationary rate (marginals match; temporal
+    correlation untracked).
+    """
+    if mmse_fn is None:
+        mmse_fn = lambda v: mmse(v, prob.prior)
+    sigma_q2 = np.asarray(sigma_q2, dtype=np.float64)
+    amp = erasure_amplification(erasure_rate, n_proc)
+    out = [prob.sigma0_2]
+    for t in range(len(sigma_q2)):
+        eff = amp * (out[-1] + n_proc * sigma_q2[t])
+        out.append(prob.sigma_e2 + float(mmse_fn(np.asarray([eff]))[0]) / prob.kappa)
+    return np.asarray(out)
+
+
 def se_trajectory_col(prob: CSProblem, n_proc: int, n_outer: int,
-                      n_inner: int = 1, sigma_q2=None, mmse_fn=None):
+                      n_inner: int = 1, sigma_q2=None, mmse_fn=None,
+                      erasure_rate: float = 0.0):
     """Two-stage column-wise SE (module docstring). Returns ``(tau, d)``.
 
     ``tau[s]`` is the start-of-round variance of the fused residual g^s
@@ -121,6 +185,13 @@ def se_trajectory_col(prob: CSProblem, n_proc: int, n_outer: int,
     residual contributions at round s (entry 0 is conventionally 0: the
     round-0 contributions are identically zero, so their exchange is exact
     at any bin size).  ``None`` means lossless fusion throughout.
+
+    ``erasure_rate`` models per-round, per-processor Bernoulli erasure of
+    the residual contributions with the engine's *reset* semantics
+    (module docstring): an erased block restarts from x = 0, so the block
+    MSE entering the round averages to (1-p)*d + p*E[S0^2] and only the
+    surviving (1-p) fraction injects quantization noise.  ``0.0``
+    reproduces the lossless-link recursion exactly.
     """
     if mmse_fn is None:
         mmse_fn = lambda v: mmse(v, prob.prior)
@@ -128,17 +199,22 @@ def se_trajectory_col(prob: CSProblem, n_proc: int, n_outer: int,
         sigma_q2 = np.zeros(n_outer)
     sigma_q2 = np.asarray(sigma_q2, dtype=np.float64)
     assert len(sigma_q2) == n_outer, (len(sigma_q2), n_outer)
+    assert 0.0 <= erasure_rate < 1.0, erasure_rate
+    p_e = erasure_rate
+    sm = prob.prior.second_moment
     kappa = prob.kappa
-    d = [prob.prior.second_moment]
+    d = [sm]
     tau = []
     for s in range(n_outer):
-        tau_s0 = prob.sigma_e2 + n_proc * sigma_q2[s] + d[-1] / kappa
+        d_in = d[-1] if p_e == 0.0 else (1.0 - p_e) * d[-1] + p_e * sm
+        tau_s0 = (prob.sigma_e2 + (1.0 - p_e) * n_proc * sigma_q2[s]
+                  + d_in / kappa)
         tau.append(tau_s0)
-        e = d[-1]
+        e = d_in
         tau_t = tau_s0
         for _ in range(n_inner):
             e = float(mmse_fn(np.asarray([tau_t]))[0])
-            tau_t = tau_s0 + (e - d[-1]) / (kappa * n_proc)
+            tau_t = tau_s0 + (e - d_in) / (kappa * n_proc)
         d.append(e)
     return np.asarray(tau), np.asarray(d)
 

@@ -64,6 +64,9 @@ class OperandCache:
         self.evictions = 0
         self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._bytes = 0
+        # counter snapshot taken at the last clear(): stats()'s
+        # ``since_clear`` numbers describe the post-clear stream only
+        self._cleared_at = (0, 0, 0)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -93,11 +96,24 @@ class OperandCache:
             self.evictions += 1
         return value
 
-    def clear(self) -> None:
+    def clear(self, reset_stats: bool = False) -> None:
+        """Drop every entry. With ``reset_stats`` the hit/miss/eviction
+        counters restart too, so subsequent ``stats()`` rates describe the
+        post-clear stream instead of blending in the discarded one; the
+        default preserves the historical lifetime counters."""
         self._entries.clear()
         self._bytes = 0
+        if reset_stats:
+            self.hits = 0
+            self.misses = 0
+            self.evictions = 0
+        self._cleared_at = (self.hits, self.misses, self.evictions)
 
     def stats(self) -> dict:
+        """Lifetime counters at the top level (stable consumers key on
+        them), plus ``since_clear`` deltas relative to the last ``clear``
+        — equal to the lifetime numbers when never cleared."""
+        h0, m0, e0 = self._cleared_at
         return {
             "hits": self.hits,
             "misses": self.misses,
@@ -105,4 +121,9 @@ class OperandCache:
             "entries": len(self._entries),
             "bytes": self._bytes,
             "max_bytes": self.max_bytes,
+            "since_clear": {
+                "hits": self.hits - h0,
+                "misses": self.misses - m0,
+                "evictions": self.evictions - e0,
+            },
         }

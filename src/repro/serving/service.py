@@ -50,17 +50,19 @@ from ..core.engine import (AmpEngine, BlockQuantTransport, BTRateControl,
                            BTTables, ColBTTables, ColDPSchedule,
                            ColumnBTRateControl, ColumnPartition,
                            CompressedPsumTransport, EcsqTransport,
-                           EngineConfig, HetParams, PsumFusion,
+                           EngineConfig, ErasureSpec, HetParams, PsumFusion,
                            RowPartition, pad_bt_tables, split_problem_cols,
                            stack_bt_tables)
 from ..core.quantize import ecsq_entropy, message_mixture, residual_mixture
-from ..core.rate_alloc import dp_allocate, dp_allocate_col, stack_schedules
+from ..core.rate_alloc import (dp_allocate, dp_allocate_col,
+                               erasure_rate_factors, stack_schedules)
 from ..core.rate_distortion import RDModel
 from ..core.state_evolution import CSProblem
 from .batcher import Batcher
 from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
                       bucket_for, pad_batch_size, placement_for, round_up)
 from .operand_cache import OperandCache, fingerprint
+from .wire import WireModel, measure_wire
 
 __all__ = ["SolveRequest", "SolveResult", "SolveService", "PrewarmSpec"]
 
@@ -86,6 +88,23 @@ class SolveRequest:
     owns an equal signal slice); every policy above works in either
     layout — the service builds the matching controller family
     (``dp_allocate_col`` / ``ColumnBTRateControl`` for column buckets).
+
+    ``erasure_rate`` > 0 subjects the request's fusion packets to
+    per-round, per-processor loss (``erasure_model``: i.i.d.
+    ``"bernoulli"`` or bursty ``"gilbert"`` with mean burst
+    ``erasure_burst``; the mask is drawn deterministically from
+    ``erasure_seed``).  ``recovery`` selects the bit-accounting
+    discipline the allocators plan for — ``"retransmit"`` (lost bits are
+    re-sent, shrinking the payload budget) or ``"rate_up"`` (survivors
+    spend the dropped share) — see ``rate_alloc``.  Erasure requests run
+    the het program family (no singleton fast path).
+
+    ``measure_wire`` opts the request into measured-bytes accounting:
+    the engine traces the quantizer symbol streams and the service
+    rANS-codes them host-side (``serving.wire``), reporting
+    ``bytes_on_wire`` / ``time_on_air_s`` / ``energy_j`` on the result.
+    Unsupported on the processor-sharded placement (symbols live
+    per-device there).
     """
 
     y: np.ndarray
@@ -101,6 +120,13 @@ class SolveRequest:
     bt_r_max: float = 6.0
     transport: str = "ecsq"               # "ecsq" | "block8" | "block4"
     layout: str | None = None             # None = auto | "row" | "col"
+    erasure_rate: float = 0.0             # per-packet loss probability
+    erasure_model: str = "bernoulli"      # "bernoulli" | "gilbert"
+    erasure_burst: float = 4.0            # mean burst length (gilbert)
+    erasure_seed: int = 0                 # mask draw (deterministic)
+    recovery: str = "retransmit"          # "retransmit" | "rate_up"
+    measure_wire: bool = False            # rANS-code symbol streams and
+    #                                       report measured wire bytes
     a_id: str | None = None               # stable caller-managed identity of
     #                                       ``a`` for the operand cache; when
     #                                       set it replaces the content hash
@@ -146,9 +172,17 @@ class SolveResult:
     deltas: np.ndarray        # (T,) realized bin sizes (inf = lossless)
     extra_var: np.ndarray     # (T,) transport-injected variance P*sigma_Q^2
     rates: np.ndarray         # (T,) bits/elem (row) | bits/meas (col), /proc
+    #                           on-the-wire under the recovery policy
+    #                           (== delivered when erasure_rate = 0)
     total_bits: float         # sum of finite per-iteration rates
     bucket: BucketKey         # where this request was executed
     batch_size: int           # real requests in the executed batch
+    bytes_on_wire: float | None = None   # measured rANS bytes incl. table/
+    #                                      header/retransmit (measure_wire)
+    payload_bytes: float | None = None   # measured rANS payload only — the
+    #                                      number comparable to model H_Q
+    time_on_air_s: float | None = None   # bytes_on_wire / link rate
+    energy_j: float | None = None        # time_on_air * tx power
 
     def mse(self, s0: np.ndarray) -> float:
         return float(np.mean((self.x - np.asarray(s0)) ** 2))
@@ -223,7 +257,8 @@ class SolveService:
                  mesh=None, mesh_axis: str = "data",
                  operand_cache_bytes: int = 256 << 20,
                  singleton_fastpath: bool = True,
-                 donate: bool = True):
+                 donate: bool = True,
+                 wire_model: WireModel | None = None):
         self.policy = policy or BucketPolicy()
         self.collect_xs = collect_xs
         self.rate_accounting = rate_accounting
@@ -239,8 +274,13 @@ class SolveService:
             assert self.policy.max_batch % self.n_devices == 0, \
                 f"max_batch={self.policy.max_batch} must be a multiple of " \
                 f"the mesh device count ({self.n_devices})"
+        self.wire_model = wire_model or WireModel()
         self._batcher = Batcher(self.policy)
         self._engines: dict[BucketKey, AmpEngine] = {}
+        # symbol-tracing twins of the bucket engines for measured-wire
+        # requests: a different trace pytree means a different compiled
+        # program family, so they must not share the plain engines' caches
+        self._wire_engines: dict[BucketKey, AmpEngine] = {}
         self._bt_cache: dict = {}
         self._rd_cache: dict = {}
         self._completed: list[SolveResult] = []
@@ -363,6 +403,10 @@ class SolveService:
                 f"policy={req.policy!r} has no effect under " \
                 f"transport={req.transport!r}; use policy='lossless'"
         assert req.layout in (None, "row", "col"), req.layout
+        assert 0.0 <= req.erasure_rate < 1.0, req.erasure_rate
+        assert req.erasure_model in ("bernoulli", "gilbert"), \
+            req.erasure_model
+        assert req.recovery in ("retransmit", "rate_up"), req.recovery
         if req.layout is None:
             # pin the auto-routed layout on our copy so every later stage
             # (bucket key, operands, rate accounting) agrees — via replace,
@@ -391,19 +435,24 @@ class SolveService:
         return bucket_for(req.n, req.m, req.n_proc, req.n_iter,
                           req.transport, self.policy, placement, req.layout)
 
-    def _engine(self, key: BucketKey) -> AmpEngine:
+    def _engine(self, key: BucketKey, wire: bool = False) -> AmpEngine:
         # data-parallel buckets reuse the local engine object: the sharding
         # lives on the operands, and jit re-specializes the same callable
         ekey = (key if key.placement == "proc"
                 else dataclasses.replace(key, placement="local"))
+        assert not (wire and key.placement == "proc"), \
+            "measured-wire accounting needs host-visible symbol streams; " \
+            "the processor-sharded placement keeps them per-device " \
+            "(engine.py collect_symbols contract)"
+        cache = self._wire_engines if wire else self._engines
         with self._lock:
-            eng = self._engines.get(ekey)
+            eng = cache.get(ekey)
             if eng is None:
                 cfg = EngineConfig(
                     n_proc=key.n_proc, n_iter=key.t_max,
                     use_kernel=self.use_kernel,
                     kernel_interpret=self.kernel_interpret,
-                    collect_symbols=False, collect_xs=self.collect_xs,
+                    collect_symbols=wire, collect_xs=self.collect_xs,
                     layout=(ColumnPartition(n_inner=1) if key.layout == "col"
                             else RowPartition()),
                     # batched operands are per-flush temporaries -> donate;
@@ -416,7 +465,7 @@ class SolveService:
                 else:
                     transport = _TRANSPORTS[key.transport]()
                 eng = AmpEngine(BernoulliGauss(), cfg, transport)
-                self._engines[ekey] = eng
+                cache[ekey] = eng
         return eng
 
     def _single_engine(self, req: SolveRequest) -> AmpEngine:
@@ -441,18 +490,32 @@ class SolveService:
 
     def _dp_deltas(self, req: SolveRequest) -> np.ndarray:
         """Offline DP allocation realized as ECSQ bin sizes (DPSchedule /
-        ColDPSchedule for column requests)."""
+        ColDPSchedule for column requests).
+
+        Under erasure the allocators plan for the request's recovery
+        policy; the realized bins then encode the *delivered* per-survivor
+        rates (allocated * survivor_boost), which is what the quantizers
+        on the surviving packets actually spend."""
         from ..core.engine import DPSchedule
         prob = req.problem()
         r_total = (req.dp_total_bits if req.dp_total_bits is not None
                    else 2.0 * req.n_iter)
+        _, boost, _ = erasure_rate_factors(req.erasure_rate, req.recovery)
         if req.layout == "col":
-            dp = dp_allocate_col(prob, req.n_proc, req.n_iter, r_total)
+            dp = dp_allocate_col(prob, req.n_proc, req.n_iter, r_total,
+                                 erasure_rate=req.erasure_rate,
+                                 recovery=req.recovery)
+            if boost != 1.0:
+                dp = dataclasses.replace(dp, rates=dp.rates * boost)
             return ColDPSchedule(dp, prob, req.n_proc).deltas
         rd = self._rd_cache.get(req.prior)
         if rd is None:
             rd = self._rd_cache[req.prior] = RDModel(req.prior)
-        dp = dp_allocate(prob, req.n_proc, req.n_iter, r_total, rd=rd)
+        dp = dp_allocate(prob, req.n_proc, req.n_iter, r_total, rd=rd,
+                         erasure_rate=req.erasure_rate,
+                         recovery=req.recovery)
+        if boost != 1.0:
+            dp = dataclasses.replace(dp, rates=dp.rates * boost)
         return DPSchedule(dp, rd, req.n_proc).deltas
 
     def _bt_tables(self, req: SolveRequest, t_max: int):
@@ -461,7 +524,8 @@ class SolveService:
         object — which keeps ``stack_bt_tables``'s zero-copy fast path.
         Column requests get ``ColumnBTRateControl`` tables."""
         key = (req.prior, round(req.snr_db, 6), req.n, req.m, req.n_proc,
-               req.n_iter, req.bt_c_ratio, req.bt_r_max, req.layout)
+               req.n_iter, req.bt_c_ratio, req.bt_r_max, req.layout,
+               req.erasure_rate, req.recovery)
         padded = self._bt_cache.get((key, t_max))
         if padded is None:
             ctrl = self._bt_cache.get(key)
@@ -469,15 +533,32 @@ class SolveService:
                 if req.layout == "col":
                     ctrl = ColumnBTRateControl(
                         req.problem(), req.n_proc, req.n_iter,
-                        req.bt_c_ratio, req.bt_r_max)
+                        req.bt_c_ratio, req.bt_r_max,
+                        erasure_rate=req.erasure_rate,
+                        recovery=req.recovery)
                 else:
                     ctrl = BTRateControl(req.problem(), req.n_proc,
                                          req.n_iter, req.bt_c_ratio,
-                                         req.bt_r_max, "ecsq")
+                                         req.bt_r_max, "ecsq",
+                                         erasure_rate=req.erasure_rate,
+                                         recovery=req.recovery)
                 self._bt_cache[key] = ctrl
             padded = pad_bt_tables(ctrl.tables, t_max)
             self._bt_cache[(key, t_max)] = padded
         return padded
+
+    def _drop_mask(self, req: SolveRequest,
+                   n_proc: int | None = None) -> np.ndarray | None:
+        """The (n_iter, P) erasure mask of one request, or None when the
+        link is lossless. Deterministic in the request's erasure fields,
+        so dispatch (operand build) and result finalization (retransmit
+        byte accounting) independently reconstruct the same draw."""
+        if req.erasure_rate == 0.0:
+            return None
+        spec = ErasureSpec(rate=req.erasure_rate, model=req.erasure_model,
+                           burst_len=req.erasure_burst,
+                           seed=req.erasure_seed)
+        return spec.sample_mask(req.n_iter, n_proc or req.n_proc)
 
     def _fingerprint(self, req: SolveRequest):
         """Operand-cache identity of a request's A: the caller-vouched
@@ -562,6 +643,21 @@ class SolveService:
                 tables.append(ColBTTables.dummy(t_max) if is_col
                               else BTTables.dummy(t_max))
 
+        # erasure masks ride as a (B, T, P) operand only when some request
+        # in the batch actually loses packets — drop=None keeps the
+        # pre-erasure operand avals and compiled programs byte-identical.
+        # Lossless co-batched requests get all-zero masks (a numeric no-op
+        # through the survivor-rescale/reset paths). On the
+        # processor-sharded placement the mask axis is the mesh device.
+        drops = None
+        if any(r.erasure_rate > 0.0 for r in batch):
+            p_mask = self.n_devices if key.placement == "proc" else p
+            drops = np.zeros((b, t_max, p_mask), np.float32)
+            for i, r in enumerate(batch):
+                m = self._drop_mask(r, p_mask)
+                if m is not None:
+                    drops[i, :r.n_iter] = m
+
         params = HetParams(
             sched=stack_schedules(scheds, t_max),
             t_active=np.asarray(tacts, np.int32),
@@ -572,6 +668,7 @@ class SolveService:
             sigma_s=np.asarray(sss, np.float32),
             use_bt=np.asarray(use_bt),
             bt=stack_bt_tables(tables),
+            drop=drops,
         )
         return y_b, params, any(use_bt)
 
@@ -605,7 +702,11 @@ class SolveService:
         # dropped); keeps every instance numerically benign — and on the
         # cached path a pad slot is an operand-cache hit, not a rebuild
         batch = [reqs[i % b_real] for i in range(b_pad)]
-        eng = self._engine(key)
+        # a measured-wire request anywhere in the group routes the whole
+        # batch onto the symbol-tracing engine twin (same math, bigger
+        # trace); pure streams of either kind never double-compile
+        wire = any(r.measure_wire for r in reqs)
+        eng = self._engine(key, wire)
         a_b = self._a_batch(key, batch, eng)
         y_b, params, has_bt = self._y_and_params(key, batch)
         if key.placement == "data":
@@ -627,9 +728,12 @@ class SolveService:
         assembly and run the plain true-dims ``dispatch_single`` program
         (DESIGN.md §9). BT stays on the het path (its controller is the
         in-graph het table machinery); col stays batched (no plain
-        single-dispatch entry point)."""
+        single-dispatch entry point); erasure and measured-wire requests
+        stay on the het path too (drop operands and symbol tracing are
+        het-program features)."""
         return (self.singleton_fastpath and key.placement == "local"
-                and key.layout == "row" and r.policy != "bt")
+                and key.layout == "row" and r.policy != "bt"
+                and r.erasure_rate == 0.0 and not r.measure_wire)
 
     def _dispatch_singleton(self, key: BucketKey, r: SolveRequest) \
             -> _Pending:
@@ -673,6 +777,10 @@ class SolveService:
         eng = self._engine(key)
         dispatched = []
         for r in reqs:
+            assert not r.measure_wire, \
+                "measure_wire is unsupported on the processor-sharded " \
+                "placement (symbols stay per-device); pin layout/shape " \
+                "to a local or data-parallel bucket"
             a_p = self._a_slice(key, r, eng)
             y_b, params, has_bt = self._y_and_params(key, [r])
             hp = jax.tree.map(lambda v: np.asarray(v)[0], params)
@@ -704,6 +812,16 @@ class SolveService:
         rates = self._rates(r, s2, deltas, sel(trace.rates),
                             sel(trace.extra_var))
         finite = np.isfinite(rates)
+        wire = None
+        if r.measure_wire and trace.symbols is not None:
+            syms = trace.symbols if i is None else trace.symbols[i]
+            # payload = length-N messages (row) / length-M residual
+            # contributions (col); padding columns quantize zeros
+            n_elem = r.m if key.layout == "col" else r.n
+            wire = measure_wire(syms[:t, :, :n_elem], deltas, n_elem,
+                                drop=self._drop_mask(r),
+                                recovery=r.recovery,
+                                model=self.wire_model)
         return SolveResult(
             request_id=r.request_id,
             x=x.copy(),
@@ -711,6 +829,10 @@ class SolveService:
             extra_var=sel(trace.extra_var).copy(), rates=rates,
             total_bits=float(rates[finite].sum()),
             bucket=key, batch_size=batch_size,
+            bytes_on_wire=None if wire is None else wire["bytes_on_wire"],
+            payload_bytes=None if wire is None else wire["payload_bytes"],
+            time_on_air_s=None if wire is None else wire["time_on_air_s"],
+            energy_j=None if wire is None else wire["energy_j"],
         )
 
     def _rates(self, req: SolveRequest, s2, deltas, bt_rates,
@@ -725,7 +847,23 @@ class SolveService:
         exchanges all-zero contributions — 0 bits at any bin size — and
         is counted as 0.0 whenever the request is rate-tracked at all
         (a fully lossless request stays untracked, all-inf).
+
+        Under erasure the reported rates are *on-the-wire*: the delivered
+        model rate times the recovery policy's wire factor (retransmit
+        re-sends dropped packets, rate_up's allocated slot rate is what
+        each slot transmits) — ``erasure_rate_factors``. Exactly the
+        delivered rate on a lossless link.
         """
+        rates = self._rates_delivered(req, s2, deltas, bt_rates, extra_var)
+        if req.erasure_rate > 0.0:
+            _, _, wire_f = erasure_rate_factors(req.erasure_rate,
+                                                req.recovery)
+            fin = np.isfinite(rates)
+            rates = np.where(fin, rates * wire_f, rates)
+        return rates
+
+    def _rates_delivered(self, req: SolveRequest, s2, deltas, bt_rates,
+                         extra_var) -> np.ndarray:
         if req.policy == "bt":
             return np.asarray(bt_rates, np.float64)
         if req.transport != "ecsq":
@@ -852,6 +990,7 @@ class SolveService:
         invariant tests pin."""
         with self._lock:
             engines = (list(self._engines.values())
+                       + list(self._wire_engines.values())
                        + list(self._single_engines.values()))
         return sum(e.compile_count for e in engines)
 
@@ -860,13 +999,15 @@ class SolveService:
         compile counts, singleton fast-path traffic, per-bucket demand
         (requests ever admitted), and the last prewarm report."""
         with self._lock:
-            engines = list(self._engines.items())
+            engines = ([(k, e, "") for k, e in self._engines.items()]
+                       + [(k, e, "/wire")
+                          for k, e in self._wire_engines.items()])
             singles = list(self._single_engines.items())
         by_bucket = {}
-        for key, eng in engines:
+        for key, eng, tag in engines:
             label = (f"{key.layout}/{key.placement}/n{key.n_pad}"
                      f"/mp{key.mp_pad}/p{key.n_proc}/t{key.t_max}"
-                     f"/{key.transport}")
+                     f"/{key.transport}{tag}")
             by_bucket[label] = eng.compile_count
         for (n, m, p, t, transport, _prior), eng in singles:
             by_bucket[f"single/n{n}/m{m}/p{p}/t{t}/{transport}"] = \

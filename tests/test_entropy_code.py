@@ -44,3 +44,39 @@ def test_rans_matches_ecsq_entropy_on_amp_messages():
     codec = RansCodec(np.bincount(q - offset))
     bits_per_sym = codec.encoded_bits(q - offset) / len(q)
     assert abs(bits_per_sym - h_model) < 0.05 * h_model + 0.02
+
+
+def test_oversized_alphabet_raises():
+    """Regression: >4096 distinct symbols used to spin forever inside the
+    frequency-quantization rebalance loop; it must fail fast instead."""
+    with pytest.raises(ValueError, match="exceeds the rANS frequency"):
+        RansCodec(np.ones(5000))
+    # the largest admissible alphabet still round-trips
+    n = 4096
+    codec = RansCodec(np.ones(n))
+    syms = np.arange(n) % n
+    np.testing.assert_array_equal(codec.decode(codec.encode(syms), n), syms)
+
+
+def test_single_symbol_alphabet_roundtrip():
+    """A degenerate one-symbol model (zero entropy) encodes to ~nothing
+    and still round-trips."""
+    codec = RansCodec(np.asarray([123]))
+    syms = np.zeros(500, np.int64)
+    enc = codec.encode(syms)
+    np.testing.assert_array_equal(codec.decode(enc, 500), syms)
+    assert len(enc) <= 16, len(enc)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(64, 2000), seed=st.integers(0, 2**31 - 1),
+       skew=st.floats(4.0, 12.0))
+def test_rans_roundtrip_highly_skewed(n, seed, skew):
+    """Near-deterministic streams (one symbol carries ~all the mass) stress
+    the 1-count clamping in the quantized frequency table."""
+    rng = np.random.default_rng(seed)
+    p = np.asarray([1.0 - 2.0**-skew, 2.0**-skew / 2, 2.0**-skew / 2])
+    syms = rng.choice(3, size=n, p=p)
+    codec = RansCodec(np.bincount(syms, minlength=3) + 1)
+    enc = codec.encode(syms)
+    np.testing.assert_array_equal(codec.decode(enc, n), syms)
