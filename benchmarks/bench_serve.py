@@ -313,6 +313,101 @@ def bench_wire(n: int, m: int, p: int, t: int, b: int, reps: int,
     return out
 
 
+def bench_cluster(n: int, m: int, p: int, t: int, b: int, reps: int,
+                  hosts: int, prewarm: bool):
+    """Multi-host elastic serving plane (DESIGN.md §11), emulated on one
+    box: a ``ClusterService`` over ``hosts`` in-process backends vs a
+    single ``SolveService`` on the same total device count.
+
+    Single-core emulation methodology: the box cannot run two hosts'
+    XLA programs genuinely in parallel, so the bench *routes* the full
+    stream through the real cluster router (``partition``), times each
+    host's share in isolation, and reports
+
+        cluster wall = max over hosts of (share wall) + routing overhead
+
+    — the wall a real 2-host deployment would see, assuming hosts
+    compute concurrently (they do: separate processes, separate
+    devices) and the router is the only serial stage (it is: routing is
+    pure bookkeeping, measured here as the min over reps of a warm
+    ``partition`` pass — steady-state routing cost, not first-call dict
+    setup). The baseline and every host share are timed interleaved
+    round-robin in the same rep loop (``time_variants``): timing them
+    in separate sequential loops lets a few percent of box-load drift
+    masquerade as a scaling loss. Aggregate req/s and weak scaling
+    derive from that wall. A full ``ClusterService.solve`` pass then
+    pins bit-identity against the single-host results and the
+    zero-steady-state-compile invariant.
+    """
+    import numpy as np
+    from repro.serving import (BucketPolicy, ClusterService, PrewarmSpec,
+                               RouterPolicy, SolveService)
+
+    prior, _, reqs, _ = make_load(n, m, p, t, b)
+    policy = BucketPolicy(max_batch=8, n_quantum=64, mp_quantum=8)
+    menu = [PrewarmSpec(n=n, m=m, n_proc=p, n_iter=t, policy="fixed",
+                        prior=prior, batch_widths=(8,))]
+
+    # single-host baseline: same policy, same prewarm, whole stream
+    svc = SolveService(policy=policy, rate_accounting=False)
+    if prewarm:
+        svc.prewarm(menu)
+    base_res = svc.solve(reqs)                    # warmup + reference
+
+    # cluster: every bucket replicated on every host (min_replicas) so
+    # the least-loaded router spreads one bucket's traffic — the regime
+    # the weak-scaling claim is about
+    cl = ClusterService(n_hosts=hosts, policy=policy,
+                        router_policy=RouterPolicy(min_replicas=hosts),
+                        rate_accounting=False)
+    if prewarm:
+        cl.prewarm(menu)
+
+    shares = cl.partition(reqs)                   # cold pass fixes shares
+    route_overhead, _ = best_of(lambda: cl.partition(reqs), reps)
+
+    for hid, share in shares.items():             # warmup per host
+        cl.backends[hid].service.solve(share)
+    compiles_warm = cl.compile_count()
+
+    ops = {"1host": lambda: svc.solve(reqs)}
+    for hid, share in shares.items():
+        ops[hid] = (lambda be=cl.backends[hid], sh=share:
+                    be.service.solve(sh))
+    walls, _ = time_variants(ops, reps)
+    wall_1 = walls["1host"]
+    host_walls = {hid: walls[hid] for hid in shares}
+    wall_cluster = max(host_walls.values()) + route_overhead
+
+    # bit-identity: the routed stream through the full frontend must
+    # reproduce the single-host results exactly (same padded batch
+    # width -> same compiled program; vmap lanes are independent)
+    cl_res = cl.solve(reqs)
+    max_dx = max(float(np.max(np.abs(cr.x - br.x)))
+                 for cr, br in zip(cl_res, base_res))
+
+    rt = cl.router.stats()
+    return {
+        "hosts": hosts, "n": n, "m": m, "p": p, "t": t, "batch": b,
+        "max_batch": policy.max_batch, "prewarm": prewarm,
+        "req_s_1host": b / wall_1,
+        "req_s_cluster": b / wall_cluster,
+        "weak_scaling": wall_1 / wall_cluster,
+        "per_host_req_s": {hid: len(shares[hid]) / w
+                           for hid, w in host_walls.items()},
+        "share_sizes": {hid: len(s) for hid, s in shares.items()},
+        "route_overhead_s": route_overhead,
+        "imbalance": rt["imbalance"],
+        "steady_state_compiles": cl.compile_count() - compiles_warm,
+        "bitwise_max_abs_diff": max_dx,
+        "methodology": "emulated hosts on one box: stream routed by the "
+                       "real ClusterRouter (partition), baseline and "
+                       "host shares timed interleaved round-robin, "
+                       "cluster wall = max host wall + steady-state "
+                       "routing overhead (min over warm partitions)",
+    }
+
+
 def dataclass_replace(req, **kw):
     import dataclasses
     return dataclasses.replace(req, request_id=-1, **kw)
@@ -329,6 +424,9 @@ def main():
     ap.add_argument("--erasure", type=float, default=0.0,
                     help="packet-drop rate for the measured-wire section "
                          "(runs both recovery policies at this rate)")
+    ap.add_argument("--hosts", type=int, default=2,
+                    help="emulated host count for the cluster section "
+                         "(DESIGN.md §11); 1 skips it")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",
                     help="skip SolveService.prewarm (measures cold-ish "
                          "services; compiles still leave the timed region "
@@ -446,6 +544,24 @@ def main():
         "n": ncb, "m": mcb, "batch": bcb, "placement": placement_cb,
         "req_s": bcb / dt_cb, "seconds": dt_cb, "mse": mse_cb}
 
+    # cluster tier (DESIGN.md §11): weak scaling across emulated hosts,
+    # bit-identity vs single-host, zero steady-state recompiles
+    if args.hosts > 1:
+        bcl = 32 if args.smoke else 64
+        cluster = bench_cluster(n, m, p, t, bcl, max(2, reps // 2),
+                                args.hosts, args.prewarm)
+        print(f"\ncluster ({args.hosts} emulated hosts, B={bcl}, "
+              f"max_batch={cluster['max_batch']}):")
+        print(f"  1-host {cluster['req_s_1host']:.1f} req/s -> cluster "
+              f"{cluster['req_s_cluster']:.1f} req/s "
+              f"({cluster['weak_scaling']:.2f}x weak scaling, route "
+              f"overhead {cluster['route_overhead_s']*1e3:.2f} ms)")
+        print(f"  shares {cluster['share_sizes']}  imbalance "
+              f"{cluster['imbalance']:.2f}x  steady-state compiles "
+              f"{cluster['steady_state_compiles']}  max|dx| "
+              f"{cluster['bitwise_max_abs_diff']:.1e}")
+        report["cluster"] = cluster
+
     # measured wire bytes (DESIGN.md §10): rANS payload vs model entropy,
     # plus the lossy-link byte cost per recovery policy at --erasure.
     # Config is smoke-independent: byte counts are deterministic, so the
@@ -479,6 +595,20 @@ def main():
         failures.append(f"B=1 speedup {speedups[1]:.2f}x below the 1x "
                         f"acceptance target (prewarm + singleton fast "
                         f"path, ISSUE 6)")
+    if "cluster" in report:
+        cl = report["cluster"]
+        if cl["hosts"] == 2 and cl["weak_scaling"] < 1.8:
+            failures.append(f"cluster weak scaling "
+                            f"{cl['weak_scaling']:.2f}x below the 1.8x "
+                            f"2-host acceptance target (ISSUE 8)")
+        if args.prewarm and cl["steady_state_compiles"] != 0:
+            failures.append(f"cluster ran "
+                            f"{cl['steady_state_compiles']} steady-state "
+                            f"compiles after prewarm (must be 0)")
+        if cl["bitwise_max_abs_diff"] != 0.0:
+            failures.append(f"cluster results differ from single-host by "
+                            f"max|dx|={cl['bitwise_max_abs_diff']:.2e} "
+                            f"(must be bit-identical)")
     for msg in failures:
         print(f"WARNING: {msg}")
     # --smoke is a CI sanity check on shared runners: surface the

@@ -90,6 +90,28 @@ def main() -> int:
         warnings.append(f"steady-state stream triggered {ssc} recompiles "
                         f"(prewarm should cover the whole menu)")
 
+    # cluster tier (DESIGN.md §11): aggregate throughput drift at same
+    # host count, plus the hard invariants (zero steady-state recompiles,
+    # router cost imbalance within 2x on a homogeneous stream)
+    b_cl, f_cl = base.get("cluster") or {}, fresh.get("cluster") or {}
+    b_agg, f_agg = b_cl.get("req_s_cluster"), f_cl.get("req_s_cluster")
+    if b_agg and f_agg and b_cl.get("hosts") == f_cl.get("hosts"):
+        rel = f_agg / b_agg - 1.0
+        line = (f"{f_cl['hosts']}-host aggregate {f_agg:.1f} req/s vs "
+                f"baseline {b_agg:.1f} req/s ({rel:+.0%}, weak scaling "
+                f"{f_cl.get('weak_scaling', 0):.2f}x)")
+        if rel < -args.threshold:
+            warnings.append(f"cluster throughput regressed: {line}")
+        else:
+            print(f"serve-bench: {line}")
+    if f_cl.get("steady_state_compiles"):
+        warnings.append(f"cluster ran {f_cl['steady_state_compiles']} "
+                        f"steady-state recompiles after prewarm")
+    imb = f_cl.get("imbalance")
+    if imb is not None and imb > 2.0:
+        warnings.append(f"cluster router cost imbalance {imb:.2f}x "
+                        f"exceeds 2x on a homogeneous stream")
+
     for w in warnings:
         print(f"::warning::{w}")
     if not warnings:

@@ -1028,6 +1028,12 @@ class AmpEngine:
         self._exec_cache: dict = {}
         self._exec_lock = threading.Lock()
         self.compile_count = 0
+        # executed dispatches (compile_only excluded): the per-engine load
+        # signal the cluster router's imbalance accounting reads. Guarded
+        # by _exec_lock together with compile_count so ``counters()`` can
+        # hand out a consistent (compiles, dispatches) pair even while a
+        # background prewarm thread is mid-compile.
+        self.dispatch_count = 0
 
     # -- AOT executable cache (DESIGN §9) ------------------------------------
 
@@ -1074,7 +1080,18 @@ class AmpEngine:
                     self.compile_count += 1
         if compile_only:
             return ex
+        with self._exec_lock:
+            self.dispatch_count += 1
         return ex(*args)
+
+    def counters(self) -> dict:
+        """Atomic snapshot of the engine's observable counters. Taken
+        under the executable-cache lock, so a concurrent compile (e.g. a
+        background ``SolveService.prewarm`` thread) can never be observed
+        half-way — ``SolveService.stats()`` aggregates through here."""
+        with self._exec_lock:
+            return {"compiles": self.compile_count,
+                    "dispatches": self.dispatch_count}
 
     def _cached(self, key, build):
         """Double-checked admission into the jit-program cache.

@@ -76,6 +76,12 @@ def main():
                     help="serve over all visible devices (placement "
                          "dispatcher; forced-host devices need XLA_FLAGS "
                          "set before launch)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="serve through the cluster tier (DESIGN.md §11) "
+                         "with this many emulated hosts: a ClusterService "
+                         "routes buckets across per-host SolveServices "
+                         "and autoscales per-bucket replicas from demand "
+                         "EWMAs")
     ap.add_argument("--prewarm", action="store_true",
                     help="AOT-compile the SHAPES bucket menu before "
                          "streaming (DESIGN.md §9): compiles move out of "
@@ -96,8 +102,19 @@ def main():
         mesh = make_serve_mesh()
         # data-parallel dispatch needs a device-multiple batch cap
         max_batch = round_up(max_batch, mesh.shape["data"])
-    svc = SolveService(policy=BucketPolicy(max_batch=max_batch),
-                       rate_accounting=not args.smoke, mesh=mesh)
+    if args.hosts > 1:
+        from ..serving import ClusterService, RouterPolicy
+        assert not args.mesh, \
+            "--hosts emulates single-device hosts; combine with --mesh " \
+            "only on a real multi-host launch (repro.launch.multihost)"
+        svc = ClusterService(
+            n_hosts=args.hosts, policy=BucketPolicy(max_batch=max_batch),
+            router_policy=RouterPolicy(scrape_every_s=0.25,
+                                       ewma_halflife_s=2.0),
+            rate_accounting=not args.smoke)
+    else:
+        svc = SolveService(policy=BucketPolicy(max_batch=max_batch),
+                           rate_accounting=not args.smoke, mesh=mesh)
     prewarmed = 0
     if args.prewarm:
         # one spec per (shape, t-bucket, program family): T in {6,8} and
@@ -143,15 +160,38 @@ def main():
               f"{tot:.1f} {unit[layout]} total"
               + (f" ({tot / len(tracked):.2f} avg)" if tracked else ""))
     st = svc.stats()
-    oc = st["operand_cache"]
-    print(f"\n{n_req} requests in {dt:.2f}s  "
-          f"({n_req / dt:.1f} req/s, {len(svc._engines)} compiled buckets)")
-    print(f"hot path: {st['compiles']['total']} compiles"
-          + (f" ({st['compiles']['total'] - prewarmed} after prewarm)"
-             if args.prewarm else "")
-          + f", operand cache {oc['hits']} hits / {oc['misses']} misses"
-          f" ({oc['bytes'] / (1 << 20):.1f} MiB), "
-          f"{st['singleton_dispatches']} singleton dispatches")
+    if args.hosts > 1:
+        # cluster tier: per-host hot-path stats roll up, plus the
+        # scheduler's routing/autoscaling view (DESIGN.md §11)
+        hosts = st["hosts"]
+        compiles = sum(h["compiles"]["total"] for h in hosts.values())
+        hits = sum(h["operand_cache"]["hits"] for h in hosts.values())
+        misses = sum(h["operand_cache"]["misses"] for h in hosts.values())
+        buckets = sum(len(h["compiles"]["by_bucket"])
+                      for h in hosts.values())
+        rt = st["router"]
+        print(f"\n{n_req} requests in {dt:.2f}s  "
+              f"({n_req / dt:.1f} req/s, {len(hosts)} hosts, "
+              f"{buckets} compiled buckets)")
+        print(f"hot path: {compiles} compiles"
+              + (f" ({compiles - prewarmed} after prewarm)"
+                 if args.prewarm else "")
+              + f", operand cache {hits} hits / {misses} misses")
+        print(f"router: served {rt['served']} "
+              f"(cost imbalance {rt['imbalance']:.2f}x), "
+              f"{st['shed']} shed; autoscaler events: "
+              f"{st['autoscaler']['events'] or 'none'}")
+    else:
+        oc = st["operand_cache"]
+        print(f"\n{n_req} requests in {dt:.2f}s  "
+              f"({n_req / dt:.1f} req/s, "
+              f"{len(svc._engines)} compiled buckets)")
+        print(f"hot path: {st['compiles']['total']} compiles"
+              + (f" ({st['compiles']['total'] - prewarmed} after prewarm)"
+                 if args.prewarm else "")
+              + f", operand cache {oc['hits']} hits / {oc['misses']} misses"
+              f" ({oc['bytes'] / (1 << 20):.1f} MiB), "
+              f"{st['singleton_dispatches']} singleton dispatches")
 
 
 if __name__ == "__main__":

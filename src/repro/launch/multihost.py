@@ -1,0 +1,222 @@
+"""Two-process ``jax.distributed`` cluster driver (DESIGN.md §11).
+
+Run with no cluster env set, this module is the **parent**: it picks
+free ports, spawns one child per process (same interpreter, same argv)
+with ``AMP_COORDINATOR`` / ``AMP_NUM_PROCESSES`` / ``AMP_PROCESS_ID``
+and ``--xla_force_host_platform_device_count`` fake devices, waits, and
+propagates the worst child exit code — the CI ``multihost`` job's entry
+point.
+
+With ``AMP_PROCESS_ID`` set, it is a **child**: every process joins the
+``jax.distributed`` cluster via ``init_cluster`` (real coordinator
+handshake, global device discovery), then
+
+  * process 1..K-1 each serve a ``SolveService`` behind a
+    ``BackendServer`` — codec frames on TCP, no pickle — until the
+    frontend sends the shutdown op, and
+  * process 0 (the frontend, ``ClusterInfo.is_frontend``) builds a
+    ``ClusterService`` over its own ``LocalBackend`` plus one
+    ``TcpBackend`` per remote, prewarms the menu, streams a smoke load,
+    and pins the invariants: results bit-identical to a single-host
+    ``SolveService`` on the same stream, zero steady-state compiles
+    after prewarm, every host actually served.
+
+On CPU the cluster coordinates but cannot run cross-process XLA
+computations (``supports_cross_host_collectives`` is False), so this is
+exactly the regime the request-level router exists for: the test proves
+the TCP + codec path end-to-end under a real multi-process jax runtime.
+
+  PYTHONPATH=src python -m repro.launch.multihost --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+import time
+
+_DEVICES_PER_HOST = 4
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def parent(args) -> int:
+    coord = _free_port()
+    backend_ports = [_free_port() for _ in range(args.processes - 1)]
+    env = dict(os.environ)
+    env.update({
+        "AMP_COORDINATOR": f"127.0.0.1:{coord}",
+        "AMP_NUM_PROCESSES": str(args.processes),
+        "AMP_BACKEND_PORTS": ",".join(map(str, backend_ports)),
+        "XLA_FLAGS": (env.get("XLA_FLAGS", "")
+                      + f" --xla_force_host_platform_device_count="
+                        f"{_DEVICES_PER_HOST}").strip(),
+    })
+    procs = []
+    for pid in range(args.processes):
+        cenv = dict(env, AMP_PROCESS_ID=str(pid))
+        procs.append(subprocess.Popen([sys.executable, "-m",
+                                       "repro.launch.multihost", *sys.argv[1:]],
+                                      env=cenv))
+    deadline = time.time() + args.timeout
+    codes = []
+    try:
+        for p in procs:
+            left = max(1.0, deadline - time.time())
+            try:
+                codes.append(p.wait(timeout=left))
+            except subprocess.TimeoutExpired:
+                p.kill()
+                codes.append(124)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    worst = max(abs(c) for c in codes)
+    print(f"multihost parent: child exit codes {codes}")
+    return worst
+
+
+def _make_load(n_req: int):
+    import jax
+    import numpy as np
+
+    from ..core.amp import sample_problem
+    from ..core.denoisers import BernoulliGauss
+    from ..core.state_evolution import CSProblem
+    from ..serving import SolveRequest
+
+    n, m, p, t = 128, 64, 4, 8
+    prior = BernoulliGauss(eps=0.1)
+    prob = CSProblem(n=n, m=m, prior=prior, snr_db=20.0)
+    deltas = np.full(t, 0.05, np.float32)
+    deltas[0] = np.inf
+    reqs = []
+    for i in range(n_req):
+        _, a, y = sample_problem(jax.random.PRNGKey(i), n, m, prior,
+                                 prob.sigma_e2)
+        reqs.append(SolveRequest(y=y, a=a, prior=prior, n_proc=p,
+                                 n_iter=t, policy="fixed", deltas=deltas))
+    return prior, reqs
+
+
+def child(args) -> int:
+    from .mesh import init_cluster, supports_cross_host_collectives
+
+    info = init_cluster()
+    ports = [int(p) for p in
+             os.environ["AMP_BACKEND_PORTS"].split(",") if p]
+    print(f"multihost[{info.process_index}]: {info.process_count} procs, "
+          f"{info.local_devices} local / {info.global_devices} global "
+          f"devices, cross-host collectives="
+          f"{supports_cross_host_collectives()}")
+    assert info.process_count == args.processes, info
+    assert info.global_devices == args.processes * _DEVICES_PER_HOST, info
+
+    from ..serving import BucketPolicy, PrewarmSpec, SolveService
+    from ..serving.frontend import BackendServer, LocalBackend
+
+    policy = BucketPolicy(max_batch=8, n_quantum=64, mp_quantum=8)
+
+    if not info.is_frontend:
+        # backend process: serve until the frontend's shutdown op
+        port = ports[info.process_index - 1]
+        server = BackendServer(
+            LocalBackend(f"host{info.process_index}",
+                         SolveService(policy=policy,
+                                      rate_accounting=False)),
+            port=port)
+        print(f"multihost[{info.process_index}]: backend on :{port}")
+        server.serve_forever()
+        return 0
+
+    # frontend process: LocalBackend for host0 + TcpBackend per remote
+    import numpy as np
+
+    from ..serving import ClusterService, RouterPolicy
+    from ..serving.frontend import TcpBackend
+
+    backends = [LocalBackend("host0",
+                             SolveService(policy=policy,
+                                          rate_accounting=False))]
+    for i, port in enumerate(ports, start=1):
+        for attempt in range(60):   # backend process may still be booting
+            try:
+                backends.append(TcpBackend(("127.0.0.1", port), f"host{i}"))
+                break
+            except (ConnectionError, OSError):
+                time.sleep(0.5)
+        else:
+            print(f"multihost[0]: backend host{i} on :{port} never came up")
+            return 2
+
+    cluster = ClusterService(
+        backends=backends, policy=policy,
+        router_policy=RouterPolicy(min_replicas=len(backends)))
+    prior, reqs = _make_load(args.requests)
+    menu = [PrewarmSpec(n=128, m=64, n_proc=4, n_iter=8, policy="fixed",
+                        prior=prior, batch_widths=(8,))]
+    cluster.prewarm(menu)
+    warm = cluster.compile_count()
+
+    t0 = time.time()
+    results = sorted(cluster.solve(reqs), key=lambda r: r.request_id)
+    dt = time.time() - t0
+
+    # single-host reference on the same stream: cluster results must be
+    # bit-identical (same padded widths -> same compiled programs)
+    ref_svc = SolveService(policy=policy, rate_accounting=False)
+    ref_svc.prewarm(menu)
+    ref = ref_svc.solve(reqs)
+    max_dx = max(float(np.max(np.abs(c.x - r.x)))
+                 for c, r in zip(results, ref))
+
+    st = cluster.stats()
+    served = st["router"]["served"]
+    steady = cluster.compile_count() - warm
+    print(f"multihost[0]: {len(results)} results in {dt:.2f}s over "
+          f"{len(backends)} hosts; served {served}; "
+          f"steady-state compiles {steady}; max|dx| {max_dx:.1e}; "
+          f"imbalance {st['router']['imbalance']:.2f}x")
+    cluster.close(shutdown_remote=True)
+
+    failures = []
+    if len(results) != len(reqs):
+        failures.append(f"{len(reqs) - len(results)} results missing")
+    if max_dx != 0.0:
+        failures.append(f"cluster differs from single-host: "
+                        f"max|dx|={max_dx:.2e}")
+    if steady != 0:
+        failures.append(f"{steady} steady-state compiles after prewarm")
+    if any(v == 0 for v in served.values()):
+        failures.append(f"idle host in {served}")
+    for msg in failures:
+        print(f"multihost[0]: FAIL: {msg}")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="16 requests (CI sanity)")
+    ap.add_argument("--timeout", type=float, default=420.0,
+                    help="parent-side wall clock before children are "
+                         "killed (exit 124)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = 16
+    if os.environ.get("AMP_PROCESS_ID") is None:
+        return parent(args)
+    return child(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

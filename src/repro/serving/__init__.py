@@ -3,12 +3,22 @@
 Heterogeneous CS solve requests -> shape buckets -> vmapped batched engine
 calls -> per-request results with realized-rate accounting. The hot path
 (DESIGN.md §9) runs on a device-resident operand cache, AOT-prewarmed
-programs, and donated batch operands.
+programs, and donated batch operands. The cluster tier (DESIGN.md §11)
+splits into a frontend (``ClusterService`` admission + host backends), a
+scheduler (``ClusterRouter`` + ``Autoscaler``), and per-host
+``SolveService`` backends, with ``serving.codec`` bytes on the wire
+between hosts.
 """
 from .batcher import Batcher
 from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
                       bucket_for, pad_batch_size, placement_for)
+from .codec import (decode_request, decode_result, encode_request,
+                    encode_result)
+from .frontend import (BackendServer, ClusterService, LocalBackend,
+                       TcpBackend)
 from .operand_cache import OperandCache, fingerprint
+from .router import (Autoscaler, ClusterRouter, DemandTracker, HostInfo,
+                     Overloaded, RouterPolicy, routing_key, shape_cost)
 from .service import PrewarmSpec, SolveRequest, SolveResult, SolveService
 
 __all__ = [
@@ -16,4 +26,9 @@ __all__ = [
     "bucket_for", "pad_batch_size", "placement_for", "OperandCache",
     "fingerprint", "PrewarmSpec", "SolveRequest", "SolveResult",
     "SolveService",
+    # cluster tier (DESIGN.md §11)
+    "ClusterService", "LocalBackend", "BackendServer", "TcpBackend",
+    "ClusterRouter", "Autoscaler", "DemandTracker", "HostInfo",
+    "RouterPolicy", "Overloaded", "routing_key", "shape_cost",
+    "encode_request", "decode_request", "encode_result", "decode_result",
 ]

@@ -1,0 +1,209 @@
+"""Pytree/bytes serialization for the cluster frontend (DESIGN.md §11).
+
+``SolveRequest``/``SolveResult`` cross host boundaries as bytes — never
+pickle: the backend server decodes attacker-reachable payloads, and a
+pickle there is remote code execution. The format is a fixed-magic,
+versioned frame of
+
+    b"AMP1" | u32 header_len | JSON header | raw array buffers
+
+where the header carries every scalar field plus an ``arrays`` manifest
+(name, dtype string, shape) and the buffers follow concatenated in
+manifest order, C-contiguous little-endian. JSON covers all scalar field
+types we ship (str/int/float/bool/None); arrays go raw, so the round
+trip is bit-exact — including NaN/inf payloads and float rate columns —
+which the property test pins.
+
+Only fields of the public dataclasses are encoded: decode constructs
+``SolveRequest``/``SolveResult``/``BucketKey``/``PrewarmSpec`` by
+keyword, so unknown header keys (a newer peer) fail loudly instead of
+smuggling state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+import numpy as np
+
+from ..core.denoisers import BernoulliGauss
+from .buckets import BucketKey
+
+__all__ = [
+    "encode_request", "decode_request", "encode_result", "decode_result",
+    "bucket_to_dict", "bucket_from_dict", "spec_to_dict", "spec_from_dict",
+    "CodecError",
+]
+
+_MAGIC = b"AMP1"
+
+
+class CodecError(ValueError):
+    """Malformed or foreign frame (bad magic, truncated, unknown keys)."""
+
+
+# -- framing ----------------------------------------------------------------
+
+def _pack(header: dict, arrays: "dict[str, np.ndarray]") -> bytes:
+    manifest = []
+    bufs = []
+    for name, arr in arrays.items():
+        a = np.ascontiguousarray(arr)
+        if a.dtype.byteorder == ">":          # wire format is little-endian
+            a = a.astype(a.dtype.newbyteorder("<"))
+        manifest.append({"name": name, "dtype": a.dtype.str,
+                         "shape": list(a.shape)})
+        bufs.append(a.tobytes())
+    header = dict(header, arrays=manifest)
+    hj = json.dumps(header, separators=(",", ":")).encode()
+    return b"".join([_MAGIC, struct.pack("<I", len(hj)), hj] + bufs)
+
+
+def _unpack(buf: bytes) -> "tuple[dict, dict[str, np.ndarray]]":
+    if len(buf) < 8 or buf[:4] != _MAGIC:
+        raise CodecError(f"bad frame magic {buf[:4]!r}")
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    if len(buf) < 8 + hlen:
+        raise CodecError("truncated header")
+    try:
+        header = json.loads(buf[8:8 + hlen])
+    except json.JSONDecodeError as e:
+        raise CodecError(f"bad header: {e}") from e
+    arrays = {}
+    off = 8 + hlen
+    for ent in header.pop("arrays", []):
+        dt = np.dtype(ent["dtype"])
+        shape = tuple(ent["shape"])
+        nb = dt.itemsize * int(np.prod(shape, dtype=np.int64))
+        if len(buf) < off + nb:
+            raise CodecError(f"truncated array {ent['name']!r}")
+        arrays[ent["name"]] = np.frombuffer(
+            buf[off:off + nb], dt).reshape(shape).copy()
+        off += nb
+    if off != len(buf):
+        raise CodecError(f"{len(buf) - off} trailing bytes")
+    return header, arrays
+
+
+def _take(header: dict, key: str):
+    try:
+        return header.pop(key)
+    except KeyError:
+        raise CodecError(f"missing header field {key!r}") from None
+
+
+def _done(header: dict, kind: str) -> None:
+    if header:
+        raise CodecError(f"unknown {kind} fields {sorted(header)}")
+
+
+# -- small pieces -----------------------------------------------------------
+
+def _prior_to_dict(p: BernoulliGauss) -> dict:
+    return {"eps": float(p.eps), "mu_s": float(p.mu_s),
+            "sigma_s": float(p.sigma_s)}
+
+
+def _prior_from_dict(d: dict) -> BernoulliGauss:
+    return BernoulliGauss(**d)
+
+
+def bucket_to_dict(key: BucketKey) -> dict:
+    return dataclasses.asdict(key)
+
+
+def bucket_from_dict(d: dict) -> BucketKey:
+    try:
+        return BucketKey(**d)
+    except TypeError as e:
+        raise CodecError(f"bad bucket: {e}") from e
+
+
+def spec_to_dict(spec) -> dict:
+    """``PrewarmSpec`` as a JSON-able dict (remote-prewarm directives)."""
+    d = dataclasses.asdict(spec)
+    d["prior"] = _prior_to_dict(spec.prior)
+    if d.get("batch_widths") is not None:
+        d["batch_widths"] = list(d["batch_widths"])
+    return d
+
+
+def spec_from_dict(d: dict):
+    from .service import PrewarmSpec
+    d = dict(d)
+    d["prior"] = _prior_from_dict(d["prior"])
+    if d.get("batch_widths") is not None:
+        d["batch_widths"] = tuple(d["batch_widths"])
+    try:
+        return PrewarmSpec(**d)
+    except TypeError as e:
+        raise CodecError(f"bad prewarm spec: {e}") from e
+
+
+# -- SolveRequest / SolveResult --------------------------------------------
+
+def encode_request(req) -> bytes:
+    header = {
+        "kind": "request",
+        "prior": _prior_to_dict(req.prior),
+        "snr_db": req.snr_db, "n_proc": req.n_proc, "n_iter": req.n_iter,
+        "policy": req.policy, "dp_total_bits": req.dp_total_bits,
+        "bt_c_ratio": req.bt_c_ratio, "bt_r_max": req.bt_r_max,
+        "transport": req.transport, "layout": req.layout,
+        "erasure_rate": req.erasure_rate,
+        "erasure_model": req.erasure_model,
+        "erasure_burst": req.erasure_burst,
+        "erasure_seed": req.erasure_seed,
+        "recovery": req.recovery, "measure_wire": req.measure_wire,
+        "a_id": req.a_id, "request_id": req.request_id,
+    }
+    arrays = {"y": np.asarray(req.y), "a": np.asarray(req.a)}
+    if req.deltas is not None:
+        arrays["deltas"] = np.asarray(req.deltas)
+    return _pack(header, arrays)
+
+
+def decode_request(buf: bytes):
+    from .service import SolveRequest
+    header, arrays = _unpack(buf)
+    if _take(header, "kind") != "request":
+        raise CodecError("not a request frame")
+    header["prior"] = _prior_from_dict(_take(header, "prior"))
+    try:
+        return SolveRequest(y=arrays["y"], a=arrays["a"],
+                            deltas=arrays.get("deltas"), **header)
+    except TypeError as e:   # unknown field from a newer peer: fail loudly
+        raise CodecError(f"bad request: {e}") from e
+
+
+def encode_result(res) -> bytes:
+    header = {
+        "kind": "result",
+        "request_id": res.request_id,
+        "total_bits": res.total_bits,
+        "bucket": bucket_to_dict(res.bucket),
+        "batch_size": res.batch_size,
+        "bytes_on_wire": res.bytes_on_wire,
+        "payload_bytes": res.payload_bytes,
+        "time_on_air_s": res.time_on_air_s,
+        "energy_j": res.energy_j,
+    }
+    arrays = {"x": np.asarray(res.x),
+              "sigma2_hat": np.asarray(res.sigma2_hat),
+              "deltas": np.asarray(res.deltas),
+              "extra_var": np.asarray(res.extra_var),
+              "rates": np.asarray(res.rates)}
+    return _pack(header, arrays)
+
+
+def decode_result(buf: bytes):
+    from .service import SolveResult
+    header, arrays = _unpack(buf)
+    if _take(header, "kind") != "result":
+        raise CodecError("not a result frame")
+    header["bucket"] = bucket_from_dict(_take(header, "bucket"))
+    try:
+        return SolveResult(**header, **arrays)
+    except TypeError as e:
+        raise CodecError(f"bad result: {e}") from e

@@ -1,0 +1,558 @@
+"""Cluster frontend: admission, host backends, and the user-facing
+``ClusterService`` (DESIGN.md §11).
+
+The frontend half of the frontend/scheduler/backend split. A
+``ClusterService`` owns
+
+  * a set of **backends** — each one a ``SolveService`` on its own host
+    (``LocalBackend`` in-process, e.g. one per emulated host on a dev
+    box, or ``TcpBackend`` speaking the no-pickle ``serving.codec`` frame
+    protocol to a ``BackendServer`` in another ``jax.distributed``
+    process),
+  * the **scheduler** (``serving.router``): a ``ClusterRouter`` placing
+    placement-agnostic bucket keys onto hosts by load × shape, and an
+    ``Autoscaler`` moving per-bucket replica counts from demand EWMAs
+    scraped out of each backend's ``Batcher.take_demand`` window,
+  * **admission**: global request ids, per-host outstanding-cost caps
+    (shed with ``Overloaded`` when every replica of a bucket is
+    saturated), and the id rewrite between backend-local and global
+    request ids.
+
+The per-host dispatch-ahead overlap is untouched — each backend's
+``SolveService`` still launches engine calls asynchronously and the
+frontend only ``poll``s materialized results — so the cluster tier adds
+routing, not synchronization, to the hot path.
+
+Cross-host byte traffic is exactly the codec frames: requests/results
+never pickle, and the measured ``bytes_on_wire`` accounting of
+DESIGN.md §10 stays per-request inside each backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+import threading
+import time
+
+from .buckets import BucketPolicy
+from .codec import (bucket_from_dict, bucket_to_dict, decode_request,
+                    decode_result, encode_request, encode_result,
+                    spec_from_dict, spec_to_dict)
+from .router import (Autoscaler, ClusterRouter, HostInfo, Overloaded,
+                     RouterPolicy, routing_key, shape_cost)
+from .service import PrewarmSpec, SolveService
+
+__all__ = ["LocalBackend", "BackendServer", "TcpBackend", "ClusterService",
+           "Overloaded"]
+
+import json
+
+
+class LocalBackend:
+    """One in-process host: a ``SolveService`` (its own engines, operand
+    cache, batcher — and, on a real deployment, its own device mesh)
+    behind the backend interface the frontend routes to."""
+
+    def __init__(self, host_id: str, service: SolveService):
+        self.host_id = host_id
+        self.service = service
+
+    @property
+    def n_devices(self) -> int:
+        return self.service.n_devices
+
+    def submit(self, req) -> int:
+        return self.service.submit(req)
+
+    def poll(self) -> list:
+        return self.service.poll()
+
+    def flush(self) -> list:
+        return self.service.flush()
+
+    def take_demand(self) -> dict:
+        return self.service.take_demand()
+
+    def prewarm(self, menu) -> dict:
+        return self.service.prewarm(menu)
+
+    def stats(self) -> dict:
+        return self.service.stats()
+
+    def compile_count(self) -> int:
+        return self.service.compile_count()
+
+    def close(self) -> None:
+        pass
+
+
+# -- TCP transport (codec frames, no pickle) --------------------------------
+#
+# Frame: u32 length | 1-byte op | body. Replies: u32 length | 1-byte
+# status (b"R" ok / b"E" error) | body. Result lists nest as
+# u32 count | (u32 len | result-frame)*.
+
+_OPS = (b"S", b"P", b"F", b"D", b"W", b"T", b"C", b"N", b"Q")
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed mid-frame")
+        buf += chunk
+    return buf
+
+
+def _send_frame(sock, op: bytes, body: bytes = b"") -> None:
+    sock.sendall(struct.pack("<I", len(body) + 1) + op + body)
+
+
+def _recv_frame(sock) -> "tuple[bytes, bytes]":
+    (ln,) = struct.unpack("<I", _recv_exact(sock, 4))
+    payload = _recv_exact(sock, ln)
+    return payload[:1], payload[1:]
+
+
+def _pack_results(results) -> bytes:
+    frames = [encode_result(r) for r in results]
+    return b"".join([struct.pack("<I", len(frames))]
+                    + [struct.pack("<I", len(f)) + f for f in frames])
+
+
+def _unpack_results(body: bytes) -> list:
+    (count,) = struct.unpack("<I", body[:4])
+    off, out = 4, []
+    for _ in range(count):
+        (ln,) = struct.unpack("<I", body[off:off + 4])
+        off += 4
+        out.append(decode_result(body[off:off + ln]))
+        off += ln
+    return out
+
+
+class BackendServer:
+    """Serves one ``LocalBackend`` over TCP to a remote frontend. One
+    frontend connection at a time (the cluster has exactly one router);
+    runs on a daemon thread via ``start()``. The ``Q`` op (or ``stop()``)
+    shuts it down."""
+
+    def __init__(self, backend: LocalBackend, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.backend = backend
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(1)
+        self.host, self.port = self._sock.getsockname()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> threading.Thread:
+        th = threading.Thread(target=self.serve_forever,
+                              name=f"backend-{self.backend.host_id}",
+                              daemon=True)
+        self._thread = th
+        th.start()
+        return th
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def serve_forever(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                break   # listener closed by stop()
+            with conn:
+                try:
+                    self._serve_conn(conn)
+                except (ConnectionError, OSError):
+                    continue   # frontend went away; await the next one
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def _serve_conn(self, conn) -> None:
+        while not self._stop.is_set():
+            op, body = _recv_frame(conn)
+            try:
+                reply = self._dispatch(op, body)
+            except Exception as e:   # surface backend errors to the router
+                _send_frame(conn, b"E", repr(e).encode())
+                continue
+            _send_frame(conn, b"R", reply)
+            if op == b"Q":
+                self.stop()
+                return
+
+    def _dispatch(self, op: bytes, body: bytes) -> bytes:
+        b = self.backend
+        if op == b"S":
+            return struct.pack("<q", b.submit(decode_request(body)))
+        if op == b"P":
+            return _pack_results(b.poll())
+        if op == b"F":
+            return _pack_results(b.flush())
+        if op == b"D":
+            return json.dumps([[bucket_to_dict(k), v]
+                               for k, v in b.take_demand().items()]).encode()
+        if op == b"W":
+            menu = [spec_from_dict(d) for d in json.loads(body)]
+            return json.dumps(b.prewarm(menu)).encode()
+        if op == b"T":
+            return json.dumps(b.stats()).encode()
+        if op == b"C":
+            return json.dumps(b.compile_count()).encode()
+        if op == b"N":
+            return json.dumps(b.n_devices).encode()
+        if op == b"Q":
+            return b"ok"
+        raise ValueError(f"unknown op {op!r}")
+
+
+class TcpBackend:
+    """Frontend-side proxy for a ``BackendServer`` in another process
+    (typically another ``jax.distributed`` host). Thread-safe: one
+    request/reply in flight per connection."""
+
+    def __init__(self, address: "tuple[str, int]", host_id: str):
+        self.host_id = host_id
+        self._sock = socket.create_connection(address, timeout=120.0)
+        self._lock = threading.Lock()
+        self.n_devices = int(self._call(b"N", json.loads))
+
+    def _call(self, op: bytes, parse, body: bytes = b""):
+        with self._lock:
+            _send_frame(self._sock, op, body)
+            status, reply = _recv_frame(self._sock)
+        if status == b"E":
+            raise RuntimeError(
+                f"backend {self.host_id}: {reply.decode(errors='replace')}")
+        return parse(reply)
+
+    def submit(self, req) -> int:
+        return self._call(b"S", lambda b: struct.unpack("<q", b)[0],
+                          encode_request(req))
+
+    def poll(self) -> list:
+        return self._call(b"P", _unpack_results)
+
+    def flush(self) -> list:
+        return self._call(b"F", _unpack_results)
+
+    def take_demand(self) -> dict:
+        pairs = self._call(b"D", json.loads)
+        return {bucket_from_dict(d): v for d, v in pairs}
+
+    def prewarm(self, menu) -> dict:
+        body = json.dumps([spec_to_dict(s) for s in menu]).encode()
+        return self._call(b"W", json.loads, body)
+
+    def stats(self) -> dict:
+        return self._call(b"T", json.loads)
+
+    def compile_count(self) -> int:
+        return int(self._call(b"C", json.loads))
+
+    def shutdown_server(self) -> None:
+        try:
+            self._call(b"Q", lambda b: b)
+        except (RuntimeError, OSError, ConnectionError):
+            pass
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# -- the cluster service ----------------------------------------------------
+
+class ClusterService:
+    """Multi-host elastic serving plane: ``SolveService`` semantics
+    (submit/solve/stream/flush) over a set of host backends, with
+    load × shape routing and per-bucket replica autoscaling.
+
+    ``backends=None`` builds ``n_hosts`` in-process emulated hosts, each
+    its own ``SolveService`` (shared ``BucketPolicy`` — routing keys must
+    agree structurally with every backend's bucketing; heterogeneous
+    policies across hosts would route a request to a bucket the backend
+    then shapes differently). Row and column buckets ride the same
+    router: the routing key carries the layout axis, so tall C-MP-AMP
+    requests and wide row requests each scale their own replicas.
+
+    Routing is batch-affine: a bucket's filling partial batch stays on
+    one host (the ``_fill`` hint to ``ClusterRouter.route``), so
+    cross-host routing happens at batch granularity — every dispatch
+    runs at the width the single-host service would have used, which is
+    what makes cluster results bit-identical to it, and load balancing
+    happens between batches, not inside them.
+
+    Autoscaling is scrape-driven: ``scrape()`` drains every backend's
+    demand window into the autoscaler and applies its events (scale-up
+    prewarms the bucket's exemplar spec on the new host before traffic
+    lands there). With ``RouterPolicy.scrape_every_s > 0`` submits
+    trigger scrapes automatically; the default is manual (deterministic
+    for tests and benches).
+    """
+
+    def __init__(self, backends: list | None = None, n_hosts: int = 1,
+                 policy: BucketPolicy | None = None,
+                 router_policy: RouterPolicy | None = None,
+                 service_factory=None, **service_kwargs):
+        self.policy = policy or BucketPolicy()
+        if backends is None:
+            factory = service_factory or (
+                lambda i: SolveService(policy=self.policy,
+                                       **service_kwargs))
+            backends = [LocalBackend(f"host{i}", factory(i))
+                        for i in range(max(1, n_hosts))]
+        self.backends = {b.host_id: b for b in backends}
+        assert len(self.backends) == len(backends), "duplicate host ids"
+        self.router_policy = router_policy or RouterPolicy()
+        self.router = ClusterRouter(
+            [HostInfo(b.host_id, b.n_devices) for b in backends],
+            self.router_policy)
+        self.autoscaler = Autoscaler(self.router, self.router_policy)
+        self._next_id = 0
+        # (host_id, backend-local id) -> (global id, routed cost)
+        self._inflight: dict = {}
+        self._completed: list = []
+        self._specs: dict = {}      # routing key -> exemplar PrewarmSpec
+        # (host_id, routing key) -> open-partial-batch depth, counted
+        # mod max_batch (a group dispatches exactly when it fills): the
+        # batch-affinity hint for the router, reset when flush closes
+        # every open group
+        self._fill: dict = {}
+        self._last_scrape = time.monotonic()
+        self.shed_count = 0
+        self.submitted = 0
+
+    # -- intake --------------------------------------------------------------
+
+    def _routing_key(self, req):
+        return routing_key(req, self.policy)
+
+    def _open_batch_host(self, key) -> str | None:
+        """The replica holding this bucket's fullest open partial batch
+        (None when every group is empty or just dispatched): routing
+        there first keeps one filling batch on one host — continuous
+        batching across hosts would otherwise shear groups apart as
+        completions drain the load signal mid-stream."""
+        best_fill, best = 0, None
+        for hid in self.router.replicas(key):
+            f = self._fill.get((hid, key), 0)
+            if f > best_fill:
+                best_fill, best = f, hid
+        return best
+
+    def _bump_fill(self, host_id: str, key) -> None:
+        f = (self._fill.get((host_id, key), 0) + 1) % self.policy.max_batch
+        self._fill[(host_id, key)] = f
+
+    def _remember_spec(self, key, req) -> None:
+        if key not in self._specs:
+            self._specs[key] = PrewarmSpec(
+                n=req.n, m=req.m, n_proc=req.n_proc, n_iter=req.n_iter,
+                policy=req.policy, transport=req.transport,
+                layout=req.layout, snr_db=req.snr_db, prior=req.prior)
+
+    def submit(self, req) -> int:
+        """Route one request to a backend host; returns its *global*
+        request id (backend-local ids never escape). Raises
+        ``Overloaded`` when every replica of the request's bucket is at
+        the admission cap — the shed path; ``shed_count`` tracks it."""
+        key = self._routing_key(req)
+        cost = shape_cost(key)
+        self._remember_spec(key, req)
+        try:
+            host_id = self.router.route(key, cost,
+                                        prefer=self._open_batch_host(key))
+        except Overloaded:
+            self.shed_count += 1
+            raise
+        self._bump_fill(host_id, key)
+        # the backend assigns its own local id: hand it a fresh copy so
+        # the caller's template (and our global numbering) stay untouched
+        local = self.backends[host_id].submit(
+            dataclasses.replace(req, request_id=-1))
+        gid = self._next_id
+        self._next_id += 1
+        self._inflight[(host_id, local)] = (gid, cost)
+        self.submitted += 1
+        if self.router_policy.scrape_every_s > 0.0:
+            now = time.monotonic()
+            if now - self._last_scrape >= self.router_policy.scrape_every_s:
+                self.scrape(now)
+        return gid
+
+    def _absorb(self, host_id: str, results) -> None:
+        """Rewrite backend-local ids to global ids, return the routed
+        cost to the router, buffer globally."""
+        for res in results:
+            entry = self._inflight.pop((host_id, res.request_id), None)
+            assert entry is not None, \
+                f"backend {host_id} returned unknown id {res.request_id}"
+            gid, cost = entry
+            self.router.complete(host_id, cost)
+            self._completed.append(
+                dataclasses.replace(res, request_id=gid))
+
+    def poll(self) -> list:
+        """Collect materialized results from every backend (no forced
+        dispatch of partial batches)."""
+        for host_id, b in self.backends.items():
+            self._absorb(host_id, b.poll())
+        out, self._completed = self._completed, []
+        return out
+
+    def flush(self) -> list:
+        """Dispatch every backend's stragglers; return all buffered
+        results."""
+        for host_id, b in self.backends.items():
+            self._absorb(host_id, b.flush())
+        self._fill.clear()          # flush closed every open group
+        out, self._completed = self._completed, []
+        return out
+
+    def solve(self, reqs) -> list:
+        """Submit + flush; results in submission order (``SolveService``
+        semantics: foreign buffered results stay for their consumer)."""
+        ids = [self.submit(r) for r in reqs]
+        own = set(ids)
+        by_id = {}
+        for r in self.flush():
+            if r.request_id in own:
+                by_id[r.request_id] = r
+            else:
+                self._completed.append(r)
+        return [by_id[i] for i in ids]
+
+    def stream(self, reqs):
+        """Continuous batching across hosts: each submit polls its routed
+        backend, so a bucket batch completing on any host yields
+        immediately; stragglers flush when the input ends."""
+        own = set()
+
+        def take_own():
+            keep = []
+            for r in self._completed:
+                if r.request_id in own:
+                    yield r
+                else:
+                    keep.append(r)
+            self._completed = keep
+
+        for r in reqs:
+            own.add(self.submit(r))
+            for host_id, b in self.backends.items():
+                self._absorb(host_id, b.poll())
+            if self._completed:
+                yield from take_own()
+        for host_id, b in self.backends.items():
+            self._absorb(host_id, b.flush())
+        self._fill.clear()
+        yield from take_own()
+
+    def partition(self, reqs) -> dict:
+        """Route a request list without executing it: ``{host_id:
+        [requests]}`` in routed order. The weak-scaling bench uses this
+        to time each emulated host's share in isolation. Routed costs
+        stay outstanding until the whole list is placed — completing
+        each immediately would zero the load signal between requests
+        and funnel every tie to the first host — then all return to the
+        router. Planning only: batch-affinity fill and the router's
+        served counters are restored afterwards, so repeated partitions
+        (the bench times warm passes) leave no trace in ``stats()``."""
+        shares: dict = {hid: [] for hid in self.backends}
+        placed = []
+        saved_fill = dict(self._fill)   # planning only: no group opens
+        saved_served = dict(self.router._served)
+        saved_cost = dict(self.router._served_cost)
+        for req in reqs:
+            key = self._routing_key(req)
+            cost = shape_cost(key)
+            self._remember_spec(key, req)
+            host_id = self.router.route(key, cost,
+                                        prefer=self._open_batch_host(key))
+            self._bump_fill(host_id, key)
+            placed.append((host_id, cost))
+            shares[host_id].append(req)
+        for host_id, cost in placed:
+            self.router.complete(host_id, cost)
+        self._fill = saved_fill
+        self.router._served = saved_served
+        self.router._served_cost = saved_cost
+        return shares
+
+    # -- elasticity ----------------------------------------------------------
+
+    def scrape(self, now: float | None = None) -> list:
+        """One autoscaler tick: drain every backend's demand window,
+        fold it into the EWMAs, apply the scaling events (scale-up
+        prewarms the bucket's exemplar spec on the new host). Returns
+        the applied events."""
+        now = time.monotonic() if now is None else now
+        self._last_scrape = now
+        deltas: dict = {}
+        for b in self.backends.values():
+            for k, v in b.take_demand().items():
+                rk = dataclasses.replace(k, placement="local")
+                deltas[rk] = deltas.get(rk, 0) + v
+        self.autoscaler.observe(deltas, now)
+        events = self.autoscaler.step(now)
+        for kind, key, host_id in events:
+            if kind != "scale_up":
+                continue
+            spec = self._specs.get(key)
+            if spec is not None:
+                self.backends[host_id].prewarm([spec])
+                self.router.mark_warm(host_id, key)
+        return events
+
+    def prewarm(self, menu, hosts: list | None = None) -> dict:
+        """Prewarm a traffic menu on every backend (or a named subset)
+        and mark the (host, bucket) pairs warm for the router.
+        ``PrewarmSpec`` carries the same structural fields as a request,
+        so ``routing_key`` applies to it directly."""
+        menu = list(menu)
+        targets = hosts if hosts is not None else list(self.backends)
+        reports = {}
+        for host_id in targets:
+            reports[host_id] = self.backends[host_id].prewarm(menu)
+            for spec in menu:
+                key = routing_key(spec, self.policy)
+                self._specs.setdefault(key, spec)
+                self.router.mark_warm(host_id, key)
+        return reports
+
+    # -- observability -------------------------------------------------------
+
+    def compile_count(self) -> int:
+        return sum(b.compile_count() for b in self.backends.values())
+
+    def stats(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "shed": self.shed_count,
+            "inflight": len(self._inflight),
+            "router": self.router.stats(),
+            "autoscaler": self.autoscaler.stats(),
+            "hosts": {hid: b.stats() for hid, b in self.backends.items()},
+        }
+
+    def close(self, shutdown_remote: bool = False) -> None:
+        for b in self.backends.values():
+            if shutdown_remote and isinstance(b, TcpBackend):
+                b.shutdown_server()
+            b.close()

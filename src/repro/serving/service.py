@@ -324,6 +324,16 @@ class SolveService:
         for finalize in pending:
             self._completed.extend(finalize())
 
+    def poll(self) -> list[SolveResult]:
+        """Materialize every *already dispatched* batch and hand back all
+        buffered results — without forcing partially-filled bucket groups
+        to dispatch (unlike ``flush``). The cluster frontend's per-submit
+        collection hook: full batches stream out as they complete while
+        stragglers keep accumulating toward their batch width."""
+        self._collect_pending()
+        out, self._completed = self._completed, []
+        return out
+
     def flush(self) -> list[SolveResult]:
         """Dispatch all pending groups; return every buffered result."""
         # dispatch everything first, then materialize: the engine calls
@@ -987,38 +997,68 @@ class SolveService:
         """Total XLA compiles across every engine this service owns (het
         bucket engines and singleton fast-path engines). Flat after
         prewarm under steady-state traffic — the zero-recompile
-        invariant tests pin."""
+        invariant tests pin. Each engine's count is read through its
+        ``counters()`` snapshot (taken under the engine's compile lock),
+        so a background prewarm thread mid-compile is counted either
+        fully or not at all — never half."""
         with self._lock:
             engines = (list(self._engines.values())
                        + list(self._wire_engines.values())
                        + list(self._single_engines.values()))
-        return sum(e.compile_count for e in engines)
+        return sum(e.counters()["compiles"] for e in engines)
+
+    def demand(self) -> dict:
+        """Lifetime per-bucket admission counts (``Batcher.demand``)."""
+        return self._batcher.demand()
+
+    def take_demand(self) -> dict:
+        """Per-bucket admissions since the previous take — the cluster
+        autoscaler's scrape window (``Batcher.take_demand``)."""
+        return self._batcher.take_demand()
 
     def stats(self) -> dict:
         """Hot-path observability: operand-cache counters, per-bucket
-        compile counts, singleton fast-path traffic, per-bucket demand
-        (requests ever admitted), and the last prewarm report."""
+        compile/dispatch counts, singleton fast-path traffic, per-bucket
+        demand (requests ever admitted), and the last prewarm report.
+
+        The whole aggregation runs under the service lock and reads each
+        engine through its atomic ``counters()`` snapshot: a concurrent
+        background ``prewarm`` thread (which mutates the engine maps and
+        bumps compile counters mid-flight) can therefore never produce a
+        torn report where ``compiles.total`` disagrees with the engines
+        that exist or demand counts reflect a different instant than the
+        compile counts they are read next to."""
         with self._lock:
             engines = ([(k, e, "") for k, e in self._engines.items()]
                        + [(k, e, "/wire")
                           for k, e in self._wire_engines.items()])
             singles = list(self._single_engines.items())
-        by_bucket = {}
-        for key, eng, tag in engines:
-            label = (f"{key.layout}/{key.placement}/n{key.n_pad}"
-                     f"/mp{key.mp_pad}/p{key.n_proc}/t{key.t_max}"
-                     f"/{key.transport}{tag}")
-            by_bucket[label] = eng.compile_count
-        for (n, m, p, t, transport, _prior), eng in singles:
-            by_bucket[f"single/n{n}/m{m}/p{p}/t{t}/{transport}"] = \
-                eng.compile_count
+            by_bucket = {}
+            dispatches = {}
+            for key, eng, tag in engines:
+                label = (f"{key.layout}/{key.placement}/n{key.n_pad}"
+                         f"/mp{key.mp_pad}/p{key.n_proc}/t{key.t_max}"
+                         f"/{key.transport}{tag}")
+                c = eng.counters()
+                by_bucket[label] = c["compiles"]
+                dispatches[label] = c["dispatches"]
+            for (n, m, p, t, transport, _prior), eng in singles:
+                label = f"single/n{n}/m{m}/p{p}/t{t}/{transport}"
+                c = eng.counters()
+                by_bucket[label] = c["compiles"]
+                dispatches[label] = c["dispatches"]
+            demand = self._batcher.demand()
+            singleton_dispatches = self._singleton_dispatches
+            prewarm_report = self._prewarm_report
+            opstats = (self._opcache.stats()
+                       if self._opcache is not None else None)
         return {
-            "operand_cache": (self._opcache.stats()
-                              if self._opcache is not None else None),
+            "operand_cache": opstats,
             "compiles": {"total": sum(by_bucket.values()),
                          "by_bucket": by_bucket},
-            "singleton_dispatches": self._singleton_dispatches,
-            "bucket_demand": {str(k): v
-                              for k, v in self._batcher.demand().items()},
-            "prewarm": self._prewarm_report,
+            "dispatches": {"total": sum(dispatches.values()),
+                           "by_bucket": dispatches},
+            "singleton_dispatches": singleton_dispatches,
+            "bucket_demand": {str(k): v for k, v in demand.items()},
+            "prewarm": prewarm_report,
         }

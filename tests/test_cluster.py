@@ -1,0 +1,431 @@
+"""Cluster-tier tests (DESIGN.md §11): codec round-trips, router/
+autoscaler scheduling, the emulated multi-host ``ClusterService``
+(bit-identity + zero steady-state recompiles, the ISSUE 8 acceptance
+criteria), and the TCP backend transport on a loopback socket."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.denoisers import BernoulliGauss
+from repro.serving import (Autoscaler, BucketPolicy, ClusterRouter,
+                           ClusterService, DemandTracker, HostInfo,
+                           Overloaded, PrewarmSpec, RouterPolicy,
+                           SolveRequest, SolveService, decode_request,
+                           decode_result, encode_request, encode_result,
+                           routing_key, shape_cost)
+from repro.serving.frontend import BackendServer, LocalBackend, TcpBackend
+
+POL = BucketPolicy(max_batch=8, n_quantum=64, mp_quantum=8)
+
+
+def make_reqs(n_req: int, n: int = 128, m: int = 64, p: int = 4,
+              t: int = 8, seed: int = 0):
+    import jax
+
+    from repro.core.amp import sample_problem
+    from repro.core.state_evolution import CSProblem
+
+    prior = BernoulliGauss(eps=0.1)
+    prob = CSProblem(n=n, m=m, prior=prior, snr_db=20.0)
+    deltas = np.full(t, 0.05, np.float32)
+    deltas[0] = np.inf
+    reqs = []
+    for i in range(n_req):
+        _, a, y = sample_problem(jax.random.PRNGKey(seed + i), n, m, prior,
+                                 prob.sigma_e2)
+        reqs.append(SolveRequest(y=y, a=a, prior=prior, n_proc=p,
+                                 n_iter=t, policy="fixed", deltas=deltas))
+    return prior, reqs
+
+
+# ---------------------------------------------------------------------------
+# codec (satellite: no pickle on the wire)
+# ---------------------------------------------------------------------------
+
+def assert_request_roundtrip(req):
+    back = decode_request(encode_request(req))
+    for f in ("request_id", "n_proc", "n_iter", "policy", "transport",
+              "snr_db", "layout", "measure_wire", "erasure_rate",
+              "erasure_seed", "recovery"):
+        assert getattr(back, f) == getattr(req, f), f
+    assert type(back.prior) is type(req.prior)
+    np.testing.assert_array_equal(np.asarray(back.y), np.asarray(req.y))
+    np.testing.assert_array_equal(np.asarray(back.a), np.asarray(req.a))
+    if req.deltas is None:
+        assert back.deltas is None
+    else:
+        np.testing.assert_array_equal(np.asarray(back.deltas),
+                                      np.asarray(req.deltas))
+
+
+def test_codec_request_roundtrip():
+    _, reqs = make_reqs(1)
+    assert_request_roundtrip(reqs[0])
+    # no-deltas variant (lossless policy)
+    assert_request_roundtrip(dataclasses.replace(
+        reqs[0], policy="lossless", deltas=None, request_id=7))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 2 ** 31 - 1),
+       st.sampled_from(["fixed", "lossless"]),
+       st.floats(5.0, 40.0, allow_nan=False))
+def test_codec_request_roundtrip_property(nq, mq, rid, policy, snr):
+    """Any structurally valid request survives the wire bit-exactly —
+    shapes, ids, schedules, and float fields included."""
+    rng = np.random.default_rng(rid % 1000)
+    n, m, p = 8 * nq, 4 * mq, 4
+    deltas = None
+    if policy == "fixed":
+        deltas = np.full(6, 0.05, np.float32)
+        deltas[0] = np.inf
+    req = SolveRequest(
+        y=rng.standard_normal(m).astype(np.float32),
+        a=rng.standard_normal((m, n)).astype(np.float32),
+        prior=BernoulliGauss(eps=0.1), snr_db=snr, n_proc=p, n_iter=6,
+        policy=policy, deltas=deltas, request_id=rid)
+    assert_request_roundtrip(req)
+
+
+def test_codec_result_roundtrip(cluster_ctx):
+    _, _, base_res, *_ = cluster_ctx
+    res = base_res[0]
+    back = decode_result(encode_result(res))
+    assert back.request_id == res.request_id
+    assert back.bucket == res.bucket
+    assert back.batch_size == res.batch_size
+    assert back.total_bits == res.total_bits
+    np.testing.assert_array_equal(np.asarray(back.x), np.asarray(res.x))
+    np.testing.assert_array_equal(np.asarray(back.rates),
+                                  np.asarray(res.rates))
+
+
+def test_codec_rejects_unknown_fields():
+    from repro.serving.codec import CodecError, _pack, _unpack
+
+    _, reqs = make_reqs(1)
+    buf = encode_request(reqs[0])
+    header, arrays = _unpack(buf)
+    header["no_such_field"] = 1
+    with pytest.raises(CodecError):
+        decode_request(_pack(header, arrays))
+    with pytest.raises(CodecError):
+        decode_request(b"BAD1" + buf[4:])   # wrong magic
+
+
+# ---------------------------------------------------------------------------
+# scheduler units: router, demand tracker, autoscaler (no jax, synthetic
+# clocks — everything deterministic)
+# ---------------------------------------------------------------------------
+
+def two_host_router(**kw):
+    pol = RouterPolicy(**kw)
+    return ClusterRouter([HostInfo("a"), HostInfo("b")], pol), pol
+
+
+def any_key():
+    _, reqs = make_reqs(1)
+    return routing_key(reqs[0], POL)
+
+
+def test_router_least_loaded_spreads_with_replicas():
+    r, _ = two_host_router(min_replicas=2)
+    key = any_key()
+    cost = shape_cost(key)
+    picks = [r.route(key, cost) for _ in range(6)]
+    assert picks == ["a", "b", "a", "b", "a", "b"]
+    assert r.imbalance() == 1.0
+    # completes drain outstanding, never below zero
+    for hid in picks:
+        r.complete(hid, cost)
+    r.complete("a", 1e9)
+    assert r.stats()["outstanding"] == {"a": 0.0, "b": 0.0}
+
+
+def test_router_warmth_breaks_ties_only():
+    r, _ = two_host_router(min_replicas=2)
+    key = any_key()
+    r.mark_warm("b", key)
+    # both idle: warm host b wins the tie despite host order
+    assert r.route(key, 1.0) == "b"
+    # b now loaded: cold a wins on load — warmth must not pin routing
+    assert r.route(key, 1.0) == "a"
+
+
+def test_router_replica_lifecycle():
+    r, _ = two_host_router(min_replicas=1)
+    key = any_key()
+    assert r.replicas(key) == ["a"]
+    assert r.add_replica(key) == "b"
+    assert r.add_replica(key) is None          # saturated
+    assert r.remove_replica(key) == "b"        # most recent first
+    assert r.remove_replica(key) is None       # never below min
+    assert r.replicas(key) == ["a"]
+
+
+def test_router_sheds_when_all_replicas_capped():
+    r, _ = two_host_router(min_replicas=2, max_outstanding=2.0)
+    key = any_key()
+    for _ in range(4):
+        r.route(key, 1.0)                      # both hosts reach the cap
+    with pytest.raises(Overloaded):
+        r.route(key, 1.0)
+    r.complete("b", 1.0)
+    assert r.route(key, 1.0) == "b"            # capacity freed -> admits
+
+
+def test_demand_tracker_ewma_decay():
+    tr = DemandTracker(halflife_s=10.0)
+    key = any_key()
+    tr.update({key: 5}, now=0.0)               # seed scrape: rate 0
+    assert tr.rate(key) == 0.0
+    tr.update({key: 100}, now=10.0)            # 10 req/s, half blended
+    assert tr.rate(key) == pytest.approx(5.0)
+    tr.update({}, now=20.0)                    # silence decays, not resets
+    assert tr.rate(key) == pytest.approx(2.5)
+    assert 0.0 < tr.rate(key) < 5.0
+
+
+def test_autoscaler_scale_up_then_hysteresis_down():
+    r, pol = two_host_router(min_replicas=1, target_load=1.0,
+                             down_patience=2, ewma_halflife_s=0.5)
+    a = Autoscaler(r, pol)
+    key = any_key()
+    # short halflife: one 1 s window at 1000 req/s blends to ~750 req/s,
+    # far past target_load -> desired clamps to both hosts
+    a.observe({key: 0}, now=0.0)
+    a.observe({key: 1000}, now=1.0)
+    events = a.step(now=1.0)
+    assert ("scale_up", key, "b") in events
+    assert len(r.replicas(key)) == 2
+    # demand vanishes: force the EWMA to the floor to trip scale-down
+    a.tracker._rate[key] = 0.0
+    assert a.step(now=2.0) == []               # 1st low pass: patience
+    assert len(r.replicas(key)) == 2
+    assert a.step(now=3.0) == [("scale_down", key, "b")]
+    assert len(r.replicas(key)) == 1
+    # events ledger keeps everything, in order
+    kinds = [k for k, *_ in a.events]
+    assert kinds == ["scale_up", "scale_down"]
+
+
+# ---------------------------------------------------------------------------
+# the emulated multi-host service (ISSUE 8 acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cluster_ctx():
+    """One solve of the same 16-request stream through a single-host
+    service and a 2-host cluster (shared compile cost across tests)."""
+    prior, reqs = make_reqs(16)
+    menu = [PrewarmSpec(n=128, m=64, n_proc=4, n_iter=8, policy="fixed",
+                        prior=prior, batch_widths=(8,))]
+
+    ref = SolveService(policy=POL, rate_accounting=False)
+    ref.prewarm(menu)
+    base_res = ref.solve(reqs)
+
+    cl = ClusterService(n_hosts=2, policy=POL,
+                        router_policy=RouterPolicy(min_replicas=2),
+                        rate_accounting=False)
+    cl.prewarm(menu)
+    warm = cl.compile_count()
+    cl_res = sorted(cl.solve(reqs), key=lambda r: r.request_id)
+    # router view right after the reference stream (later tests keep
+    # feeding this cluster, so balance asserts read the snapshot)
+    stats0 = cl.stats()
+    return prior, reqs, base_res, cl, cl_res, warm, stats0
+
+
+def test_cluster_matches_single_host_bitwise(cluster_ctx):
+    """Same stream, same padded widths -> per-request results must be
+    bit-identical to the single-host service (vmap lanes are
+    independent; the route only picks which host's copy of the same
+    compiled program runs)."""
+    _, reqs, base_res, _, cl_res, _, _ = cluster_ctx
+    assert len(cl_res) == len(reqs)
+    for c, b in zip(cl_res, base_res):
+        assert c.request_id == b.request_id
+        np.testing.assert_array_equal(np.asarray(c.x), np.asarray(b.x))
+        np.testing.assert_array_equal(np.asarray(c.sigma2_hat),
+                                      np.asarray(b.sigma2_hat))
+
+
+def test_cluster_zero_steady_state_compiles(cluster_ctx):
+    _, reqs, _, cl, _, warm, _ = cluster_ctx
+    assert cl.compile_count() == warm
+    # further traffic on the prewarmed bucket stays compile-free too
+    cl.solve(reqs[:8])
+    assert cl.compile_count() == warm
+
+
+def test_cluster_balances_hosts(cluster_ctx):
+    """Batch-affine routing balances at batch granularity: the 16-req
+    stream lands as one full batch per host."""
+    *_, stats0 = cluster_ctx
+    served = stats0["router"]["served"]
+    assert served == {"host0": 8, "host1": 8}
+    assert stats0["router"]["imbalance"] == pytest.approx(1.0)
+
+
+def test_cluster_partition_balances_without_executing(cluster_ctx):
+    _, reqs, _, cl, _, warm, _ = cluster_ctx
+    shares = cl.partition(reqs)
+    assert sorted(len(s) for s in shares.values()) == [8, 8]
+    assert sum(len(s) for s in shares.values()) == len(reqs)
+    assert cl.compile_count() == warm          # routed, never dispatched
+    assert cl.router.stats()["outstanding"] == {"host0": 0.0,
+                                                "host1": 0.0}
+
+
+def test_cluster_stream_and_global_ids(cluster_ctx):
+    prior, reqs, base_res, cl, _, _, _ = cluster_ctx
+    before = cl.submitted
+    results = sorted(cl.stream(iter(reqs)), key=lambda r: r.request_id)
+    assert [r.request_id for r in results] == \
+        list(range(before, before + len(reqs)))
+    # stream results carry the same payloads as the reference solve
+    for c, b in zip(results, base_res):
+        np.testing.assert_array_equal(np.asarray(c.x), np.asarray(b.x))
+
+
+def test_cluster_sheds_and_counts(cluster_ctx):
+    prior, reqs, *_ = cluster_ctx
+    key = routing_key(reqs[0], POL)
+    cl = ClusterService(
+        n_hosts=2, policy=POL,
+        router_policy=RouterPolicy(min_replicas=2,
+                                   max_outstanding=2.5 * shape_cost(key)),
+        rate_accounting=False)
+    admitted, shed = 0, 0
+    for r in reqs:
+        try:
+            cl.submit(r)
+            admitted += 1
+        except Overloaded:
+            shed += 1
+    assert shed > 0 and admitted == 6          # 3 per host fit under cap
+    assert cl.stats()["shed"] == shed
+    assert len(cl.flush()) == admitted         # admitted work completes
+    cl.submit(reqs[0])                         # drained -> admits again
+
+
+def test_cluster_autoscaler_prewarms_new_replica(cluster_ctx):
+    """A demand spike on a 1-replica bucket scales it out, and the
+    scale-up event prewarms the bucket's exemplar spec on the new host
+    before traffic lands there (no cold-compile on the routed path)."""
+    prior, reqs, *_ = cluster_ctx
+    cl = ClusterService(
+        n_hosts=2, policy=POL,
+        router_policy=RouterPolicy(min_replicas=1, target_load=0.01,
+                                   ewma_halflife_s=0.5),
+        rate_accounting=False)
+    cl.scrape(now=100.0)                       # seed the demand window
+    cl.solve(reqs[:8])                         # all on host0 (1 replica)
+    key = routing_key(reqs[0], POL)
+    assert cl.router.replicas(key) == ["host0"]
+    warm_before = cl.backends["host1"].compile_count()
+    events = cl.scrape(now=101.0)              # ~8 req/s >> target
+    assert ("scale_up", key, "host1") in events
+    assert cl.router.replicas(key) == ["host0", "host1"]
+    assert cl.backends["host1"].compile_count() > warm_before
+    # traffic now spreads batch-granularly (affinity keeps each filling
+    # group on one host) — and the prewarmed new host compiles nothing
+    # more (its scale-up prewarm covered the full batch-width ladder)
+    warm1 = cl.backends["host1"].compile_count()
+    cl.solve(reqs)                             # two full batches
+    assert cl.router.stats()["served"]["host1"] > 0
+    assert cl.backends["host1"].compile_count() == warm1
+
+
+# ---------------------------------------------------------------------------
+# TCP transport (codec frames over loopback)
+# ---------------------------------------------------------------------------
+
+def test_tcp_backend_roundtrip(cluster_ctx):
+    """A ClusterService whose second host is a real BackendServer behind
+    a loopback socket: routing, codec framing, id rewrite, demand
+    scrape, prewarm, and shutdown all cross the wire."""
+    prior, reqs, base_res, *_ = cluster_ctx
+    server = BackendServer(LocalBackend(
+        "host1", SolveService(policy=POL, rate_accounting=False)))
+    server.start()
+    try:
+        tcp = TcpBackend((server.host, server.port), "host1")
+        assert tcp.n_devices >= 1
+        cl = ClusterService(
+            backends=[LocalBackend("host0",
+                                   SolveService(policy=POL,
+                                                rate_accounting=False)),
+                      tcp],
+            policy=POL, router_policy=RouterPolicy(min_replicas=2))
+        menu = [PrewarmSpec(n=128, m=64, n_proc=4, n_iter=8,
+                            policy="fixed", prior=prior,
+                            batch_widths=(8,))]
+        rep = cl.prewarm(menu)
+        assert rep["host1"]["programs"] >= 1   # prewarm crossed the wire
+        results = sorted(cl.solve(reqs), key=lambda r: r.request_id)
+        assert len(results) == len(reqs)
+        for c, b in zip(results, base_res):
+            np.testing.assert_array_equal(np.asarray(c.x),
+                                          np.asarray(b.x))
+        served = cl.router.stats()["served"]
+        assert served["host1"] > 0             # remote host took traffic
+        # stats and demand scrape cross the wire as plain JSON/codec
+        assert cl.stats()["hosts"]["host1"]["compiles"]["total"] >= 1
+        cl.scrape(now=1.0)
+        # server-side errors surface as RuntimeError, not a dead socket
+        with pytest.raises(RuntimeError):
+            tcp.prewarm([dataclasses.replace(menu[0], n=13, m=7)])
+        cl.close(shutdown_remote=True)
+    finally:
+        server.stop()
+
+
+def test_tcp_backend_submit_poll_cycle():
+    """Raw TcpBackend ops: submit returns the backend-local id, poll is
+    empty until the batch dispatches, flush forces stragglers."""
+    _, reqs = make_reqs(3, seed=50)
+    server = BackendServer(LocalBackend(
+        "h", SolveService(policy=POL, rate_accounting=False)))
+    server.start()
+    try:
+        tcp = TcpBackend((server.host, server.port), "h")
+        ids = [tcp.submit(r) for r in reqs]
+        assert ids == [0, 1, 2]
+        res = tcp.flush()
+        assert sorted(r.request_id for r in res) == ids
+        assert tcp.take_demand() != {}
+        assert tcp.take_demand() == {}         # window advanced
+        tcp.shutdown_server()
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# cluster topology helpers
+# ---------------------------------------------------------------------------
+
+def test_init_cluster_single_process_noop():
+    from repro.launch.mesh import (init_cluster,
+                                   supports_cross_host_collectives)
+
+    info = init_cluster()                      # no coordinator configured
+    assert info.process_count == 1
+    assert info.is_frontend
+    assert info.local_devices == info.global_devices
+    assert supports_cross_host_collectives()   # single process: trivially
+
+
+def test_make_cluster_mesh_single_host():
+    import jax
+
+    from repro.launch.mesh import make_cluster_mesh
+
+    mesh = make_cluster_mesh()
+    assert mesh.axis_names == ("data",)
+    assert mesh.size == jax.local_device_count()

@@ -318,3 +318,108 @@ def test_solve_preserves_foreign_buffered_results():
                                              n_iter=4, policy="lossless")]))
     assert [r.request_id for r in streamed] == [early2 + 1]
     assert [r.request_id for r in svc.flush()] == [early2]
+
+
+# ---------------------------------------------------------------------------
+# demand windows (DESIGN.md §11: the autoscaler's scrape signal)
+# ---------------------------------------------------------------------------
+
+def test_batcher_demand_windows_partition_the_stream():
+    pol = BucketPolicy(max_batch=4)
+    b = Batcher(pol)
+    k1 = bucket_for(512, 160, 5, 8, "ecsq", pol)
+    k2 = bucket_for(256, 80, 5, 8, "ecsq", pol)
+    for i in range(5):
+        b.add(k1, i)
+    b.add(k2, "x")
+    # lifetime counts survive dispatch/drain (5 admissions dispatched one
+    # full group already)
+    assert b.demand() == {k1: 5, k2: 1}
+    # first take returns everything, second only the delta, zero-delta
+    # buckets are omitted
+    assert b.take_demand() == {k1: 5, k2: 1}
+    assert b.take_demand() == {}
+    b.add(k1, 5)
+    assert b.take_demand() == {k1: 1}
+    # successive windows partition the stream: sum == lifetime
+    assert b.demand() == {k1: 6, k2: 1}
+
+
+def test_batcher_clear_demand_semantics():
+    pol = BucketPolicy(max_batch=4)
+    b = Batcher(pol)
+    k = bucket_for(512, 160, 5, 8, "ecsq", pol)
+    for i in range(3):
+        b.add(k, i)
+    # mark-only clear: window restarts, history stays
+    b.clear_demand()
+    assert b.take_demand() == {}
+    assert b.demand() == {k: 3}
+    b.add(k, 3)
+    assert b.take_demand() == {k: 1}
+    # lifetime clear: both restart
+    b.clear_demand(lifetime=True)
+    assert b.demand() == {} and b.take_demand() == {}
+    b.add(k, 4)
+    assert b.demand() == {k: 1} and b.take_demand() == {k: 1}
+
+
+def test_batcher_demand_concurrent_admission():
+    """Admissions racing a scrape thread: every request lands in exactly
+    one take window (no double- or under-counting across takes)."""
+    import threading
+
+    pol = BucketPolicy(max_batch=1 << 30)   # no dispatch, pure counting
+    b = Batcher(pol)
+    k = bucket_for(512, 160, 5, 8, "ecsq", pol)
+    n_threads, per_thread = 8, 500
+    taken = []
+    stop = threading.Event()
+
+    def scraper():
+        while not stop.is_set():
+            taken.append(b.take_demand())
+        taken.append(b.take_demand())        # final sweep
+
+    def admit():
+        for i in range(per_thread):
+            b.add(k, i)
+
+    scr = threading.Thread(target=scraper)
+    scr.start()
+    workers = [threading.Thread(target=admit) for _ in range(n_threads)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    stop.set()
+    scr.join()
+    total = sum(d.get(k, 0) for d in taken)
+    assert total == n_threads * per_thread
+    assert b.demand() == {k: n_threads * per_thread}
+
+
+def test_stats_consistent_under_background_prewarm():
+    """stats() snapshots under the service lock via atomic engine
+    counters: while a background prewarm thread compiles the menu and
+    mutates the engine maps, every stats() read must be internally
+    consistent (compiles.total equals the sum of its own by_bucket
+    entries — never a torn count)."""
+    from repro.serving import PrewarmSpec
+
+    prior = BernoulliGauss(eps=0.1)
+    svc = SolveService(policy=BucketPolicy(max_batch=8),
+                       rate_accounting=False)
+    menu = [PrewarmSpec(n=128, m=64, n_proc=4, n_iter=t, policy="fixed",
+                        prior=prior, batch_widths=(1, 2))
+            for t in (4, 8, 12)]
+    th = svc.prewarm(menu, background=True)
+    while th.is_alive():
+        st = svc.stats()
+        assert st["compiles"]["total"] == sum(st["compiles"]["by_bucket"]
+                                              .values())
+        assert st["dispatches"]["total"] == sum(st["dispatches"]
+                                                ["by_bucket"].values())
+    th.join()
+    st = svc.stats()
+    assert st["compiles"]["total"] == svc.compile_count() > 0
