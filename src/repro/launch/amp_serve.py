@@ -87,6 +87,13 @@ def main():
                          "streaming (DESIGN.md §9): compiles move out of "
                          "the serving path, the summary then reports "
                          "steady-state compiles")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="dump per-request trace spans as Chrome "
+                         "trace-event JSONL (DESIGN.md §12; wrap the "
+                         "lines in [...] for chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the final metrics snapshot as Prometheus "
+                         "text exposition format")
     args = ap.parse_args()
 
     n_req = 16 if args.smoke else args.requests
@@ -125,12 +132,21 @@ def main():
         menu = [PrewarmSpec(n=n, m=m, n_proc=p, n_iter=t, policy=fam)
                 for (n, m, p) in SHAPES for t in (8, 12) for fam in fams]
         rep = svc.prewarm(menu)
+        if args.hosts > 1:
+            rep = next(iter(rep.values()))     # per-host reports are equal
         prewarmed = rep["programs"]
         print(f"prewarm: {rep['programs']} programs over "
               f"{len(rep['buckets'])} buckets in {rep['seconds']:.1f}s")
+    if args.hosts > 1:
+        # production elasticity shape (DESIGN.md §12): the autoscaler
+        # scrape loop runs on its own daemon thread at scrape_every_s
+        # instead of piggybacking ticks on the submit path
+        svc.start_scraper()
     t0 = time.time()
     results = list(svc.stream(r for r, _ in pairs))
     dt = time.time() - t0
+    if args.hosts > 1:
+        svc.stop_scraper()
 
     # request ids are assigned in submission order, i.e. pairs[rid]
     print(f"{'id':>4s} {'policy':>9s} {'T':>3s} {'bucket':>22s} {'B':>4s} "
@@ -192,6 +208,25 @@ def main():
               + f", operand cache {oc['hits']} hits / {oc['misses']} misses"
               f" ({oc['bytes'] / (1 << 20):.1f} MiB), "
               f"{st['singleton_dispatches']} singleton dispatches")
+
+    # telemetry plane (DESIGN.md §12): SE-drift summary + optional dumps
+    drifts = [r.se_drift for r in results
+              if r.se_drift is not None and np.isfinite(r.se_drift)]
+    if drifts:
+        from ..telemetry import DRIFT_ALERT
+        alerts = sum(1 for d in drifts if d > DRIFT_ALERT)
+        print(f"se drift: median {float(np.median(drifts)):.3f}, "
+              f"max {max(drifts):.3f}, {alerts} alert(s) over "
+              f"{len(drifts)} monitored requests")
+    if args.trace_out:
+        from ..telemetry import write_trace_jsonl
+        with open(args.trace_out, "w") as fp:
+            n_ev = write_trace_jsonl(fp, results)
+        print(f"trace: {n_ev} span events -> {args.trace_out}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fp:
+            fp.write(svc.metrics_text())
+        print(f"metrics: Prometheus snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

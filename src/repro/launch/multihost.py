@@ -184,6 +184,13 @@ def child(args) -> int:
           f"{len(backends)} hosts; served {served}; "
           f"steady-state compiles {steady}; max|dx| {max_dx:.1e}; "
           f"imbalance {st['router']['imbalance']:.2f}x")
+    # measured TCP routing overhead per frame kind (DESIGN.md §12):
+    # submits ("S") are the hot path, flush/prewarm amortize
+    for host_id, per_op in cluster.rtt_stats().items():
+        line = "  ".join(f"{op}: p50 {s['p50_ms']:.2f}ms "
+                         f"p95 {s['p95_ms']:.2f}ms (n={s['count']})"
+                         for op, s in per_op.items())
+        print(f"multihost[0]: {host_id} frame rtt  {line}")
     cluster.close(shutdown_remote=True)
 
     failures = []

@@ -7,13 +7,16 @@ programs, and donated batch operands. The cluster tier (DESIGN.md §11)
 splits into a frontend (``ClusterService`` admission + host backends), a
 scheduler (``ClusterRouter`` + ``Autoscaler``), and per-host
 ``SolveService`` backends, with ``serving.codec`` bytes on the wire
-between hosts.
+between hosts. The telemetry plane (DESIGN.md §12) threads a metrics
+registry, per-request trace spans, and a live SE-drift monitor through
+all of it (``repro.telemetry``; metrics snapshots cross hosts as their
+own codec frame kind).
 """
 from .batcher import Batcher
 from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
                       bucket_for, pad_batch_size, placement_for)
-from .codec import (decode_request, decode_result, encode_request,
-                    encode_result)
+from .codec import (decode_metrics, decode_request, decode_result,
+                    encode_metrics, encode_request, encode_result)
 from .frontend import (BackendServer, ClusterService, LocalBackend,
                        TcpBackend)
 from .operand_cache import OperandCache, fingerprint
@@ -31,4 +34,5 @@ __all__ = [
     "ClusterRouter", "Autoscaler", "DemandTracker", "HostInfo",
     "RouterPolicy", "Overloaded", "routing_key", "shape_cost",
     "encode_request", "decode_request", "encode_result", "decode_result",
+    "encode_metrics", "decode_metrics",
 ]

@@ -32,6 +32,7 @@ from .buckets import BucketKey
 
 __all__ = [
     "encode_request", "decode_request", "encode_result", "decode_result",
+    "encode_metrics", "decode_metrics",
     "bucket_to_dict", "bucket_from_dict", "spec_to_dict", "spec_from_dict",
     "CodecError",
 ]
@@ -157,6 +158,7 @@ def encode_request(req) -> bytes:
         "erasure_seed": req.erasure_seed,
         "recovery": req.recovery, "measure_wire": req.measure_wire,
         "a_id": req.a_id, "request_id": req.request_id,
+        "spans": req.spans,
     }
     arrays = {"y": np.asarray(req.y), "a": np.asarray(req.a)}
     if req.deltas is not None:
@@ -188,6 +190,8 @@ def encode_result(res) -> bytes:
         "payload_bytes": res.payload_bytes,
         "time_on_air_s": res.time_on_air_s,
         "energy_j": res.energy_j,
+        "se_drift": res.se_drift,
+        "spans": res.spans,
     }
     arrays = {"x": np.asarray(res.x),
               "sigma2_hat": np.asarray(res.sigma2_hat),
@@ -207,3 +211,27 @@ def decode_result(buf: bytes):
         return SolveResult(**header, **arrays)
     except TypeError as e:
         raise CodecError(f"bad result: {e}") from e
+
+
+# -- telemetry metrics frames ----------------------------------------------
+
+def encode_metrics(host, snapshot: dict) -> bytes:
+    """Metrics registry snapshot as a codec frame (DESIGN.md §12): pure
+    JSON header, no array segments — snapshots are small and already
+    plain data, and reusing the frame keeps the no-pickle invariant."""
+    return _pack({"kind": "metrics", "host": str(host),
+                  "metrics": snapshot}, {})
+
+
+def decode_metrics(buf: bytes) -> "tuple[str, dict]":
+    header, arrays = _unpack(buf)
+    if _take(header, "kind") != "metrics":
+        raise CodecError("not a metrics frame")
+    if arrays:
+        raise CodecError(f"unexpected arrays {sorted(arrays)}")
+    host = _take(header, "host")
+    snap = _take(header, "metrics")
+    if not isinstance(snap, dict) or not isinstance(snap.get("metrics"), list):
+        raise CodecError("bad metrics payload")
+    _done(header, "metrics")
+    return host, snap

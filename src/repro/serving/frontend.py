@@ -30,15 +30,22 @@ DESIGN.md §10 stays per-request inside each backend.
 from __future__ import annotations
 
 import dataclasses
+import math
 import socket
 import struct
 import threading
 import time
+from collections import deque
 
+from ..telemetry import MetricsRegistry, merge_snapshots, prometheus_text
+from ..telemetry.spans import now as _tnow
+from ..telemetry.spans import span as _tspan
+from ..telemetry.spans import tag_host
 from .buckets import BucketPolicy
-from .codec import (bucket_from_dict, bucket_to_dict, decode_request,
-                    decode_result, encode_request, encode_result,
-                    spec_from_dict, spec_to_dict)
+from .codec import (bucket_from_dict, bucket_to_dict, decode_metrics,
+                    decode_request, decode_result, encode_metrics,
+                    encode_request, encode_result, spec_from_dict,
+                    spec_to_dict)
 from .router import (Autoscaler, ClusterRouter, HostInfo, Overloaded,
                      RouterPolicy, routing_key, shape_cost)
 from .service import PrewarmSpec, SolveService
@@ -83,6 +90,9 @@ class LocalBackend:
     def compile_count(self) -> int:
         return self.service.compile_count()
 
+    def metrics(self) -> dict:
+        return self.service.metrics()
+
     def close(self) -> None:
         pass
 
@@ -93,7 +103,7 @@ class LocalBackend:
 # status (b"R" ok / b"E" error) | body. Result lists nest as
 # u32 count | (u32 len | result-frame)*.
 
-_OPS = (b"S", b"P", b"F", b"D", b"W", b"T", b"C", b"N", b"Q")
+_OPS = (b"S", b"P", b"F", b"D", b"W", b"T", b"C", b"N", b"Q", b"M")
 
 
 def _recv_exact(sock, n: int) -> bytes:
@@ -214,6 +224,10 @@ class BackendServer:
             return json.dumps(b.compile_count()).encode()
         if op == b"N":
             return json.dumps(b.n_devices).encode()
+        if op == b"M":
+            # per-host metrics ride the no-pickle codec as their own
+            # frame kind (DESIGN.md §12); the frontend merges them
+            return encode_metrics(b.host_id, b.metrics())
         if op == b"Q":
             return b"ok"
         raise ValueError(f"unknown op {op!r}")
@@ -222,22 +236,55 @@ class BackendServer:
 class TcpBackend:
     """Frontend-side proxy for a ``BackendServer`` in another process
     (typically another ``jax.distributed`` host). Thread-safe: one
-    request/reply in flight per connection."""
+    request/reply in flight per connection.
+
+    Every frame's round-trip (send -> reply parsed off the socket) is
+    timed into a per-op sliding window — the measured TCP routing
+    overhead the ROADMAP asked for (``rtt_stats``; surfaced in cluster
+    metrics and ``BENCH_serve.json``'s ``tcp_rtt`` columns)."""
+
+    RTT_WINDOW = 4096   # samples kept per op (bounded memory under load)
 
     def __init__(self, address: "tuple[str, int]", host_id: str):
         self.host_id = host_id
         self._sock = socket.create_connection(address, timeout=120.0)
         self._lock = threading.Lock()
+        self._rtt: dict = {}
         self.n_devices = int(self._call(b"N", json.loads))
 
     def _call(self, op: bytes, parse, body: bytes = b""):
+        t0 = time.perf_counter()
         with self._lock:
             _send_frame(self._sock, op, body)
             status, reply = _recv_frame(self._sock)
+            dq = self._rtt.get(op)
+            if dq is None:
+                dq = self._rtt[op] = deque(maxlen=self.RTT_WINDOW)
+            dq.append(time.perf_counter() - t0)
         if status == b"E":
             raise RuntimeError(
                 f"backend {self.host_id}: {reply.decode(errors='replace')}")
         return parse(reply)
+
+    def rtt_stats(self) -> dict:
+        """Per-op frame round-trip latency over the sliding window:
+        ``{op: {count, p50_ms, p95_ms, max_ms}}`` (op is the one-byte
+        frame opcode, e.g. "S" submit / "P" poll)."""
+        with self._lock:
+            windows = {op: list(dq) for op, dq in self._rtt.items()}
+        out = {}
+        for op, xs in sorted(windows.items()):
+            if not xs:
+                continue
+            xs.sort()
+            n = len(xs)
+            out[op.decode()] = {
+                "count": n,
+                "p50_ms": xs[n // 2] * 1e3,
+                "p95_ms": xs[min(n - 1, int(math.ceil(0.95 * n)) - 1)] * 1e3,
+                "max_ms": xs[-1] * 1e3,
+            }
+        return out
 
     def submit(self, req) -> int:
         return self._call(b"S", lambda b: struct.unpack("<q", b)[0],
@@ -262,6 +309,10 @@ class TcpBackend:
 
     def compile_count(self) -> int:
         return int(self._call(b"C", json.loads))
+
+    def metrics(self) -> dict:
+        _host, snap = self._call(b"M", decode_metrics)
+        return snap
 
     def shutdown_server(self) -> None:
         try:
@@ -337,6 +388,19 @@ class ClusterService:
         self._last_scrape = time.monotonic()
         self.shed_count = 0
         self.submitted = 0
+        # telemetry (DESIGN.md §12): mirrors the backends' flag so a
+        # telemetry-off cluster carries zero span/metric overhead; the
+        # frontend registry holds the router/admission/TCP-RTT series and
+        # merges with per-host snapshots in ``metrics()``
+        self.telemetry = bool(service_kwargs.get("telemetry", True))
+        self._registry = None
+        if self.telemetry:
+            self._registry = MetricsRegistry()
+            self._registry.collect(self._collect_frontend)
+        # autoscaler scrape loop (daemon thread, ``start_scraper``)
+        self._scrape_thread: threading.Thread | None = None
+        self._scrape_stop: threading.Event | None = None
+        self.scrape_errors: list = []
 
     # -- intake --------------------------------------------------------------
 
@@ -372,9 +436,11 @@ class ClusterService:
         request id (backend-local ids never escape). Raises
         ``Overloaded`` when every replica of the request's bucket is at
         the admission cap — the shed path; ``shed_count`` tracks it."""
+        t_admit = _tnow() if self.telemetry else 0.0
         key = self._routing_key(req)
         cost = shape_cost(key)
         self._remember_spec(key, req)
+        t_route = _tnow() if self.telemetry else 0.0
         try:
             host_id = self.router.route(key, cost,
                                         prefer=self._open_batch_host(key))
@@ -384,13 +450,22 @@ class ClusterService:
         self._bump_fill(host_id, key)
         # the backend assigns its own local id: hand it a fresh copy so
         # the caller's template (and our global numbering) stay untouched
-        local = self.backends[host_id].submit(
-            dataclasses.replace(req, request_id=-1))
+        fwd = dataclasses.replace(req, request_id=-1)
+        if self.telemetry:
+            # frontend spans travel WITH the request (codec header) and
+            # come back on the result; the backend appends its own with
+            # host=None, which ``_absorb`` tags with the routed host
+            fwd.spans = list(req.spans or []) + [
+                _tspan("admit", t_admit, t_route, host="frontend"),
+                _tspan("route", t_route, host="frontend")]
+        local = self.backends[host_id].submit(fwd)
         gid = self._next_id
         self._next_id += 1
         self._inflight[(host_id, local)] = (gid, cost)
         self.submitted += 1
-        if self.router_policy.scrape_every_s > 0.0:
+        if (self.router_policy.scrape_every_s > 0.0
+                and self._scrape_thread is None):
+            # piggyback scraping only when no daemon scraper owns the tick
             now = time.monotonic()
             if now - self._last_scrape >= self.router_policy.scrape_every_s:
                 self.scrape(now)
@@ -405,8 +480,10 @@ class ClusterService:
                 f"backend {host_id} returned unknown id {res.request_id}"
             gid, cost = entry
             self.router.complete(host_id, cost)
+            spans = (tag_host(res.spans, host_id)
+                     if self.telemetry and res.spans else res.spans)
             self._completed.append(
-                dataclasses.replace(res, request_id=gid))
+                dataclasses.replace(res, request_id=gid, spans=spans))
 
     def poll(self) -> list:
         """Collect materialized results from every backend (no forced
@@ -473,26 +550,31 @@ class ClusterService:
         and funnel every tie to the first host — then all return to the
         router. Planning only: batch-affinity fill and the router's
         served counters are restored afterwards, so repeated partitions
-        (the bench times warm passes) leave no trace in ``stats()``."""
+        (the bench times warm passes) leave no trace in ``stats()``.
+        Runs under the router lock end-to-end: the save/route/restore
+        sequence must be atomic against a concurrent scraper thread or
+        another submitting thread, or the restored counters would erase
+        their updates."""
         shares: dict = {hid: [] for hid in self.backends}
         placed = []
-        saved_fill = dict(self._fill)   # planning only: no group opens
-        saved_served = dict(self.router._served)
-        saved_cost = dict(self.router._served_cost)
-        for req in reqs:
-            key = self._routing_key(req)
-            cost = shape_cost(key)
-            self._remember_spec(key, req)
-            host_id = self.router.route(key, cost,
-                                        prefer=self._open_batch_host(key))
-            self._bump_fill(host_id, key)
-            placed.append((host_id, cost))
-            shares[host_id].append(req)
-        for host_id, cost in placed:
-            self.router.complete(host_id, cost)
-        self._fill = saved_fill
-        self.router._served = saved_served
-        self.router._served_cost = saved_cost
+        with self.router.lock:
+            saved_fill = dict(self._fill)  # planning only: no group opens
+            saved_served = dict(self.router._served)
+            saved_cost = dict(self.router._served_cost)
+            for req in reqs:
+                key = self._routing_key(req)
+                cost = shape_cost(key)
+                self._remember_spec(key, req)
+                host_id = self.router.route(
+                    key, cost, prefer=self._open_batch_host(key))
+                self._bump_fill(host_id, key)
+                placed.append((host_id, cost))
+                shares[host_id].append(req)
+            for host_id, cost in placed:
+                self.router.complete(host_id, cost)
+            self._fill = saved_fill
+            self.router._served = saved_served
+            self.router._served_cost = saved_cost
         return shares
 
     # -- elasticity ----------------------------------------------------------
@@ -519,6 +601,43 @@ class ClusterService:
                 self.backends[host_id].prewarm([spec])
                 self.router.mark_warm(host_id, key)
         return events
+
+    def start_scraper(self, interval_s: float | None = None) \
+            -> threading.Thread:
+        """Run the autoscaler scrape loop on a daemon thread at a real
+        interval (the production shape — ``amp_serve`` uses this instead
+        of piggybacking scrapes on submits). Idempotent; ``stop_scraper``
+        or ``close`` shuts it down cleanly (the thread exits within one
+        interval). Scrape exceptions are recorded on ``scrape_errors``
+        and the loop keeps going — a transient backend hiccup must not
+        kill autoscaling."""
+        if self._scrape_thread is not None and self._scrape_thread.is_alive():
+            return self._scrape_thread
+        interval = (interval_s if interval_s is not None
+                    else self.router_policy.scrape_every_s) or 1.0
+        stop = self._scrape_stop = threading.Event()
+
+        def loop() -> None:
+            while not stop.wait(interval):
+                try:
+                    self.scrape()
+                except Exception as e:  # noqa: BLE001 — keep scraping
+                    self.scrape_errors.append(repr(e))
+
+        th = threading.Thread(target=loop, name="cluster-scraper",
+                              daemon=True)
+        self._scrape_thread = th
+        th.start()
+        return th
+
+    def stop_scraper(self, timeout: float = 5.0) -> None:
+        """Signal the scrape loop to exit and join it."""
+        if self._scrape_stop is not None:
+            self._scrape_stop.set()
+        th = self._scrape_thread
+        if th is not None and th.is_alive():
+            th.join(timeout)
+        self._scrape_thread = None
 
     def prewarm(self, menu, hosts: list | None = None) -> dict:
         """Prewarm a traffic menu on every backend (or a named subset)
@@ -551,7 +670,77 @@ class ClusterService:
             "hosts": {hid: b.stats() for hid, b in self.backends.items()},
         }
 
+    def rtt_stats(self) -> dict:
+        """Per-host TCP frame round-trip stats (``TcpBackend.rtt_stats``;
+        empty for in-process backends — there is no wire to time)."""
+        return {hid: b.rtt_stats() for hid, b in self.backends.items()
+                if isinstance(b, TcpBackend)}
+
+    def _collect_frontend(self, reg: MetricsRegistry) -> None:
+        """Frontend-plane collector: admission counters, router load,
+        autoscaler events, and TCP frame RTTs — all pulled at snapshot
+        time from state that already has its own locks."""
+        reg.counter("amp_cluster_submitted_total",
+                    "Requests admitted by the frontend").set_total(
+                        self.submitted)
+        reg.counter("amp_cluster_shed_total",
+                    "Requests shed at the admission cap").set_total(
+                        self.shed_count)
+        reg.gauge("amp_cluster_inflight",
+                  "Requests routed but not yet completed").set(
+                      len(self._inflight))
+        rs = self.router.stats()
+        out_g = reg.gauge("amp_router_outstanding_cost",
+                          "Outstanding cost-weighted work", ("host",))
+        srv_c = reg.counter("amp_router_served_total",
+                            "Requests routed per host", ("host",))
+        for hid, v in rs["outstanding"].items():
+            out_g.set(v, host=hid)
+        for hid, v in rs["served"].items():
+            srv_c.set_total(v, host=hid)
+        imb = rs["imbalance"]
+        reg.gauge("amp_router_imbalance",
+                  "Cost-weighted served-share max/min").set(
+                      imb if math.isfinite(imb) else -1.0)
+        events = self.autoscaler.stats()["events"]
+        ev_c = reg.counter("amp_autoscaler_events_total",
+                           "Applied scaling events", ("kind",))
+        for kind in ("scale_up", "scale_down"):
+            ev_c.set_total(sum(1 for e in events if e[0] == kind),
+                           kind=kind)
+        for hid, per_op in self.rtt_stats().items():
+            cnt = reg.counter("amp_tcp_frames_total",
+                              "TCP frames in the RTT window",
+                              ("host", "op"))
+            p50 = reg.gauge("amp_tcp_rtt_p50_seconds",
+                            "Frame round-trip p50", ("host", "op"))
+            p95 = reg.gauge("amp_tcp_rtt_p95_seconds",
+                            "Frame round-trip p95", ("host", "op"))
+            for op, s in per_op.items():
+                cnt.set_total(s["count"], host=hid, op=op)
+                p50.set(s["p50_ms"] / 1e3, host=hid, op=op)
+                p95.set(s["p95_ms"] / 1e3, host=hid, op=op)
+
+    def metrics(self) -> dict:
+        """Cluster-wide metrics: every backend's snapshot (fetched over
+        the codec's metrics frame for TCP backends) merged with the
+        frontend's own registry, one ``host`` label per series
+        (DESIGN.md §12)."""
+        if self._registry is None:
+            return {"metrics": []}
+        snaps = [("frontend", self._registry.snapshot())]
+        for hid, b in self.backends.items():
+            snap = b.metrics()
+            if snap.get("metrics"):
+                snaps.append((hid, snap))
+        return merge_snapshots(snaps)
+
+    def metrics_text(self) -> str:
+        """``metrics()`` rendered as Prometheus text exposition format."""
+        return prometheus_text(self.metrics())
+
     def close(self, shutdown_remote: bool = False) -> None:
+        self.stop_scraper()
         for b in self.backends.values():
             if shutdown_remote and isinstance(b, TcpBackend):
                 b.shutdown_server()

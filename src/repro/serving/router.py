@@ -30,11 +30,20 @@ backend split (Ray Serve's router/autoscaler structure):
 
 Everything here is deterministic given the scrape timestamps: tests
 drive ``observe``/``step`` with synthetic clocks.
+
+Thread-safety: all router/autoscaler state is guarded by one reentrant
+``ClusterRouter.lock`` (the autoscaler shares it — ``step`` calls back
+into ``add_replica``/``remove_replica``, so the lock must nest).  The
+frontend routes from caller threads while the scraper daemon steps the
+autoscaler, and ``stats()``/``imbalance()`` must never observe a
+half-applied route (outstanding bumped, served not yet) — the same
+torn-read guarantee ``SolveService.stats()`` got in PR 8.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 
 from .buckets import BucketKey, BucketPolicy, bucket_for, placement_for
 
@@ -145,6 +154,11 @@ class ClusterRouter:
         assert hosts, "router needs at least one host"
         self.hosts = list(hosts)
         self.policy = policy or RouterPolicy()
+        # One reentrant lock over ALL router + autoscaler mutable state
+        # (module docstring): reentrant because Autoscaler.step ->
+        # add_replica nests, shared so cross-object invariants
+        # (replica sets vs demand rates) snapshot consistently.
+        self.lock = threading.RLock()
         self._by_id = {h.host_id: h for h in hosts}
         assert len(self._by_id) == len(hosts), "duplicate host ids"
         self._replicas: dict[BucketKey, list[str]] = {}
@@ -161,7 +175,8 @@ class ClusterRouter:
     # -- replica sets --------------------------------------------------------
 
     def replicas(self, key: BucketKey) -> "list[str]":
-        return list(self._ensure(key))
+        with self.lock:
+            return list(self._ensure(key))
 
     def _max_replicas(self) -> int:
         mr = self.policy.max_replicas
@@ -185,25 +200,27 @@ class ClusterRouter:
     def add_replica(self, key: BucketKey) -> str | None:
         """Grow the bucket's replica set by the least-loaded non-member
         host; returns its id (None when saturated)."""
-        reps = self._ensure(key)
-        if len(reps) >= self._max_replicas():
-            return None
-        candidates = [h for h in self.hosts if h.host_id not in reps]
-        if not candidates:
-            return None
-        host = min(candidates, key=lambda h: (self._load(h.host_id),
-                                              self.hosts.index(h)))
-        reps.append(host.host_id)
-        return host.host_id
+        with self.lock:
+            reps = self._ensure(key)
+            if len(reps) >= self._max_replicas():
+                return None
+            candidates = [h for h in self.hosts if h.host_id not in reps]
+            if not candidates:
+                return None
+            host = min(candidates, key=lambda h: (self._load(h.host_id),
+                                                  self.hosts.index(h)))
+            reps.append(host.host_id)
+            return host.host_id
 
     def remove_replica(self, key: BucketKey) -> str | None:
         """Shrink the bucket's replica set (never below min_replicas):
         drops the most recently added member — the longest-standing
         replicas hold the warmest caches."""
-        reps = self._ensure(key)
-        if len(reps) <= max(1, self.policy.min_replicas):
-            return None
-        return reps.pop()
+        with self.lock:
+            reps = self._ensure(key)
+            if len(reps) <= max(1, self.policy.min_replicas):
+                return None
+            return reps.pop()
 
     # -- routing -------------------------------------------------------------
 
@@ -223,44 +240,48 @@ class ClusterRouter:
         the autoscaler would never drain load), then stable host order.
         Raises ``Overloaded`` when an admission cap is set and every
         replica is at it."""
-        reps = self._ensure(key)
-        cap = self.policy.max_outstanding
-        if (prefer in reps
-                and (cap <= 0.0 or self._outstanding[prefer] < cap)):
-            self._outstanding[prefer] += cost
-            self._served[prefer] += 1
-            self._served_cost[prefer] += cost
-            self._warm.add((prefer, key))
-            return prefer
-        ranked = sorted(
-            reps,
-            key=lambda hid: (self._load(hid),
-                             (hid, key) not in self._warm
-                             if self.policy.prefer_prewarmed else False,
-                             self.hosts.index(self._by_id[hid])))
-        if cap > 0.0:
-            ranked = [hid for hid in ranked if self._outstanding[hid] < cap]
-            if not ranked:
-                raise Overloaded(
-                    f"all {len(reps)} replica(s) of {key} at the "
-                    f"outstanding cap {cap}")
-        host_id = ranked[0]
-        self._outstanding[host_id] += cost
-        self._served[host_id] += 1
-        self._served_cost[host_id] += cost
-        self._warm.add((host_id, key))
-        return host_id
+        with self.lock:
+            reps = self._ensure(key)
+            cap = self.policy.max_outstanding
+            if (prefer in reps
+                    and (cap <= 0.0 or self._outstanding[prefer] < cap)):
+                self._outstanding[prefer] += cost
+                self._served[prefer] += 1
+                self._served_cost[prefer] += cost
+                self._warm.add((prefer, key))
+                return prefer
+            ranked = sorted(
+                reps,
+                key=lambda hid: (self._load(hid),
+                                 (hid, key) not in self._warm
+                                 if self.policy.prefer_prewarmed else False,
+                                 self.hosts.index(self._by_id[hid])))
+            if cap > 0.0:
+                ranked = [hid for hid in ranked
+                          if self._outstanding[hid] < cap]
+                if not ranked:
+                    raise Overloaded(
+                        f"all {len(reps)} replica(s) of {key} at the "
+                        f"outstanding cap {cap}")
+            host_id = ranked[0]
+            self._outstanding[host_id] += cost
+            self._served[host_id] += 1
+            self._served_cost[host_id] += cost
+            self._warm.add((host_id, key))
+            return host_id
 
     def complete(self, host_id: str, cost: float) -> None:
         """Return one routed request's cost (result delivered). Snaps
         tiny float residue to exactly zero so a fully drained host ties
         (and loses to host order) instead of ranking on leftover eps."""
-        left = self._outstanding[host_id] - cost
-        self._outstanding[host_id] = 0.0 if left < 1e-9 else left
+        with self.lock:
+            left = self._outstanding[host_id] - cost
+            self._outstanding[host_id] = 0.0 if left < 1e-9 else left
 
     def mark_warm(self, host_id: str, key: BucketKey) -> None:
         """Record a prewarmed (host, bucket) pair (frontend prewarm)."""
-        self._warm.add((host_id, key))
+        with self.lock:
+            self._warm.add((host_id, key))
 
     # -- observability -------------------------------------------------------
 
@@ -268,26 +289,28 @@ class ClusterRouter:
         """Cost-weighted served-work ratio max/min across hosts (1.0 =
         perfectly balanced; hosts that served nothing count as the
         smallest share). The cluster bench's balance gate."""
-        shares = [self._served_cost[h.host_id] / self._by_id[h.host_id].weight
-                  for h in self.hosts]
-        hi = max(shares)
-        if hi <= 0.0:
-            return 1.0
-        lo = min(shares)
-        return math.inf if lo <= 0.0 else hi / lo
+        with self.lock:
+            shares = [self._served_cost[h.host_id]
+                      / self._by_id[h.host_id].weight for h in self.hosts]
+            hi = max(shares)
+            if hi <= 0.0:
+                return 1.0
+            lo = min(shares)
+            return math.inf if lo <= 0.0 else hi / lo
 
     def stats(self) -> dict:
-        return {
-            "hosts": [h.host_id for h in self.hosts],
-            "outstanding": dict(self._outstanding),
-            "served": dict(self._served),
-            "served_cost": {k: round(v, 3)
-                            for k, v in self._served_cost.items()},
-            "imbalance": self.imbalance(),
-            "replicas": {str(k): list(v)
-                         for k, v in self._replicas.items()},
-            "warm_programs": len(self._warm),
-        }
+        with self.lock:
+            return {
+                "hosts": [h.host_id for h in self.hosts],
+                "outstanding": dict(self._outstanding),
+                "served": dict(self._served),
+                "served_cost": {k: round(v, 3)
+                                for k, v in self._served_cost.items()},
+                "imbalance": self.imbalance(),
+                "replicas": {str(k): list(v)
+                             for k, v in self._replicas.items()},
+                "warm_programs": len(self._warm),
+            }
 
 
 class Autoscaler:
@@ -299,22 +322,28 @@ class Autoscaler:
                  policy: RouterPolicy | None = None):
         self.router = router
         self.policy = policy or router.policy
+        # Shares the router's reentrant lock: step() mutates replica sets
+        # through router methods, and stats scrapes must not tear across
+        # the rates/events pair while a step is mid-flight.
+        self.lock = router.lock
         self.tracker = DemandTracker(self.policy.ewma_halflife_s)
         self._below: dict[BucketKey, int] = {}
         self.events: list = []
 
     def observe(self, deltas: dict, now: float) -> None:
         """Feed one scrape window of per-bucket admission deltas."""
-        self.tracker.update(deltas, now)
+        with self.lock:
+            self.tracker.update(deltas, now)
 
     def desired_replicas(self, key: BucketKey) -> int:
         """ceil(rate * cost / target_load), clamped — the replica count
         whose per-replica load sits at or under the target."""
-        load = self.tracker.rate(key) * shape_cost(key)
-        want = math.ceil(load / self.policy.target_load)
-        lo = max(1, self.policy.min_replicas)
-        hi = self.router._max_replicas()
-        return min(max(want, lo), hi)
+        with self.lock:
+            load = self.tracker.rate(key) * shape_cost(key)
+            want = math.ceil(load / self.policy.target_load)
+            lo = max(1, self.policy.min_replicas)
+            hi = self.router._max_replicas()
+            return min(max(want, lo), hi)
 
     def step(self, now: float | None = None) -> list:
         """One autoscaling pass over every tracked bucket; returns the
@@ -322,6 +351,10 @@ class Autoscaler:
         tuples (also appended to ``self.events``). Scale-up applies
         immediately; scale-down needs ``down_patience`` consecutive
         passes below the threshold."""
+        with self.lock:
+            return self._step_locked()
+
+    def _step_locked(self) -> list:
         events = []
         for key in self.tracker.rates():
             current = len(self.router.replicas(key))
@@ -347,9 +380,10 @@ class Autoscaler:
         return events
 
     def stats(self) -> dict:
-        return {
-            "rates": {str(k): round(v, 4)
-                      for k, v in self.tracker.rates().items()},
-            "events": [(kind, str(k), host)
-                       for kind, k, host in self.events],
-        }
+        with self.lock:
+            return {
+                "rates": {str(k): round(v, 4)
+                          for k, v in self.tracker.rates().items()},
+                "events": [(kind, str(k), host)
+                           for kind, k, host in self.events],
+            }

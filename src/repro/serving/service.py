@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import operator
 import threading
 import time
 from typing import Callable
@@ -58,6 +59,10 @@ from ..core.rate_alloc import (dp_allocate, dp_allocate_col,
                                erasure_rate_factors, stack_schedules)
 from ..core.rate_distortion import RDModel
 from ..core.state_evolution import CSProblem
+from ..telemetry import (DRIFT_ALERT, DRIFT_BUCKETS, MetricsRegistry,
+                         prometheus_text, se_drift, se_drift_batch)
+from ..telemetry.spans import now as _tnow
+from ..telemetry.spans import span as _tspan
 from .batcher import Batcher
 from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
                       bucket_for, pad_batch_size, placement_for, round_up)
@@ -133,6 +138,12 @@ class SolveRequest:
     #                                       (the caller vouches the bytes
     #                                       behind one id never change)
     request_id: int = -1                  # assigned at submit
+    spans: list | None = None             # telemetry trace spans
+    #                                       ([name, host, t0, t1] lists,
+    #                                       telemetry/spans.py); the
+    #                                       cluster frontend stamps
+    #                                       admit/route here and the
+    #                                       backend appends its own
 
     @property
     def n(self) -> int:
@@ -183,6 +194,13 @@ class SolveResult:
     #                                      number comparable to model H_Q
     time_on_air_s: float | None = None   # bytes_on_wire / link rate
     energy_j: float | None = None        # time_on_air * tx power
+    se_drift: float | None = None        # mean |ln(realized/SE predicted)|
+    #                                      per-iteration variance drift
+    #                                      (telemetry/drift.py); None when
+    #                                      telemetry is off
+    spans: list | None = None            # completed trace spans
+    #                                      (admit..complete) for this
+    #                                      request
 
     def mse(self, s0: np.ndarray) -> float:
         return float(np.mean((self.x - np.asarray(s0)) ** 2))
@@ -245,6 +263,16 @@ _SHARDED_TRANSPORTS = {
 # materializes the device results into SolveResults
 _Pending = Callable[[], "list[SolveResult]"]
 
+# sentinel: _finish_telemetry computes the drift itself (singleton /
+# proc-sharded paths); the batched path passes a precomputed value
+_COMPUTE = object()
+
+# the operating-point fields that must agree across a bucket group for the
+# vectorized drift path (one C-level multi-attr fetch per request beats six
+# Python attribute reads on the hot path)
+_DRIFT_ATTRS = operator.attrgetter("n_iter", "n", "m", "snr_db",
+                                   "erasure_rate")
+
 
 class SolveService:
     """Shape-bucketed continuous batching over ``AmpEngine.solve_het``,
@@ -258,7 +286,8 @@ class SolveService:
                  operand_cache_bytes: int = 256 << 20,
                  singleton_fastpath: bool = True,
                  donate: bool = True,
-                 wire_model: WireModel | None = None):
+                 wire_model: WireModel | None = None,
+                 telemetry: bool = True):
         self.policy = policy or BucketPolicy()
         self.collect_xs = collect_xs
         self.rate_accounting = rate_accounting
@@ -300,6 +329,38 @@ class SolveService:
         # guards id assignment and engine-map mutation against a background
         # prewarm thread racing foreground submits
         self._lock = threading.RLock()
+        # telemetry plane (DESIGN.md §12): event-driven histograms/counters
+        # on the request path plus a pull-time collector over the sources
+        # that already keep their own atomic counters (engine, operand
+        # cache, batcher). ``telemetry=False`` strips every hot-path write
+        # — the bench's overhead baseline.
+        self.telemetry = telemetry
+        self._registry = None
+        # per-layout label-bound metric children (metrics._Child): the
+        # dispatch tails bump these without re-resolving label keys
+        self._children: dict = {}
+        if telemetry:
+            reg = self._registry = MetricsRegistry()
+            self._m_requests = reg.counter(
+                "amp_requests_total",
+                "Requests admitted (counted at group dispatch)",
+                ("layout",))
+            self._h_latency = reg.histogram(
+                "amp_request_latency_seconds",
+                "Admit -> result-finalized latency", ("layout",))
+            self._h_batch_wait = reg.histogram(
+                "amp_batch_wait_seconds",
+                "Admit -> bucket batch dispatch wait", ("layout",))
+            self._h_drift = reg.histogram(
+                "amp_se_drift",
+                "Per-request SE drift: mean |ln(realized/predicted)| "
+                "per-iteration variance", ("layout",),
+                buckets=DRIFT_BUCKETS)
+            self._m_drift_alerts = reg.counter(
+                "amp_se_drift_alerts_total",
+                f"Requests whose SE drift exceeded {DRIFT_ALERT}",
+                ("layout",))
+            reg.collect(self._collect_metrics)
 
     # -- request intake ------------------------------------------------------
 
@@ -308,8 +369,21 @@ class SolveService:
         (results buffered until ``flush``/``stream`` hands them out).
         Processor-sharded requests dispatch at once — they consume the
         whole mesh, so queuing them behind a batch buys nothing."""
+        t_admit = _tnow() if self.telemetry else 0.0
         req = self._prepare(req)
         key = self._key_for(req)
+        if self.telemetry:
+            # forwarded requests (cluster handoff) get their admit span
+            # appended to an own copy of the list — the frontend's decoded
+            # request must not see backend appends. Local requests stash
+            # only the admit timestamp; the dispatch tails build the span
+            # (one float attr beats a list build on the hot path, and
+            # amp_requests_total is likewise bumped per dispatched group).
+            sp = req.spans
+            if sp:
+                req.spans = [*sp, ["admit", None, t_admit, _tnow()]]
+            else:
+                req._t_admit = t_admit
         if key.placement == "proc":
             self._pending.append(self._dispatch_bucket(key, [req]))
             return req.request_id
@@ -393,8 +467,14 @@ class SolveService:
                  assign_id: bool = True) -> SolveRequest:
         if req.request_id >= 0:
             # template reuse: resubmitting an already-served request object
-            # must not alias two queue entries onto one id (cold path)
-            req = dataclasses.replace(req)
+            # must not alias two queue entries onto one id (cold path) —
+            # and must not inherit the previous serve's trace spans. A
+            # span list ending in "route" is not stale: it's a cluster
+            # frontend's in-flight handoff (admit+route stamped just
+            # before forwarding), which the backend must extend.
+            fwd = bool(req.spans) and req.spans[-1][0] == "route"
+            req = dataclasses.replace(
+                req, spans=req.spans if fwd else None)
         # id assignment mutates in place: dataclasses.replace would copy the
         # request row on the hot path for no benefit; prewarm's dummy
         # requests skip it so the id sequence stays a pure submission
@@ -717,21 +797,156 @@ class SolveService:
         # trace); pure streams of either kind never double-compile
         wire = any(r.measure_wire for r in reqs)
         eng = self._engine(key, wire)
+        t_op0 = _tnow() if self.telemetry else 0.0
         a_b = self._a_batch(key, batch, eng)
         y_b, params, has_bt = self._y_and_params(key, batch)
         if key.placement == "data":
             shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
             a_b, y_b, params = jax.device_put((a_b, y_b, params), shard)
+        t_c0 = _tnow() if self.telemetry else 0.0
         # a_b/y_b are per-flush temporaries: the donating engine consumes
         # them (the cached per-request shards behind the stack survive)
         x_outs = eng.dispatch_het(a_b, y_b, params, has_bt=has_bt)
 
         def finalize() -> list[SolveResult]:
             trace = eng.trace_of(x_outs)
-            return [self._result_one(key, r, trace, i, b_real)
-                    for i, r in enumerate(reqs)]
+            shared = self._batch_spans(t_op0, t_c0)
+            if not self.telemetry or wire:
+                # measured-wire groups keep the per-request tail (their
+                # wire_measure span interleaves result assembly); with
+                # telemetry off there is no tail at all
+                return [self._result_one(key, r, trace, i, b_real,
+                                         shared_spans=shared)
+                        for i, r in enumerate(reqs)]
+            t_fin0 = _tnow()
+            out = [self._result_one(key, r, trace, i, b_real, defer=True)
+                   for i, r in enumerate(reqs)]
+            self._batch_tail(key, reqs, out, shared, trace, t_fin0)
+            return out
 
         return finalize
+
+    def _layout_children(self, layout: str) -> dict:
+        """Label-bound metric handles for one layout, resolved once."""
+        ch = self._children.get(layout)
+        if ch is None:
+            ch = self._children[layout] = {
+                "requests": self._m_requests.labels(layout=layout),
+                "latency": self._h_latency.labels(layout=layout),
+                "batch_wait": self._h_batch_wait.labels(layout=layout),
+                "drift": self._h_drift.labels(layout=layout),
+                "alerts": self._m_drift_alerts.labels(layout=layout),
+            }
+        return ch
+
+    def _batch_tail(self, key: BucketKey, reqs: list, results: list,
+                    shared: list, trace, t_fin0: float) -> None:
+        """Telemetry tail for one batched group in a single warm pass:
+        spans assembled per request with the operands/compute/complete
+        spans shared verbatim (the batch is the unit of execution, so
+        its finalization is one ``complete`` span), the drift-path
+        uniformity check folded into the same loop, histograms fed by
+        one bulk observe per metric. Replaces B per-request
+        ``_finish_telemetry`` calls on the hot path — the <=2% overhead
+        budget (DESIGN.md §12)."""
+        ch = self._layout_children(key.layout)
+        t_end = _tnow()
+        sh0 = shared[0][2]
+        op_s, cp_s = shared
+        co_s = ["complete", None, t_fin0, t_end]
+        lats: list = []
+        waits: list = []
+        lat_add, wait_add = lats.append, waits.append
+        r0 = reqs[0]
+        v0 = _DRIFT_ATTRS(r0)
+        p0 = r0.prior
+        uniform = True
+        for r, res in zip(reqs, results):
+            rs = r.spans
+            if rs:
+                t_a = rs[-1][3]
+                spans = [*rs, ["batch_wait", None, t_a, sh0],
+                         op_s, cp_s, co_s]
+                if rs[0][0] == "admit":
+                    lat_add(t_end - rs[0][2])
+            else:
+                # local request: submit stashed only the admit timestamp
+                # (an instant span); batch_wait covers submit -> dispatch
+                t_a = getattr(r, "_t_admit", sh0)
+                spans = [["admit", None, t_a, t_a],
+                         ["batch_wait", None, t_a, sh0], op_s, cp_s, co_s]
+                lat_add(t_end - t_a)
+            res.spans = spans
+            wait_add(sh0 - t_a)
+            if uniform and not (r.prior is p0 and _DRIFT_ATTRS(r) == v0):
+                uniform = False
+        ch["requests"].inc(len(reqs))
+        if lats:
+            ch["latency"].observe_many(lats)
+        ch["batch_wait"].observe_many(waits)
+        self._drift_tail(key, reqs, results, trace, uniform, ch)
+
+    def _drift_tail(self, key: BucketKey, reqs: list, results: list,
+                    trace, uniform: bool, ch: dict) -> None:
+        """SE drift for a whole bucket group (DESIGN.md §12), written
+        onto the already-built results. A group uniform in operating
+        point — the steady-stream common case — pays one vectorized
+        masked log-ratio pass (one memoized prediction lookup per
+        distinct realized schedule, see ``se_drift_batch``); mixed
+        groups fall back to the per-request memoized path. Amortizing
+        here is what keeps enabled telemetry inside the <=2% overhead
+        budget (``BENCH_serve.json`` telemetry_overhead)."""
+        layout = "col" if key.layout == "col" else "row"
+        r0 = reqs[0]
+        dr: list = []
+        dr_add = dr.append
+        isfin = math.isfinite
+        try:
+            if uniform:
+                t = r0.n_iter
+                s2 = np.asarray(trace.sigma2_hat)[:len(reqs), :t]
+                ev = np.asarray(trace.extra_var)[:len(reqs), :t]
+                sched = ev[0] if np.array_equiv(ev[:1], ev) else ev
+                drifts = se_drift_batch(
+                    r0.problem(), s2, sched, layout=layout,
+                    n_proc=r0.n_proc, erasure_rate=r0.erasure_rate)
+                for res, d in zip(results, drifts.tolist()):
+                    if isfin(d):
+                        res.se_drift = d
+                        dr_add(d)
+            else:
+                s2_all = np.asarray(trace.sigma2_hat)
+                ev_all = np.asarray(trace.extra_var)
+                for i, (r, res) in enumerate(zip(reqs, results)):
+                    try:
+                        d, _ = se_drift(r.problem(), s2_all[i, :r.n_iter],
+                                        ev_all[i, :r.n_iter], layout=layout,
+                                        n_proc=r.n_proc,
+                                        erasure_rate=r.erasure_rate)
+                    except Exception:
+                        continue
+                    if isfin(d):
+                        res.se_drift = d
+                        dr_add(d)
+        except Exception:
+            # the monitor is advisory: a drift failure never fails a solve
+            return
+        if dr:
+            ch["drift"].observe_many(dr)
+            n_alert = sum(1 for d in dr if d > DRIFT_ALERT)
+            if n_alert:
+                ch["alerts"].inc(n_alert)
+
+    def _batch_spans(self, t_op0: float, t_c0: float) -> list | None:
+        """Batch-level spans stamped at finalize time: operand build/
+        upload (t_op0 -> dispatch) and device compute (dispatch -> trace
+        materialized). Shared verbatim by every request in the batch —
+        the batch is the unit of execution."""
+        if not self.telemetry:
+            return None
+        t_done = _tnow()
+        return [_tspan("operands", t_op0, t_c0),
+                _tspan("compute", t_c0, t_done)]
 
     def _singleton_ok(self, key: BucketKey, r: SolveRequest) -> bool:
         """Whether a lone request may skip batch padding + het-operand
@@ -753,6 +968,7 @@ class SolveService:
         cache-resident)."""
         eng = self._single_engine(r)
         self._singleton_dispatches += 1
+        t_op0 = _tnow() if self.telemetry else 0.0
         ck = ("single", self._fingerprint(r), r.n_proc,
               eng.cfg.kernel_on, eng.cfg.a_dtype)
         # _split row-splits + tile-aligns + casts; cache the result so a
@@ -770,11 +986,14 @@ class SolveService:
             sched = np.asarray(r.deltas, np.float32)
         else:
             sched = np.full(r.n_iter, np.inf, np.float32)
+        t_c0 = _tnow() if self.telemetry else 0.0
         x_outs = eng.dispatch_single(a_p, y_p, r.m, r.n, sched=sched)
 
         def finalize() -> list[SolveResult]:
-            return [self._result_one(key, r, eng.trace_of(x_outs),
-                                     None, 1)]
+            trace = eng.trace_of(x_outs)
+            return [self._result_one(key, r, trace, None, 1,
+                                     shared_spans=self._batch_spans(
+                                         t_op0, t_c0))]
 
         return finalize
 
@@ -785,6 +1004,7 @@ class SolveService:
         for these mesh-sized matrices the once-per-fingerprint pad+upload
         is the dominant saving; the sharded jit donates only y."""
         eng = self._engine(key)
+        t_op0 = _tnow() if self.telemetry else 0.0
         dispatched = []
         for r in reqs:
             assert not r.measure_wire, \
@@ -794,19 +1014,28 @@ class SolveService:
             a_p = self._a_slice(key, r, eng)
             y_b, params, has_bt = self._y_and_params(key, [r])
             hp = jax.tree.map(lambda v: np.asarray(v)[0], params)
-            dispatched.append(eng.dispatch_sharded(
-                a_p, y_b[0], hp, self.mesh, has_bt=has_bt))
+            t_c0 = _tnow() if self.telemetry else 0.0
+            dispatched.append((eng.dispatch_sharded(
+                a_p, y_b[0], hp, self.mesh, has_bt=has_bt), t_c0))
 
         def finalize() -> list[SolveResult]:
-            return [self._result_one(key, r, eng.trace_of(x_outs), None, 1)
-                    for r, x_outs in zip(reqs, dispatched)]
+            return [self._result_one(key, r, eng.trace_of(x_outs), None, 1,
+                                     shared_spans=self._batch_spans(
+                                         t_op0, t_c0))
+                    for r, (x_outs, t_c0) in zip(reqs, dispatched)]
 
         return finalize
 
     def _result_one(self, key: BucketKey, r: SolveRequest, trace,
-                    i: int | None, batch_size: int) -> SolveResult:
+                    i: int | None, batch_size: int,
+                    shared_spans: list | None = None,
+                    drift=_COMPUTE, defer: bool = False) -> SolveResult:
         """Unpad one request's slice of a trace (``i=None``: unbatched
-        processor-sharded trace)."""
+        processor-sharded trace). ``defer=True`` (the batched hot path)
+        skips the per-request telemetry tail: the caller has the drift
+        precomputed and assembles spans + histograms for the whole group
+        in ``_batch_tail``."""
+        t_fin0 = _tnow() if self.telemetry and not defer else 0.0
         t = r.n_iter
         sel = (lambda a: a[:t]) if i is None else (lambda a: a[i, :t])
         x_pad = trace.x if i is None else trace.x[i]
@@ -819,31 +1048,96 @@ class SolveService:
             x = x_pad[:r.n]
         s2 = sel(trace.sigma2_hat)
         deltas = sel(trace.deltas)
-        rates = self._rates(r, s2, deltas, sel(trace.rates),
-                            sel(trace.extra_var))
+        extra_var = sel(trace.extra_var)
+        rates = self._rates(r, s2, deltas, sel(trace.rates), extra_var)
         finite = np.isfinite(rates)
         wire = None
+        wire_span = None
         if r.measure_wire and trace.symbols is not None:
             syms = trace.symbols if i is None else trace.symbols[i]
             # payload = length-N messages (row) / length-M residual
             # contributions (col); padding columns quantize zeros
             n_elem = r.m if key.layout == "col" else r.n
+            t_w0 = _tnow() if self.telemetry else 0.0
             wire = measure_wire(syms[:t, :, :n_elem], deltas, n_elem,
                                 drop=self._drop_mask(r),
                                 recovery=r.recovery,
                                 model=self.wire_model)
+            if self.telemetry:
+                wire_span = _tspan("wire_measure", t_w0)
+        if defer:
+            # batched hot path: _batch_tail/_drift_tail fill spans and
+            # se_drift for the whole group after the listcomp
+            drift, spans = None, None
+        else:
+            drift, spans = self._finish_telemetry(
+                key, r, s2, extra_var, t_fin0, shared_spans, wire_span,
+                drift=drift)
         return SolveResult(
             request_id=r.request_id,
             x=x.copy(),
             sigma2_hat=s2.copy(), deltas=deltas.copy(),
-            extra_var=sel(trace.extra_var).copy(), rates=rates,
+            extra_var=extra_var.copy(), rates=rates,
             total_bits=float(rates[finite].sum()),
             bucket=key, batch_size=batch_size,
             bytes_on_wire=None if wire is None else wire["bytes_on_wire"],
             payload_bytes=None if wire is None else wire["payload_bytes"],
             time_on_air_s=None if wire is None else wire["time_on_air_s"],
             energy_j=None if wire is None else wire["energy_j"],
+            se_drift=drift, spans=spans,
         )
+
+    def _finish_telemetry(self, key: BucketKey, r: SolveRequest, s2,
+                          extra_var, t_fin0: float,
+                          shared_spans: list | None,
+                          wire_span: list | None, drift=_COMPUTE):
+        """Per-request telemetry tail for the singleton / proc-sharded /
+        measured-wire paths (the batched hot path uses ``_batch_tail``
+        instead): SE drift vs the operating point's prediction (memoized
+        — telemetry/drift.py) plus span assembly (batch_wait derived from
+        the admit span's end to the group's operand-build start) and the
+        latency/drift histograms."""
+        if not self.telemetry:
+            return None, None
+        ch = self._layout_children(key.layout)
+        ch["requests"].inc()
+        if drift is _COMPUTE:
+            try:
+                drift, _ = se_drift(
+                    r.problem(), s2, extra_var,
+                    layout="col" if key.layout == "col" else "row",
+                    n_proc=r.n_proc, erasure_rate=r.erasure_rate)
+            except Exception:
+                # a drift failure must never fail the solve: the monitor
+                # is advisory (NaN drift shows up in the histogram's
+                # absence)
+                drift = None
+            if drift is not None and not math.isfinite(drift):
+                drift = None
+        if drift is not None:
+            ch["drift"].observe(drift)
+            if drift > DRIFT_ALERT:
+                ch["alerts"].inc()
+        spans = list(r.spans or [])
+        if not spans:
+            # local request: submit stashed only the admit timestamp
+            t_a = getattr(r, "_t_admit", None)
+            if t_a is not None:
+                spans = [["admit", None, t_a, t_a]]
+        if shared_spans:
+            t_admit_end = spans[-1][3] if spans else shared_spans[0][2]
+            spans.append(["batch_wait", None, t_admit_end,
+                          shared_spans[0][2]])
+            spans.extend(shared_spans)
+            ch["batch_wait"].observe(shared_spans[0][2] - t_admit_end)
+        if wire_span is not None:
+            spans.append(wire_span)
+        t_tail0 = wire_span[3] if wire_span is not None else t_fin0
+        t_end = _tnow()
+        spans.append(["complete", None, t_tail0, t_end])
+        if spans and spans[0][0] == "admit":
+            ch["latency"].observe(t_end - spans[0][2])
+        return drift, spans
 
     def _rates(self, req: SolveRequest, s2, deltas, bt_rates,
                extra_var) -> np.ndarray:
@@ -1006,6 +1300,48 @@ class SolveService:
                        + list(self._wire_engines.values())
                        + list(self._single_engines.values()))
         return sum(e.counters()["compiles"] for e in engines)
+
+    def _collect_metrics(self, reg: MetricsRegistry) -> None:
+        """Snapshot-time collector: mirror the sources that already keep
+        their own atomic counters into the registry (no hot-path writes —
+        the ≤2% telemetry-overhead budget, DESIGN.md §12)."""
+        st = self.stats()
+        comp = reg.counter("amp_engine_compiles_total",
+                           "XLA compiles per bucket engine", ("bucket",))
+        disp = reg.counter("amp_engine_dispatches_total",
+                           "Engine dispatches per bucket", ("bucket",))
+        for label, v in st["compiles"]["by_bucket"].items():
+            comp.set_total(v, bucket=label)
+        for label, v in st["dispatches"]["by_bucket"].items():
+            disp.set_total(v, bucket=label)
+        reg.counter("amp_singleton_dispatches_total",
+                    "Singleton fast-path dispatches").set_total(
+                        st["singleton_dispatches"])
+        dem = reg.counter("amp_bucket_demand_total",
+                          "Requests ever admitted per bucket", ("bucket",))
+        for k, v in st["bucket_demand"].items():
+            dem.set_total(v, bucket=k)
+        oc = st["operand_cache"]
+        if oc is not None:
+            for name in ("hits", "misses", "evictions"):
+                reg.counter(f"amp_operand_cache_{name}_total",
+                            f"Operand cache {name}").set_total(oc[name])
+            reg.gauge("amp_operand_cache_bytes",
+                      "Operand cache resident bytes").set(oc["bytes"])
+            reg.gauge("amp_operand_cache_entries",
+                      "Operand cache entries").set(oc["entries"])
+
+    def metrics(self) -> dict:
+        """Atomic JSON-able metrics snapshot (DESIGN.md §12): event-driven
+        request/latency/drift series plus the pulled engine/cache/demand
+        counters. Empty when constructed with ``telemetry=False``."""
+        if self._registry is None:
+            return {"metrics": []}
+        return self._registry.snapshot()
+
+    def metrics_text(self) -> str:
+        """``metrics()`` rendered as Prometheus text exposition format."""
+        return prometheus_text(self.metrics())
 
     def demand(self) -> dict:
         """Lifetime per-bucket admission counts (``Batcher.demand``)."""

@@ -407,6 +407,101 @@ def test_tcp_backend_submit_poll_cycle():
 
 
 # ---------------------------------------------------------------------------
+# telemetry-plane ride-alongs (ISSUE 9): thread-safe scheduler state and
+# the daemon scrape loop
+# ---------------------------------------------------------------------------
+
+def test_router_stats_safe_under_concurrent_routing():
+    """Routing, completion, autoscaler steps, and stats reads from many
+    threads: every read is internally consistent (no torn counters, no
+    negative outstanding) and the final ledger balances exactly."""
+    r, pol = two_host_router(min_replicas=2, target_load=1e9)
+    a = Autoscaler(r, pol)
+    key = any_key()
+    n_threads, per_thread = 6, 400
+    errors = []
+    stop = threading.Event()
+
+    def worker():
+        try:
+            for _ in range(per_thread):
+                hid = r.route(key, 1.0)
+                r.complete(hid, 1.0)
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(repr(e))
+
+    def reader():
+        t = 0.0
+        while not stop.is_set():
+            s = r.stats()
+            assert all(v >= -1e-9 for v in s["outstanding"].values())
+            assert sum(s["served"].values()) <= n_threads * per_thread
+            a.observe({key: 1}, now=t)
+            a.step(now=t)
+            t += 1.0
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    rd = threading.Thread(target=reader)
+    rd.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    rd.join()
+    assert errors == []
+    s = r.stats()
+    assert s["outstanding"] == {"a": 0.0, "b": 0.0}
+    assert sum(s["served"].values()) == n_threads * per_thread
+
+
+def test_scraper_daemon_thread_scales_up():
+    """The production shape of elasticity (satellite: amp_serve uses
+    ``start_scraper`` instead of piggybacked scrapes): a demand spike is
+    picked up by the daemon loop on its own tick, the bucket scales out
+    with the new host prewarmed, and shutdown is clean."""
+    prior, reqs = make_reqs(8)
+    cl = ClusterService(
+        n_hosts=2, policy=POL,
+        router_policy=RouterPolicy(min_replicas=1, target_load=0.01,
+                                   ewma_halflife_s=0.2,
+                                   scrape_every_s=0.0),
+        rate_accounting=False)
+    try:
+        key = routing_key(reqs[0], POL)
+        th = cl.start_scraper(interval_s=0.05)
+        assert th.daemon and th.is_alive()
+        assert cl.start_scraper() is th            # idempotent
+        # let the loop's first tick seed the demand tracker before
+        # traffic arrives (the tracker's seed scrape reads rate 0 by
+        # design — production starts the scraper before serving too)
+        deadline = time.monotonic() + 5.0
+        while (cl.autoscaler.tracker._t_last is None
+               and time.monotonic() < deadline):
+            time.sleep(0.01)
+        assert cl.autoscaler.tracker._t_last is not None
+        cl.solve(reqs)                             # demand lands in window
+        deadline = time.monotonic() + 60.0
+        while time.monotonic() < deadline:
+            # wait for the event AND its prewarm (it runs on the scrape
+            # thread; compile_count is the "prewarm done" signal)
+            if (any(e[0] == "scale_up" for e in cl.autoscaler.events)
+                    and cl.backends["host1"].compile_count() > 0):
+                break
+            time.sleep(0.05)
+        assert any(e[0] == "scale_up" and e[1] == key
+                   for e in cl.autoscaler.events), cl.autoscaler.events
+        assert cl.router.replicas(key) == ["host0", "host1"]
+        # the scale-up prewarmed the exemplar spec on the new host
+        assert cl.backends["host1"].compile_count() > 0
+        assert cl.scrape_errors == []
+        cl.stop_scraper()
+        assert cl._scrape_thread is None and not th.is_alive()
+    finally:
+        cl.close()                                 # close is re-entrant
+
+
+# ---------------------------------------------------------------------------
 # cluster topology helpers
 # ---------------------------------------------------------------------------
 
