@@ -535,6 +535,74 @@ def bench_cluster(n: int, m: int, p: int, t: int, b: int, reps: int,
     }
 
 
+def bench_chaos(n: int, m: int, p: int, t: int, b: int, hosts: int,
+                prewarm: bool):
+    """Failure-injection drill (DESIGN.md §13): the same stream through
+    a cluster whose last host is killed mid-stream by a deterministic
+    ``FaultPlan``, measuring what fault tolerance costs and proving
+    what it preserves — zero lost requests, bit-identical replays, and
+    the detect -> recovered latency distribution. The kill lands on the
+    victim's 5th submit, stranding requests in an open partial batch
+    (the hardest case: failover must re-form the group on survivors at
+    the same padded width)."""
+    import numpy as np
+    from repro.serving import (BucketPolicy, ChaosBackend, ClusterService,
+                               FaultPlan, LocalBackend, PrewarmSpec,
+                               RouterPolicy, SolveService)
+
+    prior, _, reqs, _ = make_load(n, m, p, t, b)
+    policy = BucketPolicy(max_batch=8, n_quantum=64, mp_quantum=8)
+    menu = [PrewarmSpec(n=n, m=m, n_proc=p, n_iter=t, policy="fixed",
+                        prior=prior, batch_widths=(8,))]
+
+    ref = SolveService(policy=policy, rate_accounting=False)
+    if prewarm:
+        ref.prewarm(menu)
+    base_res = ref.solve(reqs)
+
+    victim = f"host{hosts - 1}"
+    backends = [LocalBackend(f"host{i}",
+                             SolveService(policy=policy,
+                                          rate_accounting=False))
+                for i in range(hosts - 1)]
+    backends.append(ChaosBackend(
+        LocalBackend(victim, SolveService(policy=policy,
+                                          rate_accounting=False)),
+        FaultPlan.kill_at(5)))
+    cl = ClusterService(
+        backends=backends, policy=policy,
+        router_policy=RouterPolicy(min_replicas=hosts, suspect_after=1,
+                                   dead_after=2, retry_limit=2,
+                                   retry_backoff_s=0.0))
+    if prewarm:
+        cl.prewarm(menu)
+
+    t0 = time.perf_counter()
+    got = sorted(cl.solve(reqs), key=lambda r: r.request_id)
+    wall = time.perf_counter() - t0
+
+    max_dx = max(float(np.max(np.abs(cr.x - br.x)))
+                 for cr, br in zip(got, base_res))
+    st = cl.stats()
+    rec = st["recovery"] or {}
+    out = {
+        "hosts": hosts, "batch": b, "victim": victim,
+        "fault_plan": "kill_at(5)",
+        "completed": len(got), "admitted": len(reqs),
+        "lost": st["lost"], "failovers": st["failovers"],
+        "retries": st["retries"],
+        "retries_per_request": st["retries"] / max(1, len(reqs)),
+        "host_states": st["host_states"],
+        "recovery_p50_ms": rec.get("p50_ms"),
+        "recovery_p95_ms": rec.get("p95_ms"),
+        "recovered": rec.get("count", 0),
+        "wall_s": wall,
+        "bitwise_max_abs_diff": max_dx,
+    }
+    cl.close()
+    return out
+
+
 def dataclass_replace(req, **kw):
     import dataclasses
     return dataclasses.replace(req, request_id=-1, **kw)
@@ -554,6 +622,10 @@ def main():
     ap.add_argument("--hosts", type=int, default=2,
                     help="emulated host count for the cluster section "
                          "(DESIGN.md §11); 1 skips it")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the failure-injection drill: kill one "
+                         "emulated host mid-stream and report recovery "
+                         "latency + zero-loss counters (DESIGN.md §13)")
     ap.add_argument("--no-prewarm", dest="prewarm", action="store_false",
                     help="skip SolveService.prewarm (measures cold-ish "
                          "services; compiles still leave the timed region "
@@ -712,6 +784,28 @@ def main():
         cluster["tcp_rtt"] = rtt
         report["cluster"] = cluster
 
+    # chaos drill (DESIGN.md §13): kill one emulated host mid-stream;
+    # the gate is zero lost requests and bit-identical failover replays,
+    # the measurement is recovery latency + retry cost
+    if args.chaos and args.hosts > 1:
+        bch = 16 if args.smoke else 32
+        chaos = bench_chaos(n, m, p, t, bch, args.hosts, args.prewarm)
+        print(f"\nchaos ({args.hosts} hosts, B={bch}, "
+              f"{chaos['fault_plan']} on {chaos['victim']}):")
+        print(f"  {chaos['completed']}/{chaos['admitted']} completed, "
+              f"{chaos['lost']} lost, {chaos['failovers']} failover(s), "
+              f"{chaos['retries']} retries "
+              f"({chaos['retries_per_request']:.2f}/req)")
+        rec_p50 = chaos["recovery_p50_ms"]
+        rec_p95 = chaos["recovery_p95_ms"]
+        print(f"  recovery p50 "
+              f"{-1.0 if rec_p50 is None else rec_p50:.1f} ms  p95 "
+              f"{-1.0 if rec_p95 is None else rec_p95:.1f} ms "
+              f"(n={chaos['recovered']})  max|dx| "
+              f"{chaos['bitwise_max_abs_diff']:.1e}  states "
+              f"{chaos['host_states']}")
+        report["chaos"] = chaos
+
     # measured wire bytes (DESIGN.md §10): rANS payload vs model entropy,
     # plus the lossy-link byte cost per recovery policy at --erasure.
     # Config is smoke-independent: byte counts are deterministic, so the
@@ -766,6 +860,20 @@ def main():
             failures.append(f"cluster results differ from single-host by "
                             f"max|dx|={cl['bitwise_max_abs_diff']:.2e} "
                             f"(must be bit-identical)")
+    if "chaos" in report:
+        ch = report["chaos"]
+        if ch["lost"] != 0 or ch["completed"] != ch["admitted"]:
+            failures.append(f"chaos drill lost "
+                            f"{ch['admitted'] - ch['completed']} "
+                            f"request(s) (must be 0)")
+        if ch["bitwise_max_abs_diff"] != 0.0:
+            failures.append(f"chaos failover replays differ from "
+                            f"single-host by max|dx|="
+                            f"{ch['bitwise_max_abs_diff']:.2e} "
+                            f"(must be bit-identical)")
+        if ch["retries"] == 0:
+            failures.append("chaos drill recorded no retries despite "
+                            "killing a host")
     for msg in failures:
         print(f"WARNING: {msg}")
     # --smoke is a CI sanity check on shared runners: surface the

@@ -140,6 +140,37 @@ def main() -> int:
         warnings.append(f"cluster router cost imbalance {imb:.2f}x "
                         f"exceeds 2x on a homogeneous stream")
 
+    # fault-tolerance drill (DESIGN.md §13): lost requests and non-
+    # identical replays are correctness (always warn); recovery latency
+    # and retry cost compare against baseline when both runs drilled
+    b_ch, f_ch = base.get("chaos") or {}, fresh.get("chaos") or {}
+    if f_ch:
+        lost = (f_ch.get("admitted", 0) - f_ch.get("completed", 0)
+                + f_ch.get("lost", 0))
+        if lost:
+            warnings.append(f"chaos drill lost {lost} request(s) "
+                            f"(zero-loss failover is the gate)")
+        if f_ch.get("bitwise_max_abs_diff"):
+            warnings.append(f"chaos failover replays differ from "
+                            f"single-host by max|dx|="
+                            f"{f_ch['bitwise_max_abs_diff']:.2e} "
+                            f"(must be bit-identical)")
+        b95, f95 = b_ch.get("recovery_p95_ms"), f_ch.get("recovery_p95_ms")
+        if b95 and f95 and b_ch.get("hosts") == f_ch.get("hosts"):
+            rel = f95 / b95 - 1.0
+            line = (f"recovery p95 {f95:.1f} ms vs baseline {b95:.1f} ms "
+                    f"({rel:+.0%}, {f_ch.get('retries_per_request', 0):.2f} "
+                    f"retries/req)")
+            # recovery includes a replayed solve: give it double headroom
+            if rel > 2 * args.threshold:
+                warnings.append(f"failover recovery regressed: {line}")
+            else:
+                print(f"serve-bench: {line}")
+        elif f95:
+            print(f"serve-bench: recovery p95 {f95:.1f} ms "
+                  f"({f_ch.get('retries_per_request', 0):.2f} retries/req, "
+                  f"no baseline drill to compare)")
+
     for w in warnings:
         print(f"::warning::{w}")
     if not warnings:

@@ -197,6 +197,20 @@ def main():
               f"(cost imbalance {rt['imbalance']:.2f}x), "
               f"{st['shed']} shed; autoscaler events: "
               f"{st['autoscaler']['events'] or 'none'}")
+        # fault-tolerance plane (DESIGN.md §13): quiet on a healthy run,
+        # loud when the drill — or a real fault — fired
+        faults = {k: st[k] for k in
+                  ("failovers", "retries", "hedges", "lost", "degraded")
+                  if st.get(k)}
+        unhealthy = {h: s for h, s in st["host_states"].items()
+                     if s != "healthy"}
+        if faults or unhealthy:
+            rec = st.get("recovery") or {}
+            print(f"faults: " + ", ".join(f"{k} {v}"
+                                          for k, v in faults.items())
+                  + (f"; states {unhealthy}" if unhealthy else "")
+                  + (f"; recovery p95 {rec['p95_ms']:.1f}ms "
+                     f"(n={rec['count']})" if rec else ""))
     else:
         oc = st["operand_cache"]
         print(f"\n{n_req} requests in {dt:.2f}s  "

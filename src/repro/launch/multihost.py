@@ -27,6 +27,14 @@ exactly the regime the request-level router exists for: the test proves
 the TCP + codec path end-to-end under a real multi-process jax runtime.
 
   PYTHONPATH=src python -m repro.launch.multihost --smoke
+
+``--chaos`` (DESIGN.md §13) is the two-process fault drill: the
+frontend submits the full stream, then kills host1's real backend
+process mid-flight (the ``X`` frame op — the server stops serving with
+computed results still buffered), and the gate is that the flush
+recovers everything over the real TCP path: zero lost requests,
+failover counted, host1 evicted as dead, recovery latency measured,
+and the surviving results bit-identical to a single-host run.
 """
 from __future__ import annotations
 
@@ -142,31 +150,57 @@ def child(args) -> int:
     from ..serving import ClusterService, RouterPolicy
     from ..serving.frontend import TcpBackend
 
+    from ..serving.wire import BackendUnavailable
+
     backends = [LocalBackend("host0",
                              SolveService(policy=policy,
                                           rate_accounting=False))]
     for i, port in enumerate(ports, start=1):
         for attempt in range(60):   # backend process may still be booting
             try:
-                backends.append(TcpBackend(("127.0.0.1", port), f"host{i}"))
+                backends.append(TcpBackend(
+                    ("127.0.0.1", port), f"host{i}",
+                    connect_timeout_s=5.0, recv_timeout_s=60.0))
                 break
-            except (ConnectionError, OSError):
+            except (ConnectionError, OSError, BackendUnavailable):
                 time.sleep(0.5)
         else:
             print(f"multihost[0]: backend host{i} on :{port} never came up")
             return 2
 
-    cluster = ClusterService(
-        backends=backends, policy=policy,
-        router_policy=RouterPolicy(min_replicas=len(backends)))
+    rp = RouterPolicy(min_replicas=len(backends))
+    if args.chaos:
+        # fast detection: one failed call suspects, two evict
+        rp = RouterPolicy(min_replicas=len(backends), suspect_after=1,
+                          dead_after=2, retry_limit=2,
+                          retry_backoff_s=0.05)
+    cluster = ClusterService(backends=backends, policy=policy,
+                             router_policy=rp)
     prior, reqs = _make_load(args.requests)
     menu = [PrewarmSpec(n=128, m=64, n_proc=4, n_iter=8, policy="fixed",
                         prior=prior, batch_widths=(8,))]
     cluster.prewarm(menu)
-    warm = cluster.compile_count()
+    # per-host warm counts: a host that dies mid-drill drops out of the
+    # cluster-wide count, so steady-state compiles compare per survivor
+    warm = {hid: b.compile_count()
+            for hid, b in cluster.backends.items()}
 
     t0 = time.time()
-    results = sorted(cluster.solve(reqs), key=lambda r: r.request_id)
+    if args.chaos:
+        # submit everything, then kill host1's backend PROCESS with
+        # its results still buffered server-side: the flush must fail
+        # over every stranded request to the survivors
+        ids = [cluster.submit(r) for r in reqs]
+        stranded = sum(1 for hk in cluster._inflight if hk[0] == "host1")
+        cluster.backends["host1"].kill_server()
+        print(f"multihost[0]: chaos — killed host1 with {stranded} "
+              f"requests in flight there")
+        got = list(cluster.flush())
+        own = set(ids)
+        results = sorted((r for r in got if r.request_id in own),
+                         key=lambda r: r.request_id)
+    else:
+        results = sorted(cluster.solve(reqs), key=lambda r: r.request_id)
     dt = time.time() - t0
 
     # single-host reference on the same stream: cluster results must be
@@ -179,11 +213,20 @@ def child(args) -> int:
 
     st = cluster.stats()
     served = st["router"]["served"]
-    steady = cluster.compile_count() - warm
+    steady = sum(b.compile_count() - warm[hid]
+                 for hid, b in cluster.backends.items()
+                 if cluster.router.host_state(hid) != "dead")
     print(f"multihost[0]: {len(results)} results in {dt:.2f}s over "
           f"{len(backends)} hosts; served {served}; "
           f"steady-state compiles {steady}; max|dx| {max_dx:.1e}; "
           f"imbalance {st['router']['imbalance']:.2f}x")
+    if args.chaos:
+        rec = st["recovery"] or {}
+        print(f"multihost[0]: chaos — states {st['host_states']}; "
+              f"failovers {st['failovers']}, retries {st['retries']}, "
+              f"lost {st['lost']}; recovery p95 "
+              f"{rec.get('p95_ms', float('nan')):.1f}ms "
+              f"(n={rec.get('count', 0)})")
     # measured TCP routing overhead per frame kind (DESIGN.md §12):
     # submits ("S") are the hot path, flush/prewarm amortize
     for host_id, per_op in cluster.rtt_stats().items():
@@ -203,6 +246,17 @@ def child(args) -> int:
         failures.append(f"{steady} steady-state compiles after prewarm")
     if any(v == 0 for v in served.values()):
         failures.append(f"idle host in {served}")
+    if args.chaos:
+        if st["lost"] != 0:
+            failures.append(f"{st['lost']} requests lost in failover")
+        if st["failovers"] != 1:
+            failures.append(f"expected 1 failover, saw {st['failovers']}")
+        if st["retries"] == 0:
+            failures.append("no retries counted despite a host kill")
+        if st["host_states"].get("host1") != "dead":
+            failures.append(f"host1 not evicted: {st['host_states']}")
+        if not st["recovery"]:
+            failures.append("no recovery latency recorded")
     for msg in failures:
         print(f"multihost[0]: FAIL: {msg}")
     return 1 if failures else 0
@@ -214,6 +268,9 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--smoke", action="store_true",
                     help="16 requests (CI sanity)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="kill one backend process mid-stream and gate "
+                         "on zero-loss failover (DESIGN.md §13)")
     ap.add_argument("--timeout", type=float, default=420.0,
                     help="parent-side wall clock before children are "
                          "killed (exit 124)")

@@ -10,19 +10,27 @@ scheduler (``ClusterRouter`` + ``Autoscaler``), and per-host
 between hosts. The telemetry plane (DESIGN.md §12) threads a metrics
 registry, per-request trace spans, and a live SE-drift monitor through
 all of it (``repro.telemetry``; metrics snapshots cross hosts as their
-own codec frame kind).
+own codec frame kind). The fault-tolerance plane (DESIGN.md §13) adds
+failure detection (health probes walking hosts through
+healthy/suspect/dead), bit-identical failover replay, tail hedging, a
+graceful-degradation ladder, and a deterministic chaos harness
+(``serving.chaos``) that proves all of it under injected faults.
 """
 from .batcher import Batcher
 from .buckets import (BucketKey, BucketPolicy, batch_width_ladder,
                       bucket_for, pad_batch_size, placement_for)
-from .codec import (decode_metrics, decode_request, decode_result,
-                    encode_metrics, encode_request, encode_result)
+from .chaos import ChaosBackend, ChaosProxy, FaultPlan, FaultSpec
+from .codec import (CodecError, decode_metrics, decode_request,
+                    decode_result, encode_metrics, encode_request,
+                    encode_result)
 from .frontend import (BackendServer, ClusterService, LocalBackend,
-                       TcpBackend)
+                       ShedLadder, TcpBackend)
 from .operand_cache import OperandCache, fingerprint
 from .router import (Autoscaler, ClusterRouter, DemandTracker, HostInfo,
                      Overloaded, RouterPolicy, routing_key, shape_cost)
 from .service import PrewarmSpec, SolveRequest, SolveResult, SolveService
+from .wire import (BackendError, BackendUnavailable, FrameError,
+                   RemoteRequestError)
 
 __all__ = [
     "Batcher", "BucketKey", "BucketPolicy", "batch_width_ladder",
@@ -34,5 +42,9 @@ __all__ = [
     "ClusterRouter", "Autoscaler", "DemandTracker", "HostInfo",
     "RouterPolicy", "Overloaded", "routing_key", "shape_cost",
     "encode_request", "decode_request", "encode_result", "decode_result",
-    "encode_metrics", "decode_metrics",
+    "encode_metrics", "decode_metrics", "CodecError",
+    # fault-tolerance plane (DESIGN.md §13)
+    "BackendError", "BackendUnavailable", "RemoteRequestError",
+    "FrameError", "ShedLadder", "FaultSpec", "FaultPlan", "ChaosBackend",
+    "ChaosProxy",
 ]

@@ -69,18 +69,43 @@ def _unpack(buf: bytes) -> "tuple[dict, dict[str, np.ndarray]]":
         raise CodecError("truncated header")
     try:
         header = json.loads(buf[8:8 + hlen])
-    except json.JSONDecodeError as e:
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
         raise CodecError(f"bad header: {e}") from e
+    if not isinstance(header, dict):
+        raise CodecError(f"header is {type(header).__name__}, not object")
+    manifest = header.pop("arrays", [])
+    if not isinstance(manifest, list):
+        raise CodecError("bad arrays manifest")
     arrays = {}
     off = 8 + hlen
-    for ent in header.pop("arrays", []):
-        dt = np.dtype(ent["dtype"])
-        shape = tuple(ent["shape"])
-        nb = dt.itemsize * int(np.prod(shape, dtype=np.int64))
+    for ent in manifest:
+        # a corrupted or hostile manifest must fail *here*, not as a
+        # numpy crash (bad dtype string) or a giant allocation (negative
+        # or overflowing dims) deeper in
+        if not isinstance(ent, dict):
+            raise CodecError("bad manifest entry")
+        try:
+            name, dts, shape = ent["name"], ent["dtype"], ent["shape"]
+        except (KeyError, TypeError) as e:
+            raise CodecError(f"bad manifest entry: {e}") from e
+        if not (isinstance(shape, list)
+                and all(isinstance(d, int) and 0 <= d < (1 << 40)
+                        for d in shape)):
+            raise CodecError(f"bad shape {shape!r} for array {name!r}")
+        try:
+            dt = np.dtype(dts)
+        except TypeError as e:
+            raise CodecError(f"bad dtype {dts!r}: {e}") from e
+        nb = dt.itemsize
+        for d in shape:
+            nb *= d
         if len(buf) < off + nb:
-            raise CodecError(f"truncated array {ent['name']!r}")
-        arrays[ent["name"]] = np.frombuffer(
-            buf[off:off + nb], dt).reshape(shape).copy()
+            raise CodecError(f"truncated array {name!r}")
+        try:
+            arrays[str(name)] = np.frombuffer(
+                buf[off:off + nb], dt).reshape(tuple(shape)).copy()
+        except ValueError as e:   # object/zero-width dtypes and kin
+            raise CodecError(f"bad array {name!r}: {e}") from e
         off += nb
     if off != len(buf):
         raise CodecError(f"{len(buf) - off} trailing bytes")

@@ -37,21 +37,27 @@ import threading
 import time
 from collections import deque
 
+from ..core.state_evolution import se_trajectory
 from ..telemetry import MetricsRegistry, merge_snapshots, prometheus_text
+from ..telemetry.metrics import HOST_STATES, RECOVERY_BUCKETS
 from ..telemetry.spans import now as _tnow
 from ..telemetry.spans import span as _tspan
 from ..telemetry.spans import tag_host
 from .buckets import BucketPolicy
-from .codec import (bucket_from_dict, bucket_to_dict, decode_metrics,
-                    decode_request, decode_result, encode_metrics,
-                    encode_request, encode_result, spec_from_dict,
-                    spec_to_dict)
+from .codec import (CodecError, bucket_from_dict, bucket_to_dict,
+                    decode_metrics, decode_request, decode_result,
+                    encode_metrics, encode_request, encode_result,
+                    spec_from_dict, spec_to_dict)
 from .router import (Autoscaler, ClusterRouter, HostInfo, Overloaded,
                      RouterPolicy, routing_key, shape_cost)
 from .service import PrewarmSpec, SolveService
+from .wire import (BackendError, BackendUnavailable, FrameError,
+                   RemoteRequestError, pack_error, recv_frame, remote_error,
+                   send_frame)
 
 __all__ = ["LocalBackend", "BackendServer", "TcpBackend", "ClusterService",
-           "Overloaded"]
+           "ShedLadder", "Overloaded", "BackendError", "BackendUnavailable",
+           "RemoteRequestError"]
 
 import json
 
@@ -93,37 +99,23 @@ class LocalBackend:
     def metrics(self) -> dict:
         return self.service.metrics()
 
+    def ping(self) -> bool:
+        """Health probe (DESIGN.md §13): in-process backends are alive by
+        construction — the interesting implementation is TcpBackend's."""
+        return True
+
     def close(self) -> None:
         pass
 
 
-# -- TCP transport (codec frames, no pickle) --------------------------------
+# -- TCP transport (codec frames over serving.wire frames) -------------------
 #
-# Frame: u32 length | 1-byte op | body. Replies: u32 length | 1-byte
-# status (b"R" ok / b"E" error) | body. Result lists nest as
+# Frame protocol lives in ``serving.wire`` (send_frame/recv_frame + the
+# typed error frames). Result lists nest as
 # u32 count | (u32 len | result-frame)*.
 
-_OPS = (b"S", b"P", b"F", b"D", b"W", b"T", b"C", b"N", b"Q", b"M")
-
-
-def _recv_exact(sock, n: int) -> bytes:
-    buf = b""
-    while len(buf) < n:
-        chunk = sock.recv(n - len(buf))
-        if not chunk:
-            raise ConnectionError("peer closed mid-frame")
-        buf += chunk
-    return buf
-
-
-def _send_frame(sock, op: bytes, body: bytes = b"") -> None:
-    sock.sendall(struct.pack("<I", len(body) + 1) + op + body)
-
-
-def _recv_frame(sock) -> "tuple[bytes, bytes]":
-    (ln,) = struct.unpack("<I", _recv_exact(sock, 4))
-    payload = _recv_exact(sock, ln)
-    return payload[:1], payload[1:]
+_OPS = (b"S", b"P", b"F", b"D", b"W", b"T", b"C", b"N", b"Q", b"M",
+        b"H", b"X")
 
 
 def _pack_results(results) -> bytes:
@@ -133,25 +125,54 @@ def _pack_results(results) -> bytes:
 
 
 def _unpack_results(body: bytes) -> list:
+    """Decode a nested result-list body; every truncation or bad length
+    raises ``CodecError`` instead of surfacing as a struct/index crash —
+    a corrupt reply must read as a protocol failure, never hang or
+    half-deserialize."""
+    if len(body) < 4:
+        raise CodecError("truncated result list (no count)")
     (count,) = struct.unpack("<I", body[:4])
     off, out = 4, []
-    for _ in range(count):
+    for i in range(count):
+        if len(body) < off + 4:
+            raise CodecError(f"truncated result list at entry {i}")
         (ln,) = struct.unpack("<I", body[off:off + 4])
         off += 4
+        if len(body) < off + ln:
+            raise CodecError(f"truncated result frame {i}")
         out.append(decode_result(body[off:off + ln]))
         off += ln
+    if off != len(body):
+        raise CodecError(f"{len(body) - off} trailing bytes in result list")
     return out
+
+
+class _Die(Exception):
+    """Raised by the ``X`` op: abrupt server death for chaos drills —
+    the connection closes with NO reply frame, exactly what a crashed
+    process looks like from the frontend."""
 
 
 class BackendServer:
     """Serves one ``LocalBackend`` over TCP to a remote frontend. One
     frontend connection at a time (the cluster has exactly one router);
     runs on a daemon thread via ``start()``. The ``Q`` op (or ``stop()``)
-    shuts it down."""
+    shuts it down.
+
+    Fault model (DESIGN.md §13): per-request failures (a bad request,
+    a solve raising) reply with a typed error frame carrying the remote
+    traceback and the connection survives; backend-fatal conditions
+    (resource exhaustion, a desynced frame stream, a frontend that went
+    silent past ``idle_timeout_s``) close the connection — the listener
+    keeps accepting, so a restarted frontend can reconnect."""
+
+    #: per-request errors keep the connection; these close it
+    FATAL_ERRORS = (MemoryError,)
 
     def __init__(self, backend: LocalBackend, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, idle_timeout_s: float = 300.0):
         self.backend = backend
+        self.idle_timeout_s = float(idle_timeout_s)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -159,6 +180,7 @@ class BackendServer:
         self.host, self.port = self._sock.getsockname()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        self.frames_served = 0
 
     def start(self) -> threading.Thread:
         th = threading.Thread(target=self.serve_forever,
@@ -184,6 +206,9 @@ class BackendServer:
             with conn:
                 try:
                     self._serve_conn(conn)
+                except _Die:
+                    self.stop()   # chaos kill: no reply, no cleanup frame
+                    break
                 except (ConnectionError, OSError):
                     continue   # frontend went away; await the next one
         try:
@@ -192,14 +217,38 @@ class BackendServer:
             pass
 
     def _serve_conn(self, conn) -> None:
+        # a frontend that dies mid-frame must not pin the (single-
+        # connection) server forever: time out and await the next one
+        if self.idle_timeout_s > 0:
+            conn.settimeout(self.idle_timeout_s)
         while not self._stop.is_set():
-            op, body = _recv_frame(conn)
+            try:
+                op, body = recv_frame(conn)
+            except FrameError as e:
+                # desynced stream: nothing after this frame can be
+                # trusted — tell the peer (best effort) and drop the
+                # connection so it reconnects clean
+                try:
+                    send_frame(conn, b"E", pack_error(e, fatal=True))
+                except OSError:
+                    pass
+                return
             try:
                 reply = self._dispatch(op, body)
-            except Exception as e:   # surface backend errors to the router
-                _send_frame(conn, b"E", repr(e).encode())
+            except _Die:
+                raise
+            except self.FATAL_ERRORS as e:
+                try:
+                    send_frame(conn, b"E", pack_error(e, fatal=True))
+                except OSError:
+                    pass
+                return
+            except Exception as e:   # per-request: typed frame, carry on
+                send_frame(conn, b"E", pack_error(e, fatal=False))
+                self.frames_served += 1
                 continue
-            _send_frame(conn, b"R", reply)
+            send_frame(conn, b"R", reply)
+            self.frames_served += 1
             if op == b"Q":
                 self.stop()
                 return
@@ -228,6 +277,12 @@ class BackendServer:
             # per-host metrics ride the no-pickle codec as their own
             # frame kind (DESIGN.md §12); the frontend merges them
             return encode_metrics(b.host_id, b.metrics())
+        if op == b"H":
+            # health probe: proves the serve loop is responsive, not
+            # just that the TCP stack accepts connections
+            return b"ok"
+        if op == b"X":
+            raise _Die()
         if op == b"Q":
             return b"ok"
         raise ValueError(f"unknown op {op!r}")
@@ -238,6 +293,15 @@ class TcpBackend:
     (typically another ``jax.distributed`` host). Thread-safe: one
     request/reply in flight per connection.
 
+    Fault handling (DESIGN.md §13): connect and recv both honor
+    configurable timeouts — a half-dead peer fails the call with
+    ``BackendUnavailable`` within ``recv_timeout_s`` instead of hanging
+    forever — and every connection-level failure drops the socket, so
+    the next call reconnects (a recovered host rejoins without a new
+    proxy object). Remote error frames rebuild as typed exceptions
+    (``RemoteRequestError`` with the remote traceback, or
+    ``BackendUnavailable`` for backend-fatal replies).
+
     Every frame's round-trip (send -> reply parsed off the socket) is
     timed into a per-op sliding window — the measured TCP routing
     overhead the ROADMAP asked for (``rtt_stats``; surfaced in cluster
@@ -245,26 +309,89 @@ class TcpBackend:
 
     RTT_WINDOW = 4096   # samples kept per op (bounded memory under load)
 
-    def __init__(self, address: "tuple[str, int]", host_id: str):
+    def __init__(self, address: "tuple[str, int]", host_id: str,
+                 connect_timeout_s: float = 10.0,
+                 recv_timeout_s: float = 120.0):
         self.host_id = host_id
-        self._sock = socket.create_connection(address, timeout=120.0)
+        self.address = tuple(address)
+        self.connect_timeout_s = float(connect_timeout_s)
+        self.recv_timeout_s = float(recv_timeout_s)
+        self._sock = None
         self._lock = threading.Lock()
         self._rtt: dict = {}
-        self.n_devices = int(self._call(b"N", json.loads))
+        try:
+            self.n_devices = int(self._call(b"N", json.loads))
+        except BaseException:
+            # don't leak the connected socket when the handshake fails
+            self.close()
+            raise
+
+    def _ensure_sock(self):
+        """Connected socket, reconnecting after a dropped one (recovered
+        hosts rejoin on the next call). Caller holds ``_lock``."""
+        if self._sock is None:
+            try:
+                sock = socket.create_connection(
+                    self.address, timeout=self.connect_timeout_s)
+            except OSError as e:
+                raise BackendUnavailable(
+                    f"backend {self.host_id} connect "
+                    f"{self.address}: {e}") from e
+            sock.settimeout(self.recv_timeout_s or None)
+            self._sock = sock
+        return self._sock
+
+    def _drop_sock(self) -> None:
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
 
     def _call(self, op: bytes, parse, body: bytes = b""):
         t0 = time.perf_counter()
         with self._lock:
-            _send_frame(self._sock, op, body)
-            status, reply = _recv_frame(self._sock)
+            sock = self._ensure_sock()
+            try:
+                send_frame(sock, op, body)
+                status, reply = recv_frame(sock)
+            except FrameError as e:
+                # desynced reply stream: the connection is unusable
+                self._drop_sock()
+                raise BackendUnavailable(
+                    f"backend {self.host_id}: {e}") from e
+            except (OSError, ConnectionError) as e:
+                # timeout, reset, refused — a dying or unreachable host;
+                # finally-style cleanup so the fd never leaks
+                self._drop_sock()
+                kind = "timed out" if isinstance(e, TimeoutError) else str(e)
+                raise BackendUnavailable(
+                    f"backend {self.host_id} {op.decode()!s}: "
+                    f"{kind}") from e
             dq = self._rtt.get(op)
             if dq is None:
                 dq = self._rtt[op] = deque(maxlen=self.RTT_WINDOW)
             dq.append(time.perf_counter() - t0)
         if status == b"E":
-            raise RuntimeError(
-                f"backend {self.host_id}: {reply.decode(errors='replace')}")
-        return parse(reply)
+            err = remote_error(self.host_id, reply)
+            if isinstance(err, BackendUnavailable):
+                with self._lock:
+                    self._drop_sock()   # server said fatal: it closed too
+            raise err
+        if status != b"R":
+            with self._lock:
+                self._drop_sock()
+            raise BackendUnavailable(
+                f"backend {self.host_id}: bad reply status {status!r}")
+        try:
+            return parse(reply)
+        except (ValueError, KeyError, struct.error) as e:
+            # CodecError included (it is a ValueError): a reply that
+            # fails to parse is a corrupt peer, not a caller bug
+            raise BackendUnavailable(
+                f"backend {self.host_id}: corrupt {op.decode()!s} "
+                f"reply: {e}") from e
 
     def rtt_stats(self) -> dict:
         """Per-op frame round-trip latency over the sliding window:
@@ -314,17 +441,149 @@ class TcpBackend:
         _host, snap = self._call(b"M", decode_metrics)
         return snap
 
+    def ping(self) -> bool:
+        """Health probe: one ``H`` frame through the serve loop. Raises
+        ``BackendUnavailable`` (within the configured timeouts) when the
+        host is unreachable, hung, or desynced."""
+        return self._call(b"H", lambda b: b) == b"ok"
+
     def shutdown_server(self) -> None:
         try:
             self._call(b"Q", lambda b: b)
-        except (RuntimeError, OSError, ConnectionError):
+        except (BackendError, RuntimeError, OSError, ConnectionError):
             pass
 
+    def kill_server(self) -> None:
+        """Chaos drill: make the remote die abruptly (``X`` op — the
+        server closes without replying, like a crash). Fire-and-forget."""
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    send_frame(self._sock, b"X")
+                except OSError:
+                    pass
+            self._drop_sock()
+
     def close(self) -> None:
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        with self._lock:
+            self._drop_sock()
+
+
+# -- graceful degradation (DESIGN.md §13) ------------------------------------
+
+class ShedLadder:
+    """Overload response as a ladder, cheapest fidelity first.
+
+    The paper's premise is that fidelity is a *schedulable* trade — so
+    under sustained overload the frontend should spend rate before it
+    spends correctness, and spend correctness (with a quote) before it
+    sheds:
+
+      level 0  full fidelity
+      level 1  strip extras: ``measure_wire`` accounting off (the rANS
+               coding tail is pure observability cost)
+      level 2  degrade the schedule: halve the iteration budget (and a
+               DP bit budget with it) — SE quotes the predicted final
+               MSE at both budgets *before* the cut, so the degradation
+               is priced, not silent
+      level 3  shed (``Overloaded`` propagates to the caller)
+
+    Escalation: ``up_after`` sheds inside ``window_s`` raise the level;
+    a full calm window with no sheds lowers it one step. Deterministic
+    under an injected clock (tests drive it synthetically). Off by
+    default (``RouterPolicy.shed_ladder``) — degradation changes
+    results, so it must be an explicit operator choice."""
+
+    def __init__(self, window_s: float = 2.0, up_after: int = 3,
+                 clock=time.monotonic):
+        self.window_s = float(window_s)
+        self.up_after = max(1, int(up_after))
+        self.clock = clock
+        self.level = 0
+        self._shed_times: deque = deque(maxlen=256)
+        self._last_shed = -math.inf
+        self._quotes: dict = {}   # SE quote memo per operating point
+
+    def record_shed(self, now: float | None = None) -> int:
+        """One Overloaded event; escalates after ``up_after`` in-window
+        sheds. Returns the (possibly new) level."""
+        now = self.clock() if now is None else now
+        self._last_shed = now
+        self._shed_times.append(now)
+        horizon = now - self.window_s
+        while self._shed_times and self._shed_times[0] < horizon:
+            self._shed_times.popleft()
+        if len(self._shed_times) >= self.up_after and self.level < 3:
+            self.level += 1
+            self._shed_times.clear()
+        return self.level
+
+    def relax(self, now: float | None = None) -> int:
+        """Called on clean admissions: one calm ``window_s`` with no
+        sheds steps the ladder back down."""
+        now = self.clock() if now is None else now
+        if self.level > 0 and now - self._last_shed >= self.window_s:
+            self.level -= 1
+            self._last_shed = now   # each step down needs its own window
+        return self.level
+
+    def _quote(self, req, t_deg: int) -> "tuple[float, float]":
+        """SE-predicted final MSE at the full and degraded iteration
+        budgets (memoized per operating point — the quote must not make
+        overload worse)."""
+        key = (req.n, req.m, req.snr_db, float(req.prior.eps),
+               float(req.prior.mu_s), float(req.prior.sigma_s),
+               req.n_iter, t_deg)
+        hit = self._quotes.get(key)
+        if hit is None:
+            prob = req.problem()
+            full = float(se_trajectory(prob, req.n_iter)[-1])
+            deg = float(se_trajectory(prob, t_deg)[-1])
+            hit = self._quotes[key] = (full, deg)
+        return hit
+
+    def apply(self, req) -> "tuple[object, dict | None]":
+        """Degrade one request per the current level. Returns the
+        (possibly replaced) request and a quote dict (None at level 0 /
+        nothing to strip). Level 3 does not mutate — the shed itself
+        happens at admission."""
+        if self.level <= 0:
+            return req, None
+        changed: dict = {}
+        if req.measure_wire:
+            changed["measure_wire"] = False
+        if self.level >= 2 and req.n_iter > 2:
+            t_deg = max(2, (req.n_iter + 1) // 2)
+            full, deg = self._quote(req, t_deg)
+            changed["n_iter"] = t_deg
+            if req.deltas is not None:
+                changed["deltas"] = req.deltas[:t_deg]
+            if req.policy == "dp" and req.dp_total_bits:
+                changed["dp_total_bits"] = max(
+                    1, math.ceil(req.dp_total_bits / 2))
+            quote = {"level": self.level, "n_iter_full": req.n_iter,
+                     "n_iter": t_deg, "mse_full": full, "mse_degraded": deg,
+                     "mse_ratio": deg / max(full, 1e-300)}
+        elif changed:
+            quote = {"level": self.level, "stripped": sorted(changed)}
+        else:
+            return req, None
+        return dataclasses.replace(req, **changed), quote
+
+
+@dataclasses.dataclass
+class _Flight:
+    """Frontend-side ownership record of one routed request — everything
+    needed to re-admit it bit-identically if its host dies."""
+
+    gid: int                      # global request id (stable across retries)
+    cost: float                   # routed shape cost (returned on complete)
+    req: object                   # caller's template, for replay
+    key: object                   # routing key
+    t_submit: float               # monotonic submit time (latency/hedging)
+    attempts: int = 0             # re-admissions so far
+    t_detect: float | None = None  # failure-detection time (recovery clock)
+    hedged: bool = False          # a duplicate copy is (or was) in flight
 
 
 # -- the cluster service ----------------------------------------------------
@@ -376,9 +635,28 @@ class ClusterService:
             self.router_policy)
         self.autoscaler = Autoscaler(self.router, self.router_policy)
         self._next_id = 0
-        # (host_id, backend-local id) -> (global id, routed cost)
+        # (host_id, backend-local id) -> _Flight: the frontend OWNS every
+        # admitted request until its result is delivered — ownership is
+        # what makes failover possible (DESIGN.md §13)
         self._inflight: dict = {}
         self._completed: list = []
+        # fault tolerance (DESIGN.md §13)
+        self._fail_counts: dict = {}   # host -> consecutive conn failures
+        self._fail_events: dict = {}   # host -> cumulative conn failures
+        self._revived: set = set()     # hosts ever declared dead (stale-
+        #                                result tolerance in _absorb)
+        self._zombies: dict = {}       # (host, local) -> cost: losing
+        #                                hedge copies, completed on arrival
+        self._gid_refs: dict = {}      # gid -> {(host, local)} hedge copies
+        self._lat: dict = {}           # routing key -> completion latencies
+        self._recovery_s: list = []    # detect -> replayed-result latency
+        self._lost_gids: set = set()
+        self.retries = 0               # re-admissions (submit + failover)
+        self.failovers = 0             # hosts declared dead
+        self.hedges = 0
+        self.lost = 0                  # admitted but never completed
+        self.degraded = 0              # requests the shed ladder touched
+        self.shed_quotes: list = []    # SE quotes for degraded requests
         self._specs: dict = {}      # routing key -> exemplar PrewarmSpec
         # (host_id, routing key) -> open-partial-batch depth, counted
         # mod max_batch (a group dispatches exactly when it fills): the
@@ -401,6 +679,10 @@ class ClusterService:
         self._scrape_thread: threading.Thread | None = None
         self._scrape_stop: threading.Event | None = None
         self.scrape_errors: list = []
+        # graceful degradation ladder (opt-in: degradation changes
+        # results, so it must be an explicit operator choice)
+        self._ladder = (ShedLadder()
+                        if self.router_policy.shed_ladder else None)
 
     # -- intake --------------------------------------------------------------
 
@@ -431,80 +713,389 @@ class ClusterService:
                 policy=req.policy, transport=req.transport,
                 layout=req.layout, snr_db=req.snr_db, prior=req.prior)
 
+    def _unbump_fill(self, host_id: str, key) -> None:
+        """Exact inverse of ``_bump_fill`` (mod ``max_batch``) — a submit
+        the backend never accepted opened no group slot."""
+        f = self._fill.get((host_id, key))
+        if f is not None:
+            self._fill[(host_id, key)] = (f - 1) % self.policy.max_batch
+
+    def _place(self, req, key, cost, t_admit: float, *, gid=None,
+               attempts: int = 0, t_detect=None, retry: bool = False):
+        """Route + forward one request, retrying across hosts on
+        connection-level failure (``BackendUnavailable``): the failed
+        host is charged a failure (walking healthy -> suspect -> dead),
+        its routed cost and fill slot are returned, and after a linear
+        backoff the request routes again with that host excluded.
+        ``RemoteRequestError`` (the request's own fault) propagates
+        without retry — replaying a bad request elsewhere just fails
+        elsewhere. Returns the global id (allocated on first successful
+        placement so shed/failed submits leave no gid gap)."""
+        rp = self.router_policy
+        avoid: set = set()
+        tries = 0
+        while True:
+            t_route = _tnow() if self.telemetry else 0.0
+            host_id = self.router.route(key, cost,
+                                        prefer=self._open_batch_host(key),
+                                        avoid=frozenset(avoid))
+            self._bump_fill(host_id, key)
+            # the backend assigns its own local id: hand it a fresh copy
+            # so the caller's template (replayed verbatim on failover)
+            # and our global numbering stay untouched
+            fwd = dataclasses.replace(req, request_id=-1)
+            if self.telemetry:
+                # frontend spans travel WITH the request (codec header)
+                # and come back on the result; the backend appends its
+                # own with host=None, which ``_absorb`` tags with the
+                # routed host. Replays carry a "retry" span; the span
+                # list must still END with "route" (the service keys its
+                # handoff stamp on it).
+                base = list(req.spans or [])
+                if retry or tries > 0:
+                    base.append(_tspan("retry", t_admit, t_route,
+                                       host="frontend"))
+                fwd.spans = base + [
+                    _tspan("admit", t_admit, t_route, host="frontend"),
+                    _tspan("route", t_route, host="frontend")]
+            try:
+                local = self.backends[host_id].submit(fwd)
+            except RemoteRequestError:
+                self._unbump_fill(host_id, key)
+                self.router.complete(host_id, cost)
+                raise
+            except BackendUnavailable as e:
+                self._unbump_fill(host_id, key)
+                self.router.complete(host_id, cost)
+                self._note_failure(host_id, e)
+                avoid.add(host_id)
+                tries += 1
+                self.retries += 1
+                if tries > max(0, rp.retry_limit):
+                    raise BackendUnavailable(
+                        f"submit failed on {tries} host(s): {e}") from e
+                if rp.retry_backoff_s > 0:
+                    time.sleep(rp.retry_backoff_s * tries)
+                continue
+            self._note_ok(host_id)
+            if gid is None:
+                gid = self._next_id
+                self._next_id += 1
+            self._inflight[(host_id, local)] = _Flight(
+                gid=gid, cost=cost, req=req, key=key,
+                t_submit=time.monotonic(), attempts=attempts,
+                t_detect=t_detect)
+            return gid
+
     def submit(self, req) -> int:
         """Route one request to a backend host; returns its *global*
         request id (backend-local ids never escape). Raises
-        ``Overloaded`` when every replica of the request's bucket is at
-        the admission cap — the shed path; ``shed_count`` tracks it."""
+        ``Overloaded`` when every live replica of the request's bucket
+        is at the admission cap — the shed path; ``shed_count`` tracks
+        it (and escalates the shed ladder when one is enabled). A host
+        that fails the submit is retried around (``_place``)."""
         t_admit = _tnow() if self.telemetry else 0.0
+        quote = None
+        if self._ladder is not None:
+            req, quote = self._ladder.apply(req)
         key = self._routing_key(req)
         cost = shape_cost(key)
         self._remember_spec(key, req)
-        t_route = _tnow() if self.telemetry else 0.0
         try:
-            host_id = self.router.route(key, cost,
-                                        prefer=self._open_batch_host(key))
+            gid = self._place(req, key, cost, t_admit)
         except Overloaded:
             self.shed_count += 1
+            if self._ladder is not None:
+                self._ladder.record_shed()
             raise
-        self._bump_fill(host_id, key)
-        # the backend assigns its own local id: hand it a fresh copy so
-        # the caller's template (and our global numbering) stay untouched
-        fwd = dataclasses.replace(req, request_id=-1)
-        if self.telemetry:
-            # frontend spans travel WITH the request (codec header) and
-            # come back on the result; the backend appends its own with
-            # host=None, which ``_absorb`` tags with the routed host
-            fwd.spans = list(req.spans or []) + [
-                _tspan("admit", t_admit, t_route, host="frontend"),
-                _tspan("route", t_route, host="frontend")]
-        local = self.backends[host_id].submit(fwd)
-        gid = self._next_id
-        self._next_id += 1
-        self._inflight[(host_id, local)] = (gid, cost)
+        if quote is not None:
+            self.degraded += 1
+            self.shed_quotes.append(quote)
+        elif self._ladder is not None:
+            self._ladder.relax()
         self.submitted += 1
         if (self.router_policy.scrape_every_s > 0.0
                 and self._scrape_thread is None):
             # piggyback scraping only when no daemon scraper owns the tick
             now = time.monotonic()
             if now - self._last_scrape >= self.router_policy.scrape_every_s:
+                self.check_health()
                 self.scrape(now)
         return gid
 
+    # -- failure detection & recovery (DESIGN.md §13) ------------------------
+
+    def _note_ok(self, host_id: str) -> None:
+        """A successful call resets the consecutive-failure count and
+        heals a suspect host (dead hosts revive only via
+        ``check_health`` — one good frame is not proof of life)."""
+        if self._fail_counts.get(host_id):
+            self._fail_counts[host_id] = 0
+        if self.router.host_state(host_id) == "suspect":
+            self.router.mark_healthy(host_id)
+
+    def _note_failure(self, host_id: str, exc) -> str:
+        """Charge one connection-level failure and walk the host state
+        machine: ``suspect_after`` consecutive failures lose routing
+        ties, ``dead_after`` evict the host and fail its in-flight
+        requests over. Per-request errors never land here — they say
+        nothing about the host. Returns the resulting state."""
+        n = self._fail_counts.get(host_id, 0) + 1
+        self._fail_counts[host_id] = n
+        self._fail_events[host_id] = self._fail_events.get(host_id, 0) + 1
+        rp = self.router_policy
+        state = self.router.host_state(host_id)
+        if state == "dead":
+            return state
+        if n >= max(1, rp.dead_after):
+            self._declare_dead(host_id)
+            return "dead"
+        if n >= max(1, rp.suspect_after):
+            self.router.mark_suspect(host_id)
+            return "suspect"
+        return state
+
+    def _declare_dead(self, host_id: str) -> None:
+        """Evict a host and recover its work: the router drops it from
+        every replica set and zeroes its outstanding cost; its stranded
+        flights re-admit on survivors in original admission order — so
+        full groups re-form at the same padded widths and the replayed
+        results are bit-identical to the originals."""
+        t_detect = time.monotonic()
+        t_pc = _tnow() if self.telemetry else 0.0
+        self.router.mark_dead(host_id)
+        self.failovers += 1
+        self._revived.add(host_id)
+        b = self.backends.get(host_id)
+        if b is not None:
+            try:
+                b.close()   # drop the dead socket; revival reconnects
+            except Exception:  # noqa: BLE001 — already dead
+                pass
+        # losing hedge copies on the dead host will never arrive
+        for hk in [k for k in self._zombies if k[0] == host_id]:
+            del self._zombies[hk]
+        # its open partial batches are gone with it
+        for fk in [k for k in self._fill if k[0] == host_id]:
+            del self._fill[fk]
+        stranded = sorted(
+            ((hk, fl) for hk, fl in self._inflight.items()
+             if hk[0] == host_id),
+            key=lambda kv: kv[1].gid)
+        for hk, fl in stranded:
+            del self._inflight[hk]
+            refs = self._gid_refs.get(fl.gid)
+            if refs is not None:
+                refs.discard(hk)
+                if refs:
+                    continue        # a hedged copy survives elsewhere
+                del self._gid_refs[fl.gid]
+            self._readmit(fl, t_detect, t_pc)
+
+    def _readmit(self, fl: _Flight, t_detect: float, t_pc: float) -> None:
+        """Replay one stranded flight on a surviving host (same gid,
+        same request template -> same bucket program -> same bits);
+        past the retry limit, or with nowhere live to go, it is lost —
+        counted, never silently dropped."""
+        rp = self.router_policy
+        if fl.attempts >= max(0, rp.retry_limit):
+            self.lost += 1
+            self._lost_gids.add(fl.gid)
+            return
+        self.retries += 1
+        try:
+            self._place(fl.req, fl.key, fl.cost, t_pc, gid=fl.gid,
+                        attempts=fl.attempts + 1, t_detect=t_detect,
+                        retry=True)
+        except (Overloaded, BackendError):
+            self.lost += 1
+            self._lost_gids.add(fl.gid)
+
+    def check_health(self) -> dict:
+        """Probe every backend once (the ``H`` health frame / local
+        no-op). Successes reset failure counts, heal suspects, and
+        revive dead hosts; failures walk the state machine — so a dead
+        peer is detected within ``dead_after`` probe intervals even
+        with no traffic in flight. The scraper daemon drives this every
+        tick; tests and ``amp_serve`` call it directly. Returns
+        ``{host_id: state}``."""
+        for host_id, b in list(self.backends.items()):
+            try:
+                ok = b.ping()
+            except BackendError as e:
+                self._note_failure(host_id, e)
+                continue
+            except Exception as e:  # noqa: BLE001 — a broken backend
+                self._note_failure(host_id, BackendUnavailable(repr(e)))
+                continue
+            if not ok:
+                self._note_failure(
+                    host_id, BackendUnavailable("bad health reply"))
+                continue
+            if self.router.host_state(host_id) == "dead":
+                self.router.mark_healthy(host_id)   # revival
+            self._fail_counts[host_id] = 0
+            self._note_ok(host_id)
+        return self.router.host_states()
+
+    def _hedge_tail(self) -> None:
+        """Tail-latency hedging (``RouterPolicy.hedge_p99_mult`` > 0):
+        an in-flight request stuck past mult x its bucket's p99
+        completion latency is duplicated onto a different live host;
+        the first copy to finish wins and the loser is dropped on
+        arrival (``_zombies``). Targets slow/suspect hosts without
+        waiting for the dead threshold. Off by default: the winning
+        copy may have batched at a different width, so hedging trades
+        strict determinism for tail latency."""
+        mult = self.router_policy.hedge_p99_mult
+        if mult <= 0.0:
+            return
+        now = time.monotonic()
+        for hk, fl in list(self._inflight.items()):
+            if fl.hedged or fl.gid in self._gid_refs:
+                continue
+            dq = self._lat.get(fl.key)
+            if not dq or len(dq) < 8:
+                continue            # no latency signal yet
+            xs = sorted(dq)
+            p99 = xs[min(len(xs) - 1, math.ceil(0.99 * len(xs)) - 1)]
+            if now - fl.t_submit < mult * p99:
+                continue
+            host_id = hk[0]
+            try:
+                other = self.router.route(fl.key, fl.cost,
+                                          avoid=frozenset({host_id}))
+            except Overloaded:
+                continue            # nowhere to hedge to
+            fwd = dataclasses.replace(fl.req, request_id=-1)
+            if self.telemetry:
+                t_route = _tnow()
+                fwd.spans = list(fl.req.spans or []) + [
+                    _tspan("retry", t_route, t_route, host="frontend"),
+                    _tspan("admit", t_route, t_route, host="frontend"),
+                    _tspan("route", t_route, host="frontend")]
+            try:
+                local = self.backends[other].submit(fwd)
+            except BackendError as e:
+                self.router.complete(other, fl.cost)
+                if isinstance(e, BackendUnavailable):
+                    self._note_failure(other, e)
+                continue
+            fl.hedged = True
+            dup = _Flight(gid=fl.gid, cost=fl.cost, req=fl.req,
+                          key=fl.key, t_submit=now,
+                          attempts=fl.attempts + 1,
+                          t_detect=fl.t_detect, hedged=True)
+            self._inflight[(other, local)] = dup
+            self._gid_refs[fl.gid] = {hk, (other, local)}
+            self.hedges += 1
+
     def _absorb(self, host_id: str, results) -> None:
         """Rewrite backend-local ids to global ids, return the routed
-        cost to the router, buffer globally."""
+        cost to the router, buffer globally. Hedge-aware: the first copy
+        of a hedged gid wins and its siblings become zombies (completed
+        for cost accounting, dropped on arrival); a host that was
+        declared dead may deliver results for flights already failed
+        over — those are dropped (their cost was zeroed at eviction)."""
+        now = time.monotonic()
         for res in results:
-            entry = self._inflight.pop((host_id, res.request_id), None)
-            assert entry is not None, \
-                f"backend {host_id} returned unknown id {res.request_id}"
-            gid, cost = entry
-            self.router.complete(host_id, cost)
+            hk = (host_id, res.request_id)
+            zcost = self._zombies.pop(hk, None)
+            if zcost is not None:
+                # late duplicate of an already-delivered hedged request
+                self.router.complete(host_id, zcost)
+                continue
+            fl = self._inflight.pop(hk, None)
+            if fl is None:
+                assert host_id in self._revived, \
+                    f"backend {host_id} returned unknown id {res.request_id}"
+                continue
+            refs = self._gid_refs.pop(fl.gid, None)
+            if refs is not None:
+                for other in refs:
+                    if other == hk:
+                        continue
+                    dup = self._inflight.pop(other, None)
+                    if dup is not None:
+                        self._zombies[other] = dup.cost
+            self.router.complete(host_id, fl.cost)
+            dq = self._lat.get(fl.key)
+            if dq is None:
+                dq = self._lat[fl.key] = deque(maxlen=512)
+            dq.append(now - fl.t_submit)
+            if fl.t_detect is not None:
+                # recovery latency: failure detected -> replayed result
+                rec = now - fl.t_detect
+                self._recovery_s.append(rec)
+                if self._registry is not None:
+                    self._registry.histogram(
+                        "amp_recovery_seconds",
+                        "Failure detected -> re-admitted request completed",
+                        buckets=RECOVERY_BUCKETS).observe(rec)
             spans = (tag_host(res.spans, host_id)
                      if self.telemetry and res.spans else res.spans)
             self._completed.append(
-                dataclasses.replace(res, request_id=gid, spans=spans))
+                dataclasses.replace(res, request_id=fl.gid, spans=spans))
+
+    def _poll_all(self) -> None:
+        """Poll every live backend into ``_completed``; a backend whose
+        connection fails is charged (and possibly declared dead, failing
+        its flights over) instead of killing the whole poll."""
+        for host_id, b in list(self.backends.items()):
+            if self.router.host_state(host_id) == "dead":
+                continue
+            try:
+                self._absorb(host_id, b.poll())
+            except BackendUnavailable as e:
+                self._note_failure(host_id, e)
+
+    def _flush_all(self) -> None:
+        """Flush every live backend, re-flushing survivors after any
+        failover: a mid-flush death re-admits its stranded flights into
+        open groups on live hosts, which then need their own flush. The
+        round bound covers the worst case of every host taking
+        ``dead_after`` failures to die, one per round."""
+        rp = self.router_policy
+        max_rounds = 2 + max(1, rp.dead_after) * max(1, len(self.backends))
+        for _ in range(max_rounds):
+            clean = True
+            for host_id, b in list(self.backends.items()):
+                if self.router.host_state(host_id) == "dead":
+                    continue
+                try:
+                    self._absorb(host_id, b.flush())
+                except BackendUnavailable as e:
+                    self._note_failure(host_id, e)
+                    clean = False
+            live_pending = any(
+                self.router.host_state(hk[0]) != "dead"
+                for hk in self._inflight)
+            if clean and not live_pending:
+                return
 
     def poll(self) -> list:
-        """Collect materialized results from every backend (no forced
-        dispatch of partial batches)."""
-        for host_id, b in self.backends.items():
-            self._absorb(host_id, b.poll())
+        """Collect materialized results from every live backend (no
+        forced dispatch of partial batches)."""
+        self._hedge_tail()
+        self._poll_all()
         out, self._completed = self._completed, []
         return out
 
     def flush(self) -> list:
         """Dispatch every backend's stragglers; return all buffered
-        results."""
-        for host_id, b in self.backends.items():
-            self._absorb(host_id, b.flush())
+        results. Survives backend deaths mid-flush (their in-flight
+        requests replay on live hosts and flush again)."""
+        self._hedge_tail()
+        self._flush_all()
         self._fill.clear()          # flush closed every open group
         out, self._completed = self._completed, []
         return out
 
     def solve(self, reqs) -> list:
         """Submit + flush; results in submission order (``SolveService``
-        semantics: foreign buffered results stay for their consumer)."""
+        semantics: foreign buffered results stay for their consumer).
+        Raises ``BackendUnavailable`` if any admitted request was lost —
+        a partial answer must never look like a complete one."""
         ids = [self.submit(r) for r in reqs]
         own = set(ids)
         by_id = {}
@@ -513,12 +1104,19 @@ class ClusterService:
                 by_id[r.request_id] = r
             else:
                 self._completed.append(r)
+        missing = [i for i in ids if i not in by_id]
+        if missing:
+            raise BackendUnavailable(
+                f"{len(missing)} request(s) lost after retries: "
+                f"gids {missing[:8]}")
         return [by_id[i] for i in ids]
 
     def stream(self, reqs):
-        """Continuous batching across hosts: each submit polls its routed
-        backend, so a bucket batch completing on any host yields
-        immediately; stragglers flush when the input ends."""
+        """Continuous batching across hosts: each submit polls every
+        live backend, so a bucket batch completing on any host yields
+        immediately; stragglers flush when the input ends. Lost
+        requests (host death past the retry limit) simply never yield —
+        callers needing all-or-nothing use ``solve``."""
         own = set()
 
         def take_own():
@@ -532,12 +1130,11 @@ class ClusterService:
 
         for r in reqs:
             own.add(self.submit(r))
-            for host_id, b in self.backends.items():
-                self._absorb(host_id, b.poll())
+            self._hedge_tail()
+            self._poll_all()
             if self._completed:
                 yield from take_own()
-        for host_id, b in self.backends.items():
-            self._absorb(host_id, b.flush())
+        self._flush_all()
         self._fill.clear()
         yield from take_own()
 
@@ -587,8 +1184,15 @@ class ClusterService:
         now = time.monotonic() if now is None else now
         self._last_scrape = now
         deltas: dict = {}
-        for b in self.backends.values():
-            for k, v in b.take_demand().items():
+        for host_id, b in list(self.backends.items()):
+            if self.router.host_state(host_id) == "dead":
+                continue
+            try:
+                dem = b.take_demand()
+            except BackendUnavailable as e:
+                self._note_failure(host_id, e)
+                continue
+            for k, v in dem.items():
                 rk = dataclasses.replace(k, placement="local")
                 deltas[rk] = deltas.get(rk, 0) + v
         self.autoscaler.observe(deltas, now)
@@ -598,7 +1202,11 @@ class ClusterService:
                 continue
             spec = self._specs.get(key)
             if spec is not None:
-                self.backends[host_id].prewarm([spec])
+                try:
+                    self.backends[host_id].prewarm([spec])
+                except BackendUnavailable as e:
+                    self._note_failure(host_id, e)
+                    continue
                 self.router.mark_warm(host_id, key)
         return events
 
@@ -620,6 +1228,7 @@ class ClusterService:
         def loop() -> None:
             while not stop.wait(interval):
                 try:
+                    self.check_health()   # the heartbeat rides the tick
                     self.scrape()
                 except Exception as e:  # noqa: BLE001 — keep scraping
                     self.scrape_errors.append(repr(e))
@@ -658,23 +1267,66 @@ class ClusterService:
     # -- observability -------------------------------------------------------
 
     def compile_count(self) -> int:
-        return sum(b.compile_count() for b in self.backends.values())
+        n = 0
+        for hid, b in self.backends.items():
+            if self.router.host_state(hid) == "dead":
+                continue
+            try:
+                n += b.compile_count()
+            except BackendError:
+                pass
+        return n
+
+    def recovery_stats(self) -> dict:
+        """Failover recovery latency (failure detected -> replayed
+        result delivered), in ms. Empty dict when nothing failed over."""
+        xs = sorted(self._recovery_s)
+        if not xs:
+            return {}
+
+        def pct(q: float) -> float:
+            return xs[min(len(xs) - 1, math.ceil(q * len(xs)) - 1)]
+
+        return {
+            "count": len(xs),
+            "p50_ms": 1e3 * pct(0.50),
+            "p95_ms": 1e3 * pct(0.95),
+            "max_ms": 1e3 * xs[-1],
+        }
 
     def stats(self) -> dict:
-        return {
+        out = {
             "submitted": self.submitted,
             "shed": self.shed_count,
             "inflight": len(self._inflight),
+            "retries": self.retries,
+            "failovers": self.failovers,
+            "hedges": self.hedges,
+            "lost": self.lost,
+            "degraded": self.degraded,
+            "host_states": self.router.host_states(),
+            "recovery": self.recovery_stats(),
             "router": self.router.stats(),
             "autoscaler": self.autoscaler.stats(),
-            "hosts": {hid: b.stats() for hid, b in self.backends.items()},
+            "hosts": {},
         }
+        for hid, b in self.backends.items():
+            if self.router.host_state(hid) == "dead":
+                out["hosts"][hid] = {"state": "dead"}
+                continue
+            try:
+                out["hosts"][hid] = b.stats()
+            except BackendError:
+                out["hosts"][hid] = {"state": self.router.host_state(hid)}
+        if self._ladder is not None:
+            out["shed_ladder_level"] = self._ladder.level
+        return out
 
     def rtt_stats(self) -> dict:
         """Per-host TCP frame round-trip stats (``TcpBackend.rtt_stats``;
         empty for in-process backends — there is no wire to time)."""
         return {hid: b.rtt_stats() for hid, b in self.backends.items()
-                if isinstance(b, TcpBackend)}
+                if hasattr(b, "rtt_stats")}
 
     def _collect_frontend(self, reg: MetricsRegistry) -> None:
         """Frontend-plane collector: admission counters, router load,
@@ -702,6 +1354,35 @@ class ClusterService:
         reg.gauge("amp_router_imbalance",
                   "Cost-weighted served-share max/min").set(
                       imb if math.isfinite(imb) else -1.0)
+        # fault-tolerance plane (DESIGN.md §13)
+        reg.counter("amp_failover_total",
+                    "Hosts declared dead (in-flight failed over)"
+                    ).set_total(self.failovers)
+        reg.counter("amp_retry_total",
+                    "Request re-admissions (submit retries + failover "
+                    "replays)").set_total(self.retries)
+        reg.counter("amp_hedge_total",
+                    "Hedged duplicate submissions").set_total(self.hedges)
+        reg.counter("amp_lost_requests_total",
+                    "Admitted requests lost after retries (must stay 0)"
+                    ).set_total(self.lost)
+        reg.counter("amp_degraded_total",
+                    "Requests degraded by the shed ladder"
+                    ).set_total(self.degraded)
+        hb = reg.counter("amp_heartbeat_failures_total",
+                         "Connection-level failures per host", ("host",))
+        for hid, n in self._fail_events.items():
+            hb.set_total(n, host=hid)
+        stg = reg.gauge(
+            "amp_host_state",
+            "Host state index into (healthy, suspect, dead, draining)",
+            ("host",))
+        for hid, st in self.router.host_states().items():
+            stg.set(HOST_STATES.index(st), host=hid)
+        if self._ladder is not None:
+            reg.gauge("amp_shed_ladder_level",
+                      "Graceful-degradation ladder level (0-3)"
+                      ).set(self._ladder.level)
         events = self.autoscaler.stats()["events"]
         ev_c = reg.counter("amp_autoscaler_events_total",
                            "Applied scaling events", ("kind",))
@@ -730,7 +1411,12 @@ class ClusterService:
             return {"metrics": []}
         snaps = [("frontend", self._registry.snapshot())]
         for hid, b in self.backends.items():
-            snap = b.metrics()
+            if self.router.host_state(hid) == "dead":
+                continue
+            try:
+                snap = b.metrics()
+            except BackendError:
+                continue    # a dying host must not break the scrape
             if snap.get("metrics"):
                 snaps.append((hid, snap))
         return merge_snapshots(snaps)

@@ -93,7 +93,7 @@ class HostInfo:
 
 @dataclasses.dataclass(frozen=True)
 class RouterPolicy:
-    """Scheduler knobs (router + autoscaler)."""
+    """Scheduler knobs (router + autoscaler + fault tolerance)."""
 
     ewma_halflife_s: float = 10.0   # demand-rate smoothing
     target_load: float = 50.0       # cost-units/s one replica should absorb
@@ -105,6 +105,20 @@ class RouterPolicy:
     #                                 replica sheds the request (Overloaded)
     prefer_prewarmed: bool = True   # cold hosts lose routing ties
     scrape_every_s: float = 0.0     # frontend auto-scrape period (0 = manual)
+    # fault tolerance (DESIGN.md §13): consecutive connection-level
+    # failures (BackendUnavailable from calls or health probes) walk a
+    # host healthy -> suspect -> dead; dead hosts are evicted from every
+    # replica set and their in-flight requests re-admitted elsewhere
+    suspect_after: int = 1          # failures before a host turns suspect
+    dead_after: int = 3             # failures before a host is declared dead
+    retry_limit: int = 2            # re-admissions per request before lost
+    retry_backoff_s: float = 0.05   # base backoff between submit retries
+    hedge_p99_mult: float = 0.0     # duplicate in-flight requests older
+    #                                 than mult * p99 latency (0 = off)
+    shed_ladder: bool = False       # graceful-degradation ladder: strip
+    #                                 wire/telemetry extras, then degrade
+    #                                 the schedule (SE-quoted), before
+    #                                 shedding with Overloaded
 
 
 class DemandTracker:
@@ -171,6 +185,69 @@ class ClusterRouter:
         # (host, key) pairs known to hold a compiled program (prewarmed
         # or served at least once): routing prefers them
         self._warm: set = set()
+        # host state machine (DESIGN.md §13): healthy -> suspect (probe
+        # failures, deprioritized at routing ties) -> dead (evicted from
+        # every replica set, in-flight failed over) and draining (planned
+        # removal: no new routes, outstanding work finishes). The
+        # *frontend* counts failures and calls the mark_* transitions —
+        # it sees the typed errors; the router only holds the state.
+        self._state: dict[str, str] = {h.host_id: "healthy" for h in hosts}
+
+    # -- host state machine --------------------------------------------------
+
+    def host_state(self, host_id: str) -> str:
+        with self.lock:
+            return self._state[host_id]
+
+    def host_states(self) -> "dict[str, str]":
+        with self.lock:
+            return dict(self._state)
+
+    def _routable(self, host_id: str) -> bool:
+        return self._state[host_id] in ("healthy", "suspect")
+
+    def alive_hosts(self) -> "list[str]":
+        """Hosts new work may route to (healthy or suspect)."""
+        with self.lock:
+            return [h.host_id for h in self.hosts
+                    if self._routable(h.host_id)]
+
+    def mark_suspect(self, host_id: str) -> None:
+        """Healthy -> suspect (failed probes below the dead threshold).
+        Suspect hosts still route — they lose ties to healthy replicas —
+        but hedging targets their in-flight tail."""
+        with self.lock:
+            if self._state[host_id] == "healthy":
+                self._state[host_id] = "suspect"
+
+    def mark_healthy(self, host_id: str) -> None:
+        """Probe succeeded: suspect hosts recover; a dead host revives
+        (it rejoins routing and the autoscaler may re-add replicas)."""
+        with self.lock:
+            self._state[host_id] = "healthy"
+
+    def mark_dead(self, host_id: str) -> "list[BucketKey]":
+        """Declare a host dead: evict it from every replica set, zero its
+        outstanding work (those requests are being failed over — their
+        cost re-enters on the host that re-admits them), and return the
+        bucket keys that lost a replica so the frontend can re-plan.
+        Buckets left with no live replica refill lazily on the next
+        ``route``/``add_replica`` (which skip dead hosts)."""
+        with self.lock:
+            self._state[host_id] = "dead"
+            self._outstanding[host_id] = 0.0
+            affected = []
+            for key, reps in self._replicas.items():
+                if host_id in reps:
+                    reps.remove(host_id)
+                    affected.append(key)
+            return affected
+
+    def drain(self, host_id: str) -> None:
+        """Graceful removal: no new routes; in-flight work completes."""
+        with self.lock:
+            if self._state[host_id] != "dead":
+                self._state[host_id] = "draining"
 
     # -- replica sets --------------------------------------------------------
 
@@ -188,29 +265,38 @@ class ClusterRouter:
     def _ensure(self, key: BucketKey) -> "list[str]":
         reps = self._replicas.get(key)
         if reps is None:
-            # first sight: min_replicas hosts, least loaded first (stable
-            # host order breaks ties so assignment is deterministic)
+            # first sight: min_replicas live hosts, least loaded first
+            # (stable host order breaks ties so assignment is
+            # deterministic); dead/draining hosts never join
             n = min(max(1, self.policy.min_replicas), len(self.hosts))
-            order = sorted(self.hosts,
+            pool = [h for h in self.hosts if self._routable(h.host_id)]
+            order = sorted(pool,
                            key=lambda h: (self._load(h.host_id),
                                           self.hosts.index(h)))
             reps = self._replicas[key] = [h.host_id for h in order[:n]]
         return reps
 
+    def _grow_locked(self, key: BucketKey, reps: "list[str]",
+                     avoid=()) -> str | None:
+        """Append the least-loaded live non-member host to ``reps``;
+        None when no live host is available or the set is saturated."""
+        if len(reps) >= self._max_replicas():
+            return None
+        candidates = [h for h in self.hosts
+                      if h.host_id not in reps and h.host_id not in avoid
+                      and self._routable(h.host_id)]
+        if not candidates:
+            return None
+        host = min(candidates, key=lambda h: (self._load(h.host_id),
+                                              self.hosts.index(h)))
+        reps.append(host.host_id)
+        return host.host_id
+
     def add_replica(self, key: BucketKey) -> str | None:
-        """Grow the bucket's replica set by the least-loaded non-member
-        host; returns its id (None when saturated)."""
+        """Grow the bucket's replica set by the least-loaded live
+        non-member host; returns its id (None when saturated)."""
         with self.lock:
-            reps = self._ensure(key)
-            if len(reps) >= self._max_replicas():
-                return None
-            candidates = [h for h in self.hosts if h.host_id not in reps]
-            if not candidates:
-                return None
-            host = min(candidates, key=lambda h: (self._load(h.host_id),
-                                                  self.hosts.index(h)))
-            reps.append(host.host_id)
-            return host.host_id
+            return self._grow_locked(key, self._ensure(key))
 
     def remove_replica(self, key: BucketKey) -> str | None:
         """Shrink the bucket's replica set (never below min_replicas):
@@ -225,25 +311,50 @@ class ClusterRouter:
     # -- routing -------------------------------------------------------------
 
     def route(self, key: BucketKey, cost: float,
-              prefer: str | None = None) -> str:
+              prefer: str | None = None, avoid=()) -> str:
         """Pick the host for one request and account its outstanding
         cost. A ``prefer`` replica under the admission cap wins outright
         — the frontend passes the host holding the bucket's open partial
         batch, so a filling batch is not split across hosts mid-stream
         (splitting costs an extra program dispatch AND changes padded
         widths, breaking bit-identity with a single-host service).
-        Otherwise, among the bucket's replicas: least cost-weighted
-        outstanding work first, then — at equal load — prewarmed/
+        Otherwise, among the bucket's *live* replicas (dead/draining
+        hosts never route; ``avoid`` lists hosts the caller is retrying
+        away from): least cost-weighted outstanding work first, then —
+        at equal load — healthy before suspect, then prewarmed/
         previously-served hosts before cold ones (a cold host pays an XLA
         compile on first dispatch; warmth must only break ties, or the
         first-served host would win every route and capacity added by
         the autoscaler would never drain load), then stable host order.
-        Raises ``Overloaded`` when an admission cap is set and every
-        replica is at it."""
+        A bucket whose replicas all died refills from the surviving
+        hosts here (the autoscaler replaces capacity on its next step;
+        this keeps the *next request* routable immediately). Raises
+        ``Overloaded`` when no live replica exists or an admission cap is
+        set and every live replica is at it."""
         with self.lock:
             reps = self._ensure(key)
+            # a death may have shrunk the set below min_replicas: top it
+            # back up from survivors (membership ignores ``avoid`` — the
+            # pick below still honors it)
+            target = min(max(1, self.policy.min_replicas),
+                         sum(1 for h in self.hosts
+                             if self._routable(h.host_id)))
+            while sum(1 for hid in reps if self._routable(hid)) < target:
+                if self._grow_locked(key, reps) is None:
+                    break
+            live = [hid for hid in reps
+                    if self._routable(hid) and hid not in avoid]
+            if not live:
+                grown = self._grow_locked(key, reps, avoid)
+                if grown is None:
+                    # an avoided host is better than failing outright
+                    live = [hid for hid in reps if self._routable(hid)]
+                    if not live:
+                        raise Overloaded(f"no live replica for {key}")
+                else:
+                    live = [grown]
             cap = self.policy.max_outstanding
-            if (prefer in reps
+            if (prefer in live
                     and (cap <= 0.0 or self._outstanding[prefer] < cap)):
                 self._outstanding[prefer] += cost
                 self._served[prefer] += 1
@@ -251,8 +362,9 @@ class ClusterRouter:
                 self._warm.add((prefer, key))
                 return prefer
             ranked = sorted(
-                reps,
+                live,
                 key=lambda hid: (self._load(hid),
+                                 self._state[hid] == "suspect",
                                  (hid, key) not in self._warm
                                  if self.policy.prefer_prewarmed else False,
                                  self.hosts.index(self._by_id[hid])))
@@ -288,10 +400,15 @@ class ClusterRouter:
     def imbalance(self) -> float:
         """Cost-weighted served-work ratio max/min across hosts (1.0 =
         perfectly balanced; hosts that served nothing count as the
-        smallest share). The cluster bench's balance gate."""
+        smallest share). Dead hosts are excluded — a mid-run host death
+        is a fault, not a balance failure. The cluster bench's balance
+        gate."""
         with self.lock:
             shares = [self._served_cost[h.host_id]
-                      / self._by_id[h.host_id].weight for h in self.hosts]
+                      / self._by_id[h.host_id].weight for h in self.hosts
+                      if self._state[h.host_id] != "dead"]
+            if not shares:
+                return 1.0
             hi = max(shares)
             if hi <= 0.0:
                 return 1.0
@@ -310,6 +427,7 @@ class ClusterRouter:
                 "replicas": {str(k): list(v)
                              for k, v in self._replicas.items()},
                 "warm_programs": len(self._warm),
+                "states": dict(self._state),
             }
 
 

@@ -30,7 +30,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "prometheus_text", "merge_snapshots", "hist_quantile",
-    "LATENCY_BUCKETS", "DRIFT_BUCKETS",
+    "LATENCY_BUCKETS", "DRIFT_BUCKETS", "RECOVERY_BUCKETS", "HOST_STATES",
 ]
 
 # Request latencies span ~100us (cached singleton) to seconds (cold batch).
@@ -43,6 +43,15 @@ LATENCY_BUCKETS: Tuple[float, ...] = (
 DRIFT_BUCKETS: Tuple[float, ...] = (
     0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0,
 )
+# Failover recovery (failure detected -> re-admitted request completed,
+# DESIGN.md §13): dominated by the surviving host's batch+compute time,
+# so the grid extends past LATENCY_BUCKETS into the tens of seconds a
+# cold re-dispatch under load can take.
+RECOVERY_BUCKETS: Tuple[float, ...] = (
+    0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+# amp_host_state gauge encoding (the router's host state machine)
+HOST_STATES: Tuple[str, ...] = ("healthy", "suspect", "dead", "draining")
 
 _LabelKey = Tuple[str, ...]
 

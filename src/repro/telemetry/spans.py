@@ -9,6 +9,8 @@ Span vocabulary along the request path:
 
     admit        submit() entry -> request prepared/admitted
     route        cluster frontend routing decision (cluster only)
+    retry        failure detected -> re-admission on a surviving host
+                 (failover/hedge only; precedes a fresh route span)
     batch_wait   admitted -> the request's bucket batch dispatched
     operands     operand build / device upload (cache hit makes it short)
     compute      dispatch -> device results materialized

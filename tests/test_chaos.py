@@ -1,0 +1,556 @@
+"""Fault-tolerance tests (DESIGN.md §13): host state machine, typed
+error frames, socket timeouts, frame/codec fuzz, failover with
+bit-identical replay (the chaos gate), hedging, and the shed ladder."""
+import dataclasses
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.denoisers import BernoulliGauss
+from repro.serving import (BackendError, BackendUnavailable, BucketPolicy,
+                           ChaosBackend, ChaosProxy, ClusterRouter,
+                           ClusterService, CodecError, FaultPlan, FaultSpec,
+                           FrameError, HostInfo, Overloaded,
+                           RemoteRequestError, RouterPolicy, ShedLadder,
+                           SolveRequest, SolveService, decode_request,
+                           encode_request, routing_key)
+from repro.serving.frontend import (BackendServer, LocalBackend, TcpBackend,
+                                    _unpack_results)
+from repro.serving.wire import recv_frame, send_frame
+
+POL = BucketPolicy(max_batch=8, n_quantum=64, mp_quantum=8)
+
+
+def make_reqs(n_req: int, n: int = 128, m: int = 64, p: int = 4,
+              t: int = 8, seed: int = 0):
+    import jax
+
+    from repro.core.amp import sample_problem
+    from repro.core.state_evolution import CSProblem
+
+    prior = BernoulliGauss(eps=0.1)
+    prob = CSProblem(n=n, m=m, prior=prior, snr_db=20.0)
+    deltas = np.full(t, 0.05, np.float32)
+    deltas[0] = np.inf
+    reqs = []
+    for i in range(n_req):
+        _, a, y = sample_problem(jax.random.PRNGKey(seed + i), n, m, prior,
+                                 prob.sigma_e2)
+        reqs.append(SolveRequest(y=y, a=a, prior=prior, n_proc=p,
+                                 n_iter=t, policy="fixed", deltas=deltas))
+    return prior, reqs
+
+
+def local_host(hid: str) -> LocalBackend:
+    return LocalBackend(hid, SolveService(policy=POL,
+                                          rate_accounting=False))
+
+
+# ---------------------------------------------------------------------------
+# host state machine (router units — no jax, no sockets)
+# ---------------------------------------------------------------------------
+
+def three_host_router(**kw):
+    pol = RouterPolicy(**kw)
+    return ClusterRouter(
+        [HostInfo("a"), HostInfo("b"), HostInfo("c")], pol), pol
+
+
+def any_key():
+    _, reqs = make_reqs(1)
+    return routing_key(reqs[0], POL)
+
+
+def test_router_state_machine_transitions():
+    r, _ = three_host_router()
+    assert r.host_states() == {"a": "healthy", "b": "healthy",
+                               "c": "healthy"}
+    r.mark_suspect("a")
+    assert r.host_state("a") == "suspect"
+    r.mark_healthy("a")
+    assert r.host_state("a") == "healthy"
+    r.mark_dead("a")
+    assert r.host_state("a") == "dead"
+    r.mark_suspect("a")                      # dead doesn't regress
+    assert r.host_state("a") == "dead"
+    r.mark_healthy("a")                      # explicit revival works
+    assert r.host_state("a") == "healthy"
+    r.drain("b")
+    assert r.host_state("b") == "draining"
+
+
+def test_router_dead_host_evicted_and_replicas_refill():
+    r, _ = three_host_router(min_replicas=2)
+    key = any_key()
+    r.route(key, 1.0)
+    assert set(r.replicas(key)) == {"a", "b"}
+    r.mark_dead("a")
+    assert "a" not in r.replicas(key)        # evicted from the set
+    assert r.stats()["outstanding"]["a"] == 0.0
+    picks = {r.route(key, 1.0) for _ in range(4)}
+    assert "a" not in picks                  # never routed to
+    assert "c" in r.replicas(key)            # refilled from survivors
+
+
+def test_router_all_dead_sheds():
+    r, _ = three_host_router()
+    key = any_key()
+    for hid in ("a", "b", "c"):
+        r.mark_dead(hid)
+    with pytest.raises(Overloaded):
+        r.route(key, 1.0)
+
+
+def test_router_suspect_loses_ties_but_still_routes():
+    r, _ = three_host_router(min_replicas=3)
+    key = any_key()
+    r.mark_suspect("a")
+    assert r.route(key, 1.0) in ("b", "c")   # tie goes to the healthy
+    r.mark_dead("b")
+    r.mark_dead("c")
+    assert r.route(key, 1.0) == "a"          # suspect is still capacity
+
+
+def test_router_avoid_falls_back_to_avoided_live_host():
+    r, _ = three_host_router(min_replicas=1)
+    key = any_key()
+    first = r.route(key, 1.0)
+    # every live host avoided: routing there anyway beats shedding
+    assert r.route(key, 1.0, avoid=frozenset({"a", "b", "c"})) in (
+        "a", "b", "c")
+    assert first in ("a", "b", "c")
+
+
+# ---------------------------------------------------------------------------
+# fault plan determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_and_validated():
+    assert FaultPlan.random(7) == FaultPlan.random(7)
+    assert FaultPlan.random(7) != FaultPlan.random(8)
+    plan = FaultPlan.kill_at(3, ops=("submit",))
+    assert plan.fault_for("submit", 3).kind == "kill"
+    assert plan.fault_for("poll", 3) is None
+    assert plan.fault_for("submit", 2) is None
+    with pytest.raises(ValueError):
+        FaultSpec("melt", 1)
+    with pytest.raises(ValueError):
+        FaultSpec("kill", 0)
+
+
+def test_chaos_backend_kill_error_freeze():
+    inner = local_host("h")
+    plan = FaultPlan(faults=(FaultSpec("error", 1),
+                             FaultSpec("freeze", 2, duration_s=0.0),
+                             FaultSpec("kill", 3)))
+    naps = []
+    cb = ChaosBackend(inner, plan, sleep=naps.append)
+    assert cb.host_id == "h" and cb.n_devices >= 1
+    with pytest.raises(RemoteRequestError):
+        cb.ping()                            # call 1: transient error
+    with pytest.raises(BackendUnavailable):
+        cb.ping()                            # call 2: freeze -> timeout
+    with pytest.raises(BackendUnavailable):
+        cb.ping()                            # call 3: killed
+    with pytest.raises(BackendUnavailable):
+        cb.poll()                            # dead stays dead, any op
+    cb.revive()
+    assert cb.ping() is True
+    assert [k for _, _, k in cb.faults_fired] == ["error", "freeze", "kill"]
+
+
+# ---------------------------------------------------------------------------
+# frame + codec fuzz (satellite: corrupt bytes must raise typed errors,
+# never hang or half-deserialize)
+# ---------------------------------------------------------------------------
+
+def _frame_roundtrip(payload: bytes) -> bytes:
+    a, b = socket.socketpair()
+    try:
+        send_frame(a, b"R", payload)
+        op, body = recv_frame(b)
+        assert op == b"R"
+        return body
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_roundtrip_and_limits():
+    assert _frame_roundtrip(b"") == b""
+    assert _frame_roundtrip(b"x" * 70000) == b"x" * 70000   # > one recv
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("<I", 0))            # opless empty frame
+        with pytest.raises(FrameError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("<I", (1 << 30) + 1))  # absurd length claim
+        with pytest.raises(FrameError):
+            recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_truncated_stream_raises_connection_error():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(struct.pack("<I", 100) + b"S" + b"only-ten")
+        a.close()                                  # die mid-frame
+        with pytest.raises(ConnectionError):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_codec_fuzz_truncate_corrupt_oversize(data):
+    """Any mutation of a valid request frame either decodes cleanly or
+    raises ``CodecError`` — nothing else escapes, nothing hangs."""
+    rng = np.random.default_rng(0)
+    req = SolveRequest(y=rng.standard_normal(8).astype(np.float32),
+                       a=rng.standard_normal((8, 16)).astype(np.float32),
+                       prior=BernoulliGauss(eps=0.1), n_proc=2, n_iter=3)
+    buf = bytearray(encode_request(req))
+    mode = data.draw(st.sampled_from(["truncate", "flip", "grow"]))
+    if mode == "truncate":
+        buf = buf[:data.draw(st.integers(0, len(buf) - 1))]
+    elif mode == "flip":
+        i = data.draw(st.integers(0, min(400, len(buf) - 1)))
+        buf[i] ^= data.draw(st.integers(1, 255))
+    else:
+        buf += bytes(data.draw(st.integers(1, 64)))
+    try:
+        decode_request(bytes(buf))
+    except CodecError:
+        pass
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.binary(max_size=64), st.integers(0, 2 ** 32 - 1))
+def test_result_list_fuzz(tail, count):
+    """Nested result-list bodies with lying counts/lengths raise
+    ``CodecError`` (the TcpBackend reply path), never struct/index
+    crashes."""
+    body = struct.pack("<I", count) + tail
+    try:
+        _unpack_results(body)
+    except CodecError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# TCP: dead peers, timeouts, typed remote errors (satellites 1 + 2)
+# ---------------------------------------------------------------------------
+
+def test_tcp_connect_refused_is_backend_unavailable():
+    s = socket.create_server(("127.0.0.1", 0))
+    addr = s.getsockname()
+    s.close()                                     # nobody listening now
+    t0 = time.monotonic()
+    with pytest.raises(BackendUnavailable):
+        TcpBackend(addr, "ghost", connect_timeout_s=2.0)
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_tcp_dead_peer_times_out_within_budget():
+    """A peer that accepts and then stalls mid-reply must fail the call
+    within the configured recv timeout — not hang (the ISSUE 10
+    acceptance criterion on dead peers)."""
+    server = BackendServer(local_host("h"))
+    server.start()
+    proxy = ChaosProxy((server.host, server.port)).start()
+    try:
+        tcp = TcpBackend(proxy.address, "h", connect_timeout_s=2.0,
+                         recv_timeout_s=0.5)
+        assert tcp.ping()                         # healthy through proxy
+        proxy.trip("stall")
+        t0 = time.monotonic()
+        with pytest.raises(BackendUnavailable, match="timed out"):
+            tcp.ping()
+        assert time.monotonic() - t0 < 3.0        # ~recv_timeout, not inf
+        tcp.close()
+    finally:
+        proxy.stop()
+        server.stop()
+
+
+def test_tcp_severed_connection_is_backend_unavailable():
+    server = BackendServer(local_host("h"))
+    server.start()
+    proxy = ChaosProxy((server.host, server.port)).start()
+    try:
+        tcp = TcpBackend(proxy.address, "h", recv_timeout_s=2.0)
+        assert tcp.ping()
+        proxy.trip("sever")
+        with pytest.raises(BackendUnavailable):
+            tcp.ping()
+        tcp.close()
+    finally:
+        proxy.stop()
+        server.stop()
+
+
+def test_tcp_remote_error_carries_traceback_and_connection_survives():
+    """A server-side per-request failure comes back as a typed
+    ``RemoteRequestError`` with the remote traceback attached, and the
+    *same connection* keeps serving — one bad request must not look
+    like a dead host."""
+    server = BackendServer(local_host("h"))
+    server.start()
+    try:
+        from repro.serving import PrewarmSpec
+        tcp = TcpBackend((server.host, server.port), "h")
+        bad = PrewarmSpec(n=13, m=7, n_proc=4, n_iter=8, policy="fixed",
+                          prior=BernoulliGauss(eps=0.1))
+        with pytest.raises(RemoteRequestError) as ei:
+            tcp.prewarm([bad])                    # unbucketable shapes
+        assert ei.value.host_id == "h"
+        assert "Traceback" in ei.value.remote_traceback
+        assert isinstance(ei.value, BackendError)
+        assert not isinstance(ei.value, BackendUnavailable)
+        assert tcp.ping()                         # connection still live
+        _, reqs = make_reqs(1, seed=77)
+        assert tcp.submit(reqs[0]) == 0           # and still serves
+        assert len(tcp.flush()) == 1
+        tcp.shutdown_server()
+    finally:
+        server.stop()
+
+
+def test_tcp_kill_server_op_stops_listener():
+    server = BackendServer(local_host("h"))
+    server.start()
+    try:
+        tcp = TcpBackend((server.host, server.port), "h")
+        tcp.kill_server()                         # chaos X op: abrupt death
+        deadline = time.monotonic() + 5.0
+        while server._thread.is_alive() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert not server._thread.is_alive()
+        with pytest.raises(BackendUnavailable):
+            TcpBackend((server.host, server.port), "h",
+                       connect_timeout_s=1.0)
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# the chaos gate: kill one of two hosts mid-stream (ISSUE 10 acceptance)
+# ---------------------------------------------------------------------------
+
+def chaos_cluster(plan: FaultPlan, **rp_kw):
+    rp = dict(min_replicas=2, suspect_after=1, dead_after=2,
+              retry_limit=2, retry_backoff_s=0.0)
+    rp.update(rp_kw)
+    return ClusterService(
+        backends=[local_host("host0"),
+                  ChaosBackend(local_host("host1"), plan)],
+        policy=POL, router_policy=RouterPolicy(**rp))
+
+
+def test_chaos_kill_one_host_zero_loss_bit_identical():
+    """Kill host1 mid-stream with requests stranded in its open batch:
+    every admitted request completes (zero lost), the replayed results
+    are bit-identical to a single-host run of the same stream, the dead
+    host is evicted, and recovery latency is recorded."""
+    prior, reqs = make_reqs(16)
+    ref = SolveService(policy=POL, rate_accounting=False)
+    base = ref.solve(reqs)
+
+    # host1's calls: ping is never driven here, so calls are submits —
+    # kill on its 5th call leaves 4 requests stranded in an open batch
+    cl = chaos_cluster(FaultPlan.kill_at(5))
+    got = sorted(cl.solve(reqs), key=lambda r: r.request_id)
+
+    assert len(got) == len(reqs)                  # zero lost
+    st_ = cl.stats()
+    assert st_["lost"] == 0
+    assert st_["failovers"] == 1
+    assert st_["retries"] > 0
+    assert st_["host_states"]["host1"] == "dead"
+    assert st_["recovery"] != {} and st_["recovery"]["count"] >= 1
+    assert st_["recovery"]["p95_ms"] > 0.0
+    # bit-identical replay: same request template -> same padded bucket
+    # program -> same bits, regardless of which host ran it
+    for c, b in zip(got, base):
+        assert c.request_id == b.request_id
+        np.testing.assert_array_equal(np.asarray(c.x), np.asarray(b.x))
+        np.testing.assert_array_equal(np.asarray(c.sigma2_hat),
+                                      np.asarray(b.sigma2_hat))
+    # the fault-tolerance metrics surface in the registry snapshot
+    names = {m["name"] for m in cl.metrics()["metrics"]}
+    assert {"amp_failover_total", "amp_retry_total",
+            "amp_lost_requests_total", "amp_host_state",
+            "amp_recovery_seconds"} <= names
+    cl.close()
+
+
+def test_chaos_kill_during_flush_recovers():
+    """Death during the flush (dispatch) phase, not submit: stranded
+    whole batches replay on the survivor and the flush still returns
+    everything."""
+    prior, reqs = make_reqs(16)
+    # host1 call pattern in solve(): 8 submits land (calls 1-8), then
+    # flush rounds start — kill on call 9 strands a full batch of 8
+    cl = chaos_cluster(FaultPlan.kill_at(9), dead_after=1)
+    got = cl.solve(reqs)
+    assert len(got) == len(reqs)
+    st_ = cl.stats()
+    assert st_["lost"] == 0 and st_["failovers"] == 1
+    assert st_["host_states"]["host1"] == "dead"
+    cl.close()
+
+
+def test_chaos_all_hosts_dead_raises_not_hangs():
+    _, reqs = make_reqs(4)
+    cl = ClusterService(
+        backends=[ChaosBackend(local_host("host0"), FaultPlan.kill_at(1)),
+                  ChaosBackend(local_host("host1"), FaultPlan.kill_at(1))],
+        policy=POL,
+        router_policy=RouterPolicy(min_replicas=2, suspect_after=1,
+                                   dead_after=1, retry_limit=1,
+                                   retry_backoff_s=0.0))
+    with pytest.raises((BackendUnavailable, Overloaded)):
+        cl.solve(reqs)
+    assert set(cl.stats()["host_states"].values()) == {"dead"}
+    cl.close()
+
+
+def test_check_health_walks_suspect_to_dead_without_traffic():
+    """The heartbeat alone (no requests in flight) detects a dead host
+    within ``dead_after`` probe rounds, and a healthy probe heals a
+    suspect."""
+    cl = chaos_cluster(FaultPlan.kill_at(1, ops=("ping",)),
+                       suspect_after=1, dead_after=3)
+    assert cl.check_health()["host1"] == "suspect"      # probe 1 fails
+    assert cl.check_health()["host1"] == "suspect"      # probe 2 fails
+    assert cl.check_health()["host1"] == "dead"         # probe 3: evicted
+    assert cl.check_health()["host0"] == "healthy"
+    assert cl.stats()["failovers"] == 1
+    cl.close()
+
+
+def test_check_health_revives_dead_host():
+    cb = ChaosBackend(local_host("host1"), FaultPlan.kill_at(1))
+    cl = ClusterService(
+        backends=[local_host("host0"), cb], policy=POL,
+        router_policy=RouterPolicy(min_replicas=2, suspect_after=1,
+                                   dead_after=1, retry_backoff_s=0.0))
+    assert cl.check_health()["host1"] == "dead"
+    cb.revive()
+    assert cl.check_health()["host1"] == "healthy"
+    _, reqs = make_reqs(2, seed=30)
+    assert len(cl.solve(reqs)) == 2               # takes traffic again
+    cl.close()
+
+
+def test_hedge_duplicates_tail_and_dedupes():
+    """With hedging armed, an in-flight request stuck past the p99
+    budget is duplicated to the other host; exactly one result comes
+    back and the loser is absorbed as a zombie (cost returned, nothing
+    delivered twice)."""
+    _, reqs = make_reqs(1, seed=9)
+    cl = ClusterService(
+        backends=[local_host("host0"), local_host("host1")], policy=POL,
+        router_policy=RouterPolicy(min_replicas=2, hedge_p99_mult=2.0))
+    key = routing_key(reqs[0], POL)
+    from collections import deque
+    cl._lat[key] = deque([0.001] * 8)             # latency history: p99≈1ms
+    gid = cl.submit(reqs[0])
+    (hk, fl), = cl._inflight.items()
+    fl.t_submit -= 10.0                           # stuck way past budget
+    cl.poll()                                     # hedge fires here
+    assert cl.hedges == 1
+    assert len(cl._inflight) == 2                 # original + duplicate
+    assert {h for h, _ in cl._inflight} == {"host0", "host1"}
+    got = cl.flush()
+    assert [r.request_id for r in got] == [gid]   # exactly one delivery
+    assert cl._inflight == {} and cl._zombies == {}
+    assert cl.stats()["router"]["outstanding"] == {"host0": 0.0,
+                                                   "host1": 0.0}
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation (tentpole part 3)
+# ---------------------------------------------------------------------------
+
+def test_shed_ladder_escalates_and_relaxes():
+    t = [0.0]
+    lad = ShedLadder(window_s=1.0, up_after=3, clock=lambda: t[0])
+    for _ in range(3):
+        lad.record_shed()
+    assert lad.level == 1
+    for _ in range(3):
+        lad.record_shed()
+    assert lad.level == 2
+    t[0] = 0.5
+    assert lad.relax() == 2                       # calm window not over
+    t[0] = 1.6
+    assert lad.relax() == 1                       # one step per window
+    assert lad.relax() == 1
+    t[0] = 3.0
+    assert lad.relax() == 0
+    # sheds outside the window never escalate
+    for i in range(10):
+        t[0] = 10.0 + 2.0 * i
+        lad.record_shed()
+    assert lad.level == 0
+
+
+def test_shed_ladder_level1_strips_extras_level2_quotes_mse():
+    _, reqs = make_reqs(1)
+    req = dataclasses.replace(reqs[0], measure_wire=False)
+    lad = ShedLadder()
+    lad.level = 1
+    r1, q1 = lad.apply(dataclasses.replace(req, measure_wire=True))
+    assert r1.measure_wire is False and q1["level"] == 1
+    same, qn = lad.apply(req)                     # nothing to strip
+    assert qn is None and same is req
+    lad.level = 2
+    r2, q2 = lad.apply(req)
+    assert r2.n_iter == (req.n_iter + 1) // 2
+    assert len(r2.deltas) == r2.n_iter            # schedule cut with it
+    # the quote prices the cut via SE: fewer iterations, no lower MSE
+    assert q2["mse_degraded"] >= q2["mse_full"] > 0.0
+    assert q2["n_iter_full"] == req.n_iter
+
+
+def test_shed_ladder_degraded_requests_still_solve():
+    """End to end at ladder level 2: overload escalation degrades later
+    requests (counted + quoted) and they still complete."""
+    _, reqs = make_reqs(6)
+    key = routing_key(reqs[0], POL)
+    from repro.serving import shape_cost
+    cl = ClusterService(
+        n_hosts=1, policy=POL, rate_accounting=False,
+        router_policy=RouterPolicy(min_replicas=1, shed_ladder=True,
+                                   max_outstanding=2.5 * shape_cost(key)))
+    cl._ladder.level = 2                          # as if storms escalated it
+    done = 0
+    for r in reqs[:2]:
+        try:
+            cl.submit(r)
+            done += 1
+        except Overloaded:
+            pass
+    got = cl.flush()
+    assert len(got) == done == 2
+    st_ = cl.stats()
+    assert st_["degraded"] == 2
+    assert cl.shed_quotes[0]["mse_degraded"] >= cl.shed_quotes[0]["mse_full"]
+    assert st_["shed_ladder_level"] == 2
+    assert {r.request_id for r in got} == set(range(done))
+    cl.close()
